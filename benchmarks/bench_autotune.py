@@ -1,0 +1,32 @@
+"""Paper §V-A2 — autotuning cost: configurations searched per second
+(the paper searches ~1000 'outer loop' configs in 2s–22min and is 2.3–500×
+faster than TVM because the search stops at the TPP boundary)."""
+import time
+
+import jax.numpy as jnp
+
+from repro.core import LoopSpec, TensorMap, autotune
+
+
+def run():
+    loops = [LoopSpec(0, 32, 1, name="K"),
+             LoopSpec(0, 32, 1, name="M"),
+             LoopSpec(0, 32, 1, name="N")]
+    in_maps = [TensorMap(("b", "a"), (128, 128), layout="flat"),
+               TensorMap(("a", "c"), (128, 128), layout="flat")]
+    out_map = TensorMap(("b", "c"), (128, 128), layout="flat")
+    t0 = time.perf_counter()
+    results = autotune.autotune(
+        loops, in_maps, out_map, dtype=jnp.bfloat16,
+        flops_per_body=2 * 128 ** 3, tile_mnk=(128, 128, 128),
+        reduction_letters=("a",), parallel_letters=("b", "c"),
+        max_candidates=1000)
+    dt = time.perf_counter() - t0
+    return [("autotune_1000_configs", dt * 1e6 / len(results),
+             f"configs={len(results)};total_s={dt:.2f};"
+             f"configs_per_s={len(results)/dt:.0f}")]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

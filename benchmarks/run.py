@@ -1,0 +1,33 @@
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §7).
+Prints ``name,us_per_call,derived`` CSV rows."""
+import sys
+import traceback
+
+MODULES = [
+    "bench_gemm",        # Figs. 2/4/5
+    "bench_mlp",         # Fig. 3
+    "bench_perfmodel",   # Fig. 6
+    "bench_conv",        # Fig. 7 / Table II
+    "bench_spmm",        # Fig. 8
+    "bench_e2e",         # Figs. 9/10/11, Table I
+    "bench_autotune",    # §V-A2 tuning cost
+]
+
+
+def main() -> None:
+    failures = 0
+    print("name,us_per_call,derived")
+    for name in MODULES:
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            for row in mod.run():
+                print(",".join(str(x) for x in row), flush=True)
+        except Exception:
+            traceback.print_exc()
+            failures += 1
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+# One <arch>.py per assigned architecture (exact published configs) plus the
+# paper's own end-to-end workloads (BERT / GPT-J / Llama2).  --arch <id>
+# resolves through repro.configs.base.get_config.
+from repro.configs.base import ARCH_IDS, ModelConfig, get_config, list_archs
+
+__all__ = ["ARCH_IDS", "ModelConfig", "get_config", "list_archs"]

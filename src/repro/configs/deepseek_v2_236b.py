@@ -1,0 +1,17 @@
+"""deepseek-v2-236b — MLA + 2 shared / 160 routed top-6 MoE [arXiv:2405.04434; hf]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    num_layers=60,
+    d_model=5120,
+    num_heads=128, num_kv_heads=128, head_dim=128,
+    d_ff=12288,                      # dense FFN of the first layer
+    vocab_size=102400,
+    use_mla=True, kv_lora_rank=512, q_lora_rank=1536, rope_head_dim=64,
+    num_experts=160, experts_per_tok=6, num_shared_experts=2,
+    moe_d_ff=1536, first_k_dense=1,
+    norm="rmsnorm",
+    source="arXiv:2405.04434",
+)

@@ -1,0 +1,19 @@
+"""jamba-1.5-large-398b — hybrid attn:mamba 1:7 interleave, MoE 16e top-2
+every 2nd layer [arXiv:2403.19887; hf]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    num_layers=72,
+    d_model=8192,
+    num_heads=64, num_kv_heads=8, head_dim=128,
+    d_ff=24576,
+    vocab_size=65536,
+    layer_pattern=("mamba", "mamba", "mamba", "mamba",
+                   "attn", "mamba", "mamba", "mamba"),
+    num_experts=16, experts_per_tok=2, moe_d_ff=24576, moe_period=2,
+    ssm_state=16, ssm_conv=4, ssm_expand=2,
+    norm="rmsnorm",
+    source="arXiv:2403.19887",
+)

@@ -1,0 +1,17 @@
+"""llava-next-34b — VLM; transformer backbone only, anyres patch embeddings
+stubbed per the assignment [hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-34b",
+    family="vlm",
+    num_layers=60,
+    d_model=7168,
+    num_heads=56, num_kv_heads=8, head_dim=128,
+    d_ff=20480,
+    vocab_size=64000,
+    frontend="vision_stub", num_patches=2880,   # anyres 5-tile grid × 576
+    rope_theta=5e6,
+    norm="rmsnorm",
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+)

@@ -1,0 +1,19 @@
+"""whisper-small — enc-dec audio transformer; conv frontend stubbed per the
+assignment (input_specs() provides precomputed frame embeddings)
+[arXiv:2212.04356; unverified]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="encdec",
+    num_layers=12,                   # decoder layers
+    d_model=768,
+    num_heads=12, num_kv_heads=12, head_dim=64,
+    d_ff=3072,
+    vocab_size=51865,
+    is_encdec=True, encoder_layers=12, encoder_seq=1500,
+    frontend="audio_stub",
+    norm="layernorm", gated_mlp=False, mlp_activation="gelu",
+    tie_embeddings=True,
+    source="arXiv:2212.04356",
+)

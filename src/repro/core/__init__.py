@@ -1,0 +1,15 @@
+# The paper's primary contribution: PARLOOPER (declarative outer loops with a
+# single loop_spec_string instantiation knob) + the TPP 2D-tile operator set,
+# re-founded on TPU (Pallas grids / BlockSpecs / mesh axes) — see DESIGN.md §2.
+from repro.core.loops import LegalityError, LoopSpec, ThreadedLoop
+from repro.core.parser import ParsedSpec, SpecSyntaxError, parse_spec_string
+from repro.core.pallas_lowering import PallasPlan, TensorMap, make_pallas_fn, plan_pallas
+from repro.core.executor import run_nest
+from repro.core import tpp, perf_model, autotune
+
+__all__ = [
+    "LegalityError", "LoopSpec", "ThreadedLoop",
+    "ParsedSpec", "SpecSyntaxError", "parse_spec_string",
+    "PallasPlan", "TensorMap", "make_pallas_fn", "plan_pallas",
+    "run_nest", "tpp", "perf_model", "autotune",
+]

@@ -1,0 +1,225 @@
+"""Auto-tuning of loop_spec_strings (paper §II-D).
+
+Candidate generation follows the paper's constraint grammar exactly:
+
+  1. per-loop blocking-level caps (multi-level memory hierarchy);
+  2. blocking factors = prefix products of the prime factorization of the
+     loop trip count, times the base step;
+  3. only race-free loops are parallelizable (any blocked occurrence);
+  4. all permutations of the resulting occurrence multiset.
+
+Candidates are scored with the analytical perf model (``core.perf_model``) —
+this is the "performance modeling tool" path (Fig. 1, Box B3), with optional
+re-ranking of the top-k by a user measurement function (Box B2, offline
+benchmarking).  Plans are cached keyed on ``(spec, loop signature)`` exactly
+like the paper's JIT cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+import random
+from typing import Callable, Optional, Sequence
+
+from repro.core.loops import LegalityError, LoopSpec, ThreadedLoop
+from repro.core.pallas_lowering import TensorMap
+from repro.core import perf_model
+
+__all__ = [
+    "prime_factors", "prefix_product_blockings", "generate_candidates",
+    "Candidate", "TuneResult", "autotune", "cached_threaded_loop",
+]
+
+
+def prime_factors(n: int) -> list[int]:
+    out, d = [], 2
+    while d * d <= n:
+        while n % d == 0:
+            out.append(d)
+            n //= d
+        d += 1
+    if n > 1:
+        out.append(n)
+    return out
+
+
+def prefix_product_blockings(trip: int, step: int) -> list[int]:
+    """Blocking factors = step × prefix products of the prime factorization of
+    the trip count (paper §II-D constraint 2).  Excludes the trivial full-trip
+    prefix (no blocking)."""
+    pf = prime_factors(trip)
+    out, acc = [], 1
+    for p in pf[:-1]:
+        acc *= p
+        out.append(step * acc)
+    return sorted(set(out))
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    spec_string: str
+    loops: tuple[LoopSpec, ...]
+
+
+@dataclasses.dataclass
+class TuneResult:
+    candidate: Candidate
+    report: perf_model.PerfReport
+    measured_s: Optional[float] = None
+
+    @property
+    def score(self) -> float:
+        return self.report.gflops
+
+
+def _blocking_choices(loop: LoopSpec, max_levels: int) -> list[tuple[int, ...]]:
+    """All (outer→inner) block-step tuples with 0..max_levels-1 blockings."""
+    trip = loop.extent // loop.step
+    opts = prefix_product_blockings(trip, loop.step)
+    choices: list[tuple[int, ...]] = [()]
+    for k in range(1, max_levels):
+        for combo in itertools.combinations(opts, k):
+            choices.append(tuple(sorted(combo, reverse=True)))  # outer→inner
+    return choices
+
+
+def generate_candidates(
+    loops: Sequence[LoopSpec],
+    *,
+    max_blockings: Sequence[int],
+    parallel_letters: Sequence[str] = (),
+    mesh_decomp: Sequence[tuple[str, str, int]] = (),  # (letter, axis, ways)
+    max_candidates: int = 2000,
+    seed: int = 0,
+) -> list[Candidate]:
+    """Enumerate spec strings under the paper's constraints 1–4."""
+    letters = [chr(ord("a") + i) for i in range(len(loops))]
+    rng = random.Random(seed)
+
+    per_loop: list[list[tuple[int, tuple[int, ...]]]] = []
+    for loop, cap in zip(loops, max_blockings):
+        entries = []
+        for bs in _blocking_choices(loop, cap):
+            entries.append((len(bs) + 1, bs))  # (occurrence count, block steps)
+        per_loop.append(entries)
+
+    candidates: list[Candidate] = []
+    seen: set[str] = set()
+    combos = list(itertools.product(*per_loop))
+    rng.shuffle(combos)
+    for combo in combos:
+        new_loops = tuple(
+            dataclasses.replace(loop, block_steps=bs)
+            for loop, (_, bs) in zip(loops, combo)
+        )
+        multiset = []
+        for letter, (occ, _) in zip(letters, combo):
+            multiset.extend([letter] * occ)
+        perms = set(itertools.permutations(multiset))
+        perms = sorted("".join(p) for p in perms)
+        rng.shuffle(perms)
+        for base in perms:
+            variants = [base]
+            # parallelize any single occurrence of each parallelizable letter
+            # (paper: "any of the blocked occurrences of the M/N loops")
+            par_variants = []
+            for pl1 in parallel_letters:
+                for i, ch in enumerate(base):
+                    if ch == pl1:
+                        par_variants.append(base[:i] + ch.upper() + base[i + 1:])
+            # pairwise (collapse-style) parallelization of two adjacent loops
+            for i in range(len(base) - 1):
+                a, b = base[i], base[i + 1]
+                if a in parallel_letters and b in parallel_letters and a != b:
+                    par_variants.append(
+                        base[:i] + a.upper() + b.upper() + base[i + 2:]
+                    )
+            variants.extend(par_variants)
+            for v in variants:
+                s = v
+                for (letter, axis, ways) in mesh_decomp:
+                    # decompose the outermost occurrence of `letter`
+                    i = s.lower().find(letter)
+                    if i >= 0:
+                        s = s[:i] + s[i].upper() + f"{{{axis}:{ways}}}" + s[i + 1:]
+                if s in seen:
+                    continue
+                seen.add(s)
+                try:
+                    ThreadedLoop(new_loops, s)  # legality check
+                except (LegalityError, ValueError):
+                    continue
+                candidates.append(Candidate(s, new_loops))
+                if len(candidates) >= max_candidates:
+                    return candidates
+    return candidates
+
+
+# --------------------------------------------------------------------------
+# Plan cache — the paper's "cache the JITed target loops" (§II-B).
+# --------------------------------------------------------------------------
+_PLAN_CACHE: dict = {}
+
+
+def cached_threaded_loop(loops: Sequence[LoopSpec], spec: str, **kw) -> ThreadedLoop:
+    key = (tuple(loops), spec, tuple(sorted(kw.items())))
+    tl = _PLAN_CACHE.get(key)
+    if tl is None:
+        tl = ThreadedLoop(loops, spec, **kw)
+        _PLAN_CACHE[key] = tl
+    return tl
+
+
+def autotune(
+    loops: Sequence[LoopSpec],
+    in_maps: Sequence[TensorMap],
+    out_map: TensorMap,
+    *,
+    dtype,
+    flops_per_body: float,
+    tile_mnk=None,
+    reduction_letters: Sequence[str] = (),
+    max_blockings: Optional[Sequence[int]] = None,
+    parallel_letters: Sequence[str] = (),
+    mesh_decomp: Sequence[tuple[str, str, int]] = (),
+    target: perf_model.TpuTarget = perf_model.TpuTarget(),
+    max_candidates: int = 500,
+    measure_fn: Optional[Callable[[Candidate], float]] = None,
+    measure_top_k: int = 5,
+    seed: int = 0,
+) -> list[TuneResult]:
+    """Score candidate schedules; return them best-first.
+
+    With ``measure_fn`` the top-k model-ranked candidates are re-ranked by
+    measurement (the paper's finding — Fig. 6 — is that the model's top-5
+    always contains the measured best)."""
+    if max_blockings is None:
+        max_blockings = [2] * len(loops)
+    cands = generate_candidates(
+        loops,
+        max_blockings=max_blockings,
+        parallel_letters=parallel_letters,
+        mesh_decomp=mesh_decomp,
+        max_candidates=max_candidates,
+        seed=seed,
+    )
+    results = []
+    for c in cands:
+        tl = cached_threaded_loop(
+            c.loops, c.spec_string, reduction_letters=reduction_letters
+        )
+        rep = perf_model.predict(
+            tl.nest, in_maps, out_map,
+            dtype=dtype, flops_per_body=flops_per_body, tile_mnk=tile_mnk,
+            target=target, reduction_letters=reduction_letters,
+        )
+        results.append(TuneResult(c, rep))
+    results.sort(key=lambda r: -r.score)
+    if measure_fn is not None:
+        top = results[:measure_top_k]
+        for r in top:
+            r.measured_s = measure_fn(r.candidate)
+        top.sort(key=lambda r: r.measured_s)
+        results = top + results[measure_top_k:]
+    return results

@@ -1,0 +1,101 @@
+"""Pure-JAX executor for PARLOOPER nests — the analogue of the paper's JITed
+C++ loop nests (Listings 2/3).
+
+``body(ind, carry) -> carry`` receives the *logical* indices (one per logical
+loop, alphabetical order — exactly the paper's ``int *ind`` contract) plus a
+functional carry (JAX has no mutable shared state; the carry plays the role of
+the output tensors the C++ body mutates).
+
+Three instantiation modes:
+  * ``unroll`` — trace-time Python loops: indices are Python ints, the body may
+    use static slicing.  Mirrors the paper's fully-JITed nests; best for small
+    trip counts (tests, microkernels).
+  * ``lax``    — nested ``lax.fori_loop``: O(1) trace size for huge nests;
+    indices are tracers, the body must use dynamic slicing.
+  * ``auto``   — ``unroll`` when the nest has ≤ ``unroll_limit`` body calls.
+
+Mesh levels (``{axis:N}`` decompositions) take their local iteration range from
+``jax.lax.axis_index(axis)`` — the executor must then run inside a
+``shard_map`` spanning those axes (see ``repro.core.pallas_lowering`` for the
+wrapper).  ``|`` barriers lower to ``optimization_barrier`` on the carry, which
+pins cross-level scheduling exactly where the paper pins its OpenMP barriers.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.loops import LoopNest
+
+__all__ = ["run_nest"]
+
+
+def run_nest(
+    nest: LoopNest,
+    body: Callable,
+    carry=None,
+    *,
+    init_func: Optional[Callable] = None,
+    term_func: Optional[Callable] = None,
+    mode: str = "auto",
+    unroll_limit: int = 512,
+):
+    """Execute ``body`` over the instantiated nest, threading ``carry``."""
+    if mode not in ("auto", "unroll", "lax"):
+        raise ValueError(f"unknown mode {mode!r}")
+    if mode == "auto":
+        mode = "unroll" if nest.total_body_calls() <= unroll_limit else "lax"
+
+    if init_func is not None:
+        carry = init_func(carry)
+
+    # Accumulated base offset per letter, updated as we descend the nest.
+    offsets0 = {letter: 0 for letter in nest.letters}
+
+    def leaf(offsets, carry):
+        ind = tuple(offsets[letter] + loop.start
+                    for letter, loop in zip(nest.letters, nest.loops))
+        return body(ind, carry)
+
+    def descend(level_idx: int, offsets, carry):
+        if level_idx == len(nest.levels):
+            return leaf(offsets, carry)
+        lvl = nest.levels[level_idx]
+        trip = lvl.trip_count
+
+        if lvl.mesh_axis is not None:
+            # Block-distribute this level's iterations over the mesh axis.
+            local_trip = trip // lvl.ways
+            base = lax.axis_index(lvl.mesh_axis) * (local_trip * lvl.step)
+            def mesh_body(i, c):
+                off = dict(offsets)
+                off[lvl.letter] = offsets[lvl.letter] + base + i * lvl.step
+                return descend(level_idx + 1, off, c)
+            carry = lax.fori_loop(0, local_trip, mesh_body, carry)
+            if lvl.barrier_after:
+                carry = lax.optimization_barrier(carry)
+            return carry
+
+        if mode == "unroll":
+            for i in range(trip):
+                off = dict(offsets)
+                off[lvl.letter] = offsets[lvl.letter] + i * lvl.step
+                carry = descend(level_idx + 1, off, carry)
+        else:
+            def loop_body(i, c):
+                off = dict(offsets)
+                off[lvl.letter] = offsets[lvl.letter] + i * lvl.step
+                return descend(level_idx + 1, off, c)
+            carry = lax.fori_loop(0, trip, loop_body, carry)
+        if lvl.barrier_after:
+            carry = lax.optimization_barrier(carry)
+        return carry
+
+    carry = descend(0, offsets0, carry)
+    if term_func is not None:
+        carry = term_func(carry)
+    return carry

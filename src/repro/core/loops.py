@@ -1,0 +1,276 @@
+"""PARLOOPER logical-loop declaration and nest planning (paper §II-B).
+
+The user declares *logical* loops (``LoopSpec``) and obtains a ``ThreadedLoop``
+whose exact instantiation — order, multi-level blocking, parallelization — is
+governed by a single runtime knob, the ``loop_spec_string``.
+
+On TPU the instantiation targets are (DESIGN.md §2):
+  * a pure-JAX executor (``repro.core.executor``) — the analogue of the paper's
+    JITed C++ loop nests;
+  * a Pallas ``grid``/``BlockSpec`` schedule (``repro.core.pallas_lowering``);
+  * named-mesh shardings for ``{axis:N}`` decompositions (PAR-MODE 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+from repro.core.parser import ParsedSpec, SpecSyntaxError, parse_spec_string
+
+__all__ = ["LoopSpec", "Level", "LoopNest", "ThreadedLoop", "LegalityError"]
+
+
+class LegalityError(ValueError):
+    """Raised when a spec string is syntactically fine but illegal for the
+    declared loops (imperfect blocking, unknown letter, racy parallelization)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopSpec:
+    """One logical loop: ``for i in range(start, bound, step)``.
+
+    ``block_steps`` is the optional list of *additional* step/blocking sizes
+    (outer→inner), used when the loop's letter appears more than once in the
+    spec string (paper Listing 1: ``{l1_k_step, l0_k_step}``).
+    """
+
+    start: int
+    bound: int
+    step: int = 1
+    block_steps: tuple[int, ...] = ()
+    name: str = ""
+
+    def __post_init__(self):
+        if self.step <= 0:
+            raise ValueError(f"loop step must be positive, got {self.step}")
+        if (self.bound - self.start) <= 0:
+            raise ValueError(f"empty loop [{self.start}, {self.bound})")
+        object.__setattr__(self, "block_steps", tuple(self.block_steps))
+
+    @property
+    def extent(self) -> int:
+        return self.bound - self.start
+
+    def steps_for(self, n_occurrences: int) -> tuple[int, ...]:
+        """Outer→inner step sizes when this loop appears ``n_occurrences`` times.
+
+        The innermost occurrence always advances by ``step``; outer occurrences
+        take their steps from ``block_steps`` in declaration order.
+        """
+        if n_occurrences == 1:
+            return (self.step,)
+        n_blockings = n_occurrences - 1
+        if n_blockings > len(self.block_steps):
+            raise LegalityError(
+                f"loop {self.name or '?'}: {n_occurrences} occurrences need "
+                f"{n_blockings} block steps, only {len(self.block_steps)} declared"
+            )
+        outer = tuple(self.block_steps[:n_blockings])
+        return outer + (self.step,)
+
+
+@dataclasses.dataclass(frozen=True)
+class Level:
+    """One level of the instantiated loop nest (outer→inner order)."""
+
+    letter: str
+    loop_index: int          # which LoopSpec
+    depth_in_loop: int       # 0 = outermost occurrence of this letter
+    span: int                # iteration extent covered at this level
+    step: int                # advance per iteration at this level
+    parallel: bool
+    mesh_axis: Optional[str]
+    ways: Optional[int]
+    barrier_after: bool
+    is_innermost_of_loop: bool
+
+    @property
+    def trip_count(self) -> int:
+        return self.span // self.step
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopNest:
+    """A fully planned instantiation of the logical loops."""
+
+    spec: ParsedSpec
+    loops: tuple[LoopSpec, ...]
+    levels: tuple[Level, ...]        # outer→inner
+    letters: tuple[str, ...]         # letter of each logical loop, 'a'..'z'
+
+    # ---- derived views -------------------------------------------------
+    @property
+    def grid_levels(self) -> tuple[Level, ...]:
+        """Levels that become grid/loop dimensions (mesh levels excluded)."""
+        return tuple(l for l in self.levels if l.mesh_axis is None)
+
+    @property
+    def mesh_levels(self) -> tuple[Level, ...]:
+        return tuple(l for l in self.levels if l.mesh_axis is not None)
+
+    @property
+    def mesh_axes(self) -> tuple[str, ...]:
+        return tuple(dict.fromkeys(l.mesh_axis for l in self.mesh_levels))
+
+    @property
+    def grid(self) -> tuple[int, ...]:
+        return tuple(l.trip_count for l in self.grid_levels)
+
+    def total_body_calls(self) -> int:
+        return math.prod(l.trip_count for l in self.levels)
+
+    def innermost_step(self, letter: str) -> int:
+        for l in reversed(self.levels):
+            if l.letter == letter:
+                return l.step
+        raise KeyError(letter)
+
+    def logical_index_exprs(self):
+        """For each logical loop, the list of (level_position_in_levels, step)
+        terms whose weighted sum yields the logical index value."""
+        terms: dict[str, list[tuple[int, int]]] = {l: [] for l in self.letters}
+        for pos, lvl in enumerate(self.levels):
+            terms[lvl.letter].append((pos, lvl.step))
+        return terms
+
+    def describe(self) -> str:
+        """Human-readable rendering of the generated nest (paper Listing 2/3)."""
+        out = []
+        indent = 0
+        for lvl in self.levels:
+            par = ""
+            if lvl.mesh_axis is not None:
+                par = f"  # sharded {lvl.ways}-ways over mesh axis '{lvl.mesh_axis}'"
+            elif lvl.parallel:
+                par = "  # parallel (TPU grid PARALLEL semantics)"
+            bar = "  # barrier after" if lvl.barrier_after else ""
+            out.append(
+                " " * indent
+                + f"for {lvl.letter}{lvl.depth_in_loop} in range(0, {lvl.span}, {lvl.step})"
+                + par
+                + bar
+            )
+            indent += 2
+        out.append(" " * indent + f"body(ind={list(self.letters)})")
+        return "\n".join(out)
+
+
+class ThreadedLoop:
+    """Paper's ``ThreadedLoop<N>``: declare N logical loops, instantiate via a
+    ``loop_spec_string``.  The instantiation is planned eagerly (and cached by
+    the callers keyed on the spec string — mirroring the paper's JIT cache).
+    """
+
+    def __init__(
+        self,
+        loop_specs: Sequence[LoopSpec],
+        spec_string: str,
+        *,
+        reduction_letters: Sequence[str] = (),
+        allow_races: bool = False,
+    ):
+        self.loops = tuple(loop_specs)
+        if len(self.loops) > 26:
+            raise LegalityError("at most 26 logical loops (letters a..z)")
+        self.letters = tuple(chr(ord("a") + i) for i in range(len(self.loops)))
+        self.spec = parse_spec_string(spec_string)
+        self.reduction_letters = tuple(reduction_letters)
+        self.allow_races = allow_races
+        self.nest = self._plan()
+
+    # ------------------------------------------------------------------
+    def _plan(self) -> LoopNest:
+        spec, loops = self.spec, self.loops
+        # Every letter used must correspond to a declared loop; every declared
+        # loop must appear at least once (paper requires full traversal).
+        for o in spec.occurrences:
+            if o.loop_index >= len(loops):
+                raise LegalityError(
+                    f"{spec.raw!r}: letter {o.letter!r} has no declared loop"
+                )
+        missing = [
+            l for i, l in enumerate(self.letters)
+            if not spec.occurrences_of(l)
+        ]
+        if missing:
+            raise LegalityError(f"{spec.raw!r}: loops {missing} never appear")
+
+        # Assign steps per occurrence of each letter (outer→inner).
+        occ_count = {l: len(spec.occurrences_of(l)) for l in self.letters}
+        steps: dict[str, tuple[int, ...]] = {}
+        for i, letter in enumerate(self.letters):
+            loop = loops[i]
+            s = loop.steps_for(occ_count[letter])
+            # Perfect-nesting legality (paper POC): each outer step must be a
+            # multiple of the next inner one, and the extent a multiple of the
+            # outermost step.
+            for outer, inner in zip(s, s[1:]):
+                if outer % inner != 0:
+                    raise LegalityError(
+                        f"loop {letter!r}: imperfect blocking {outer} % {inner} != 0"
+                    )
+            if loop.extent % s[0] != 0:
+                raise LegalityError(
+                    f"loop {letter!r}: extent {loop.extent} not divisible by "
+                    f"outermost step {s[0]}"
+                )
+            steps[letter] = s
+
+        # Build levels in occurrence (nesting) order.
+        depth_seen: dict[str, int] = {l: 0 for l in self.letters}
+        levels: list[Level] = []
+        for o in spec.occurrences:
+            letter = o.letter
+            d = depth_seen[letter]
+            depth_seen[letter] += 1
+            loop = loops[o.loop_index]
+            step = steps[letter][d]
+            span = loop.extent if d == 0 else steps[letter][d - 1]
+            if o.ways is not None:
+                trip = span // step
+                if trip % o.ways != 0:
+                    raise LegalityError(
+                        f"{spec.raw!r}: {letter!r} level {d} trip {trip} not "
+                        f"divisible by {o.ways} ways over axis {o.mesh_axis!r}"
+                    )
+            if o.parallel and letter in self.reduction_letters and not self.allow_races:
+                raise LegalityError(
+                    f"{spec.raw!r}: parallelizing reduction loop {letter!r} "
+                    "races on the output (pass allow_races=True with a "
+                    "reduction-combine plan, e.g. mesh split-K + psum)"
+                )
+            levels.append(
+                Level(
+                    letter=letter,
+                    loop_index=o.loop_index,
+                    depth_in_loop=d,
+                    span=span,
+                    step=step,
+                    parallel=o.parallel,
+                    mesh_axis=o.mesh_axis,
+                    ways=o.ways,
+                    barrier_after=o.barrier_after,
+                    is_innermost_of_loop=(d == occ_count[letter] - 1),
+                )
+            )
+        return LoopNest(
+            spec=spec, loops=loops, levels=tuple(levels), letters=self.letters
+        )
+
+    # Convenience passthroughs -----------------------------------------
+    @property
+    def grid(self) -> tuple[int, ...]:
+        return self.nest.grid
+
+    def describe(self) -> str:
+        return self.nest.describe()
+
+    def __call__(self, body, init_func=None, term_func=None, **kw):
+        """Paper's call syntax: run the nest over ``body(ind)`` — delegates to
+        the pure-JAX executor.  ``body`` threads a functional carry."""
+        from repro.core import executor
+
+        return executor.run_nest(
+            self.nest, body, init_func=init_func, term_func=term_func, **kw
+        )

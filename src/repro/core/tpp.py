@@ -1,0 +1,242 @@
+"""Tensor Processing Primitives (TPP) — the paper's platform-agnostic 2D-tile
+operator collection, in JAX.
+
+The TPP *specification* is platform-agnostic (paper §I); here the
+*implementation* is jnp on values, which is legal both
+
+  * inside Pallas kernel bodies (operating on VMEM-resident tiles — Mosaic
+    plays LIBXSMM's role and emits MXU/VPU code), and
+  * in plain JAX layers (XLA fuses them — the reference path).
+
+All primitives are **precision-aware per design** (paper §II-C): low-precision
+inputs accumulate/normalize in fp32 and cast on the way out, so the same layer
+code works unchanged for fp32/bf16 — mirroring "the same code works for all
+precisions without any change".
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "brgemm", "gemm", "zero", "identity",
+    "relu", "relu_grad", "gelu", "gelu_grad", "silu", "sigmoid",
+    "add", "sub", "mul", "scale", "bias_add", "residual_add",
+    "reduce_sum", "reduce_max",
+    "softmax", "layernorm", "rmsnorm", "dropout",
+    "transpose", "vnni_pack", "vnni_unpack", "cast",
+    "quantize_int8", "dequantize_int8",
+    "UNARY_TPPS", "BINARY_TPPS",
+]
+
+# --------------------------------------------------------------------------
+# Contractions
+# --------------------------------------------------------------------------
+
+def brgemm(a, b, c=None, *, beta: float = 1.0, accum_dtype=jnp.float32,
+           out_dtype=None):
+    """Batch-Reduce GEMM TPP:  C = beta*C + sum_i A_i @ B_i   (paper §II-A).
+
+    ``a``: (br, bm, bk)   ``b``: (br, bk, bn)   ``c``: (bm, bn) or None.
+    Accumulates in ``accum_dtype`` regardless of input precision (the AMX /
+    MXU contract: bf16 in, fp32 accumulate).
+    """
+    if a.ndim == 2:
+        a = a[None]
+    if b.ndim == 2:
+        b = b[None]
+    acc = jax.lax.dot_general(
+        a, b,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=accum_dtype,
+    ).sum(axis=0)
+    if c is not None and beta != 0.0:
+        acc = acc + beta * c.astype(accum_dtype)
+    out_dtype = out_dtype or (c.dtype if c is not None else a.dtype)
+    return acc.astype(out_dtype)
+
+
+def gemm(a, b, c=None, *, beta: float = 1.0, accum_dtype=jnp.float32,
+         out_dtype=None):
+    """Plain GEMM TPP — BRGEMM with batch-reduce count 1."""
+    return brgemm(a[None], b[None], c, beta=beta, accum_dtype=accum_dtype,
+                  out_dtype=out_dtype)
+
+
+# --------------------------------------------------------------------------
+# Initialization / copy
+# --------------------------------------------------------------------------
+
+def zero(shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def identity(x, out_dtype=None):
+    return x.astype(out_dtype or x.dtype)
+
+
+def cast(x, dtype):
+    return x.astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Unary / activation TPPs (fp32 internal math)
+# --------------------------------------------------------------------------
+
+_SQRT_2_OVER_PI = math.sqrt(2.0 / math.pi)
+
+
+def relu(x):
+    return jnp.maximum(x, jnp.zeros((), x.dtype))
+
+
+def relu_grad(g, x):
+    return jnp.where(x > 0, g, jnp.zeros((), g.dtype))
+
+
+def gelu(x):
+    """tanh-approximation GELU (the paper's Bert-Intermediate TPP)."""
+    xf = x.astype(jnp.float32)
+    y = 0.5 * xf * (1.0 + jnp.tanh(_SQRT_2_OVER_PI * (xf + 0.044715 * xf ** 3)))
+    return y.astype(x.dtype)
+
+
+def gelu_grad(g, x):
+    xf = x.astype(jnp.float32)
+    t = jnp.tanh(_SQRT_2_OVER_PI * (xf + 0.044715 * xf ** 3))
+    dt = (1.0 - t ** 2) * _SQRT_2_OVER_PI * (1.0 + 3 * 0.044715 * xf ** 2)
+    return (g.astype(jnp.float32) * (0.5 * (1.0 + t) + 0.5 * xf * dt)).astype(g.dtype)
+
+
+def sigmoid(x):
+    return jax.nn.sigmoid(x.astype(jnp.float32)).astype(x.dtype)
+
+
+def silu(x):
+    xf = x.astype(jnp.float32)
+    return (xf * jax.nn.sigmoid(xf)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Binary TPPs
+# --------------------------------------------------------------------------
+
+def add(x, y):
+    return x + y
+
+
+def sub(x, y):
+    return x - y
+
+
+def mul(x, y):
+    return x * y
+
+
+def scale(x, s):
+    return (x.astype(jnp.float32) * s).astype(x.dtype)
+
+
+def bias_add(x, bias):
+    """Row-broadcast bias add on a 2D tile: (m, n) + (n,)."""
+    return (x.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def residual_add(x, res):
+    return (x.astype(jnp.float32) + res.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Reductions / normalizations (fp32 statistics)
+# --------------------------------------------------------------------------
+
+def reduce_sum(x, axis=-1, keepdims=True):
+    return jnp.sum(x.astype(jnp.float32), axis=axis, keepdims=keepdims)
+
+
+def reduce_max(x, axis=-1, keepdims=True):
+    return jnp.max(x.astype(jnp.float32), axis=axis, keepdims=keepdims)
+
+
+def softmax(x, axis=-1):
+    xf = x.astype(jnp.float32)
+    m = jnp.max(xf, axis=axis, keepdims=True)
+    e = jnp.exp(xf - m)
+    return (e / jnp.sum(e, axis=axis, keepdims=True)).astype(x.dtype)
+
+
+def layernorm(x, gamma, beta, *, eps: float = 1e-5):
+    """Layernorm-equation TPP over the last dim, fp32 statistics."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rmsnorm(x, gamma, *, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps) * gamma.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def dropout(x, key, rate: float, *, deterministic: bool = False):
+    if deterministic or rate == 0.0:
+        return x
+    keep = jax.random.bernoulli(key, 1.0 - rate, x.shape)
+    return jnp.where(keep, x / (1.0 - rate), jnp.zeros((), x.dtype))
+
+
+# --------------------------------------------------------------------------
+# Layout transformation TPPs
+# --------------------------------------------------------------------------
+
+def transpose(x):
+    return jnp.swapaxes(x, -1, -2)
+
+
+def vnni_pack(x, lanes: int = 2):
+    """(K, N) → (K//lanes, N, lanes) — the CPU VNNI/MMLA packing TPP.
+
+    The MXU needs no VNNI packing (Mosaic handles sublane layout); the
+    primitive is kept for API parity with the paper and for tests that
+    round-trip layouts.
+    """
+    k, n = x.shape
+    assert k % lanes == 0, (k, lanes)
+    return x.reshape(k // lanes, lanes, n).swapaxes(1, 2)
+
+
+def vnni_unpack(x):
+    kp, n, lanes = x.shape
+    return x.swapaxes(1, 2).reshape(kp * lanes, n)
+
+
+# --------------------------------------------------------------------------
+# Quantization TPPs (used by the gradient-compression path)
+# --------------------------------------------------------------------------
+
+def quantize_int8(x, axis=-1):
+    """Symmetric per-slice int8 quantization: returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=axis, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+# Registries used by dtype-sweep tests -------------------------------------
+UNARY_TPPS = {
+    "relu": relu, "gelu": gelu, "silu": silu, "sigmoid": sigmoid,
+    "identity": identity, "softmax": softmax, "transpose": transpose,
+}
+BINARY_TPPS = {"add": add, "sub": sub, "mul": mul, "residual_add": residual_add}

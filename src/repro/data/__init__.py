@@ -1,0 +1,2 @@
+from repro.data.pipeline import DataConfig, SyntheticCorpus, make_global_batch
+__all__ = ["DataConfig", "SyntheticCorpus", "make_global_batch"]

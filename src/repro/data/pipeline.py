@@ -1,0 +1,116 @@
+"""Deterministic, resumable, shardable synthetic LM data pipeline.
+
+Production semantics without external corpora: a counter-based PRNG stream
+(stateless — batch ``i`` is a pure function of (seed, i)) means
+
+  * *resumability*: the checkpointed cursor fully determines the stream —
+    restart replays exactly (tested bitwise in the fault-tolerance tests);
+  * *shardability*: each (data, pod) shard draws its own slice of the global
+    batch by index, no cross-host coordination;
+  * *prefetch*: a background thread keeps ``prefetch`` batches ahead.
+
+The token distribution is a Zipfian mixture with induced bigram structure so
+cross-entropy decreases measurably during the example training runs (a
+learnable synthetic language, not uniform noise).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator, Optional
+
+import numpy as np
+
+__all__ = ["DataConfig", "SyntheticCorpus", "make_global_batch"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+
+class SyntheticCorpus:
+    """Stateless counter-based batch source with a resumable cursor."""
+
+    def __init__(self, cfg: DataConfig, start_step: int = 0):
+        self.cfg = cfg
+        self.step = start_step
+        v = cfg.vocab_size
+        # fixed Zipf unigram table + deterministic bigram shift pattern
+        ranks = np.arange(1, v + 1, dtype=np.float64)
+        p = 1.0 / ranks
+        self._probs = (p / p.sum()).astype(np.float64)
+        self._shift = 7919 % v  # prime shift induces learnable bigrams
+
+    # ------------------------------------------------------------------
+    def state(self) -> dict:
+        return {"step": self.step, "seed": self.cfg.seed}
+
+    @classmethod
+    def from_state(cls, cfg: DataConfig, state: dict) -> "SyntheticCorpus":
+        assert state["seed"] == cfg.seed, "data stream seed mismatch on restore"
+        return cls(cfg, start_step=state["step"])
+
+    # ------------------------------------------------------------------
+    def batch_at(self, step: int) -> dict:
+        """Global batch for `step` — pure function of (seed, step)."""
+        cfg = self.cfg
+        rng = np.random.default_rng((cfg.seed << 32) ^ step)
+        b, s, v = cfg.global_batch, cfg.seq_len, cfg.vocab_size
+        base = rng.choice(v, size=(b, s + 1), p=self._probs)
+        # bigram structure: every odd position deterministically continues
+        # the even position before it (a learnable signal that later
+        # assignments cannot clobber — vectorized, no sequential loop)
+        odd = np.arange(1, s + 1, 2)
+        base[:, odd] = (base[:, odd - 1] + self._shift) % v
+        tokens = base[:, :-1].astype(np.int32)
+        labels = base[:, 1:].astype(np.int32)
+        mask = np.ones((b, s), np.float32)
+        return {"tokens": tokens, "labels": labels, "mask": mask}
+
+    def __next__(self) -> dict:
+        out = self.batch_at(self.step)
+        self.step += 1
+        return out
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    # ------------------------------------------------------------------
+    def prefetching(self, depth: int = 2) -> Iterator[dict]:
+        """Background-thread prefetch (host-side input pipeline overlap)."""
+        q: queue.Queue = queue.Queue(maxsize=depth)
+        stop = threading.Event()
+
+        def worker():
+            while not stop.is_set():
+                try:
+                    q.put(next(self), timeout=0.5)
+                except queue.Full:
+                    continue
+
+        t = threading.Thread(target=worker, daemon=True)
+        t.start()
+        try:
+            while True:
+                yield q.get()
+        finally:
+            stop.set()
+
+
+def make_global_batch(batch_np: dict, mesh=None, rules=None):
+    """Device-put a host batch with the active batch sharding."""
+    import jax
+    import jax.numpy as jnp
+    if mesh is None or rules is None:
+        return {k: jnp.asarray(v) for k, v in batch_np.items()}
+    from jax.sharding import NamedSharding
+    out = {}
+    for k, v in batch_np.items():
+        axes = ("batch", "seq") if v.ndim == 2 else ("batch", "seq", "embed")
+        out[k] = jax.device_put(v, NamedSharding(mesh, rules.pspec(axes)))
+    return out

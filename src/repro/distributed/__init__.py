@@ -1,0 +1,2 @@
+from repro.distributed import compression, sharding
+__all__ = ["compression", "sharding"]

@@ -1,0 +1,295 @@
+"""Logical-axis sharding rules (FSDP / TP / EP / SP) and activation
+constraints.
+
+Model code annotates tensors with *logical* axis names
+(``constrain(x, ("batch", "seq", "embed"))``); a rules table maps logical
+axes to mesh axes per (arch, shape) — the same separation the paper draws
+between logical loops and their instantiation, applied at the mesh level
+(DESIGN.md §5).  When no rule set is active the constraint is a no-op, so
+the identical model code runs single-device.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "Rules", "use_rules", "constrain", "logical_to_pspec",
+    "TRAIN_RULES", "DECODE_RULES", "LONG_CONTEXT_RULES", "param_pspec",
+]
+
+
+class Rules:
+    def __init__(self, mapping: dict[str, Optional[tuple]], mesh: Mesh):
+        self.mapping = mapping
+        self.mesh = mesh
+
+    def pspec(self, logical_axes) -> P:
+        entries = []
+        used: set = set()
+        for ax in logical_axes:
+            m = self.mapping.get(ax)
+            # a mesh axis may appear at most once per spec — first wins
+            if m is not None:
+                axes = m if isinstance(m, tuple) else (m,)
+                if any(a in used for a in axes):
+                    m = None
+                else:
+                    used.update(axes)
+            entries.append(m)
+        return P(*entries)
+
+
+_ACTIVE: list[Rules] = []
+
+
+@contextlib.contextmanager
+def use_rules(rules: Rules):
+    _ACTIVE.append(rules)
+    try:
+        yield rules
+    finally:
+        _ACTIVE.pop()
+
+
+def active_rules() -> Optional[Rules]:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def constrain(x, logical_axes):
+    """with_sharding_constraint against the active rule set (no-op without).
+
+    Shape-aware: axis assignments that do not divide the corresponding dim
+    are dropped (e.g. 36 heads over a 16-way model axis), so the same model
+    code works for every architecture."""
+    r = active_rules()
+    if r is None:
+        return x
+    spec = r.pspec(logical_axes)
+    entries = []
+    for dim, m in zip(x.shape, spec):
+        if m is not None:
+            axes = m if isinstance(m, tuple) else (m,)
+            n = 1
+            for a in axes:
+                n *= r.mesh.shape[a]
+            if n == 0 or dim % n != 0:
+                m = None
+        entries.append(m)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(r.mesh, P(*entries))
+    )
+
+
+def logical_to_pspec(logical_axes, mapping) -> P:
+    return P(*[mapping.get(ax) for ax in logical_axes])
+
+
+# --------------------------------------------------------------------------
+# Standard rule tables.  Mesh axes: ("pod", "data", "model") or ("data",
+# "model").  ``dp`` below means the full data-parallel axis set.
+# --------------------------------------------------------------------------
+
+def _dp(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def TRAIN_RULES(mesh: Mesh, *, sp: bool = True) -> Rules:
+    """FSDP (params/opt-state sharded over dp) × TP (heads/ffn/vocab over
+    model) × SP (block-boundary activations sequence-sharded over model —
+    Megatron-style sequence parallelism; cuts saved-residual memory ×|model|
+    at the cost of boundary all-gathers, see EXPERIMENTS.md §Perf)."""
+    dp = _dp(mesh)
+    return Rules({
+        "batch": dp, "seq": "model" if sp else None, "embed": None,
+        "heads": "model", "kv_heads": "model", "head_dim": None,
+        "ffn": "model", "vocab": "model",
+        "experts": "model", "expert_ffn": None,
+        "fsdp": dp, "layers": None,
+        "ssm_inner": "model", "ssm_state": None,
+    }, mesh)
+
+
+def DECODE_RULES(mesh: Mesh) -> Rules:
+    """Serving: batch-DP over dp, TP over model, KV cache sharded on heads
+    (falls back to head_dim when kv_heads < |model|, handled in param rules)."""
+    dp = _dp(mesh)
+    return Rules({
+        "batch": dp, "seq": None, "embed": None,
+        "heads": "model", "kv_heads": "model", "head_dim": None,
+        "ffn": "model", "vocab": "model",
+        "experts": "model", "expert_ffn": None,
+        "fsdp": None, "layers": None,
+        "ssm_inner": "model", "ssm_state": None,
+    }, mesh)
+
+
+def LONG_CONTEXT_RULES(mesh: Mesh) -> Rules:
+    """long_500k (batch=1): sequence-parallel KV/state over dp, TP over
+    model; batch unsharded."""
+    return Rules({
+        "batch": None, "seq": _dp(mesh), "embed": None,
+        "heads": "model", "kv_heads": "model", "head_dim": None,
+        "ffn": "model", "vocab": "model",
+        "experts": "model", "expert_ffn": None,
+        "fsdp": None, "layers": None,
+        "ssm_inner": "model", "ssm_state": None,
+    }, mesh)
+
+
+# --------------------------------------------------------------------------
+# Parameter PartitionSpecs — by logical role, resolved against a rule set.
+# The model's init functions tag each leaf with logical axes via path names;
+# ``param_pspec`` maps a parameter path + shape to a PartitionSpec.
+# --------------------------------------------------------------------------
+
+def param_pspec(path: str, shape, rules: Rules, mesh: Mesh) -> P:
+    """Role table: TP on the 'wide' axis of each projection, FSDP on the
+    other; MoE expert weights over model (EP); vocab tables over model.
+    Stacked-layer params (under ``groups``) carry one leading repeat dim.
+    Any assignment that does not divide its dim falls back to replicated."""
+    mp = rules.mapping
+    fsdp = mp.get("fsdp")
+    tp = mp.get("tp", "model" if "model" in mesh.shape else None)
+
+    def ok(axis_entry, dim):
+        if axis_entry is None:
+            return False
+        axes = axis_entry if isinstance(axis_entry, tuple) else (axis_entry,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        return n > 1 and dim % n == 0
+
+    parts = path.split("/")
+    name = parts[-1]
+    nd = len(shape)
+    lead = 1 if "groups" in parts else 0  # stacked-layer repeat dim
+
+    def spec(*entries):
+        entries = [e if ok(e, shape[i + lead]) else None
+                   for i, e in enumerate(entries)]
+        return P(*([None] * lead + entries))
+
+    if name == "embed":
+        # vocab over TP; odd vocab sizes (minicpm/whisper/bert) fall back
+        # to sharding the embed dim over FSDP
+        if ok(tp, shape[0]):
+            return P(tp, fsdp if ok(fsdp, shape[1]) else None)
+        return P(None, fsdp if ok(fsdp, shape[1]) else None)
+    if name in ("lm_head", "patch_proj"):
+        if ok(tp, shape[-1]):
+            return P(fsdp if ok(fsdp, shape[0]) else None, tp)
+        return P(fsdp if ok(fsdp, shape[0]) else None, None)
+    if nd - lead <= 1:
+        return P(*([None] * nd))  # norms, biases, dt_bias, d_skip, …
+    if name in ("wg", "wu", "wd") and nd - lead == 3:
+        # expert weights (…, E, d, ff): EP — experts over TP, FSDP inside
+        entries = ([None] * lead
+                   + [tp if ok(tp, shape[lead]) else None,
+                      fsdp if ok(fsdp, shape[lead + 1]) else None,
+                      None])
+        return P(*entries)
+    if name == "a_log":
+        return spec(tp, None)      # (d_inner, N): shard d_inner
+    if name in ("wq", "wk", "wv", "wg", "wu", "wq_b", "wkv_b", "w_in",
+                "w_x", "w_dt"):
+        return spec(fsdp, tp)      # (d, wide): TP on out dim, FSDP on in dim
+    if name in ("wo", "wd", "w_out"):
+        return spec(tp, fsdp)      # (wide, d): TP on in dim
+    if name in ("wq_a", "wkv_a", "router"):
+        return spec(fsdp, None)
+    if name == "conv_w":
+        return spec(None, tp)
+    return spec(fsdp, None)
+
+
+def cache_pspec_tree(cfg, cache_shapes, rules: Rules, mesh: Mesh):
+    """PartitionSpecs for a decode-cache pytree (built from eval_shape).
+
+    Leading dim is the stacked-layer ``repeat`` axis.  KV caches shard on
+    kv_heads over ``model`` when divisible, else fall back to sharding
+    head_dim (GSPMD resolves the contraction with partial-sum all-reduces);
+    sequence shards over the rule set's ``seq`` mapping (long-context SP);
+    MLA latents shard their feature dim over ``model``."""
+    mp = rules.mapping
+
+    def nways(entry):
+        if entry is None:
+            return 1
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        return n
+
+    def pick(dim, *cands):
+        for c in cands:
+            if c is not None and dim % nways(c) == 0 and nways(c) > 1:
+                return c
+        return None
+
+    def leaf_spec(path, leaf):
+        names = [_path_str(p) for p in path]
+        shape = leaf.shape
+        if names[-1] in ("k", "v"):
+            # (repeat, B, Hk, S, hd): kv_heads over model when divisible;
+            # else sequence-parallel cache (seq over model — flash-decode
+            # partial-softmax pattern); else head_dim as last resort
+            kvh = pick(shape[2], mp.get("kv_heads"))
+            sq = (pick(shape[3], mp.get("seq") or mp.get("kv_heads"))
+                  if kvh is None else pick(shape[3], mp.get("seq")))
+            hd = (pick(shape[4], mp.get("kv_heads"))
+                  if kvh is None and sq is None else None)
+            # dedupe: one mesh axis at most once
+            used = set()
+            ent = []
+            for e in (None, pick(shape[1], mp.get("batch")), kvh, sq, hd):
+                if e is not None:
+                    axes = e if isinstance(e, tuple) else (e,)
+                    if any(a in used for a in axes):
+                        e = None
+                    else:
+                        used.update(axes)
+                ent.append(e)
+            return P(*ent)
+        if names[-1] == "latent":
+            # (repeat, B, S, kvr+rd)
+            return P(None, pick(shape[1], mp.get("batch")),
+                     pick(shape[2], mp.get("seq")),
+                     pick(shape[3], mp.get("kv_heads")))
+        if names[-1] == "conv":
+            # (repeat, B, c-1, d_inner)
+            return P(None, pick(shape[1], mp.get("batch")), None,
+                     pick(shape[3], mp.get("ssm_inner")))
+        if names[-1] == "h":
+            # (repeat, B, d_inner, N)
+            return P(None, pick(shape[1], mp.get("batch")),
+                     pick(shape[2], mp.get("ssm_inner")), None)
+        if names[-1] == "enc_out" or len(shape) == 3:
+            return P(pick(shape[0], mp.get("batch")), None, None)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_shapes)
+
+
+def _path_str(p) -> str:
+    import jax.tree_util as jtu
+    if isinstance(p, jtu.DictKey):
+        return str(p.key)
+    if isinstance(p, jtu.SequenceKey):
+        return str(p.idx)
+    if isinstance(p, jtu.GetAttrKey):
+        return str(p.name)
+    return str(p)
+
+
+def param_pspec_tree(params_shapes, rules: Rules, mesh: Mesh):
+    """Map every parameter leaf to its PartitionSpec by path."""
+    def leaf(path, x):
+        pstr = "/".join(_path_str(p) for p in path)
+        return param_pspec(pstr, x.shape, rules, mesh)
+    return jax.tree_util.tree_map_with_path(leaf, params_shapes)

@@ -1,0 +1,206 @@
+"""BRGEMM Pallas kernel — the paper's core tensor-contraction TPP on the MXU.
+
+The outer-loop schedule (order / multi-level blocking / parallelization) is
+given by a PARLOOPER ``loop_spec_string`` over the logical loops
+
+    a = K (inner-product, batch-reduce)    b = M    c = N
+
+exactly as in Listing 1.  The spec string is lowered to a Pallas
+grid/BlockSpec schedule by ``repro.core.pallas_lowering``; the kernel body is
+the paper's body_func — zero TPP on first K-visit, BRGEMM TPP, fused epilogue
+TPPs (bias/activation, §III-A) on the last K-visit — operating on VMEM tiles
+with an fp32 accumulator scratch (the MXU accumulation contract).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import tpp
+from repro.core.loops import LoopSpec, ThreadedLoop
+from repro.core.pallas_lowering import (TensorMap, make_pallas_fn, plan_pallas,
+                                        validate_reduction_innermost)
+
+__all__ = ["matmul_pallas", "brgemm_blocked_pallas", "pick_tiles", "DEFAULT_SPEC"]
+
+DEFAULT_SPEC = "bca"  # output-stationary: M, N outer; K (reduction) innermost
+
+_ACTIVATIONS = {None: lambda x: x, "relu": tpp.relu, "gelu": tpp.gelu,
+                "silu": tpp.silu, "sigmoid": tpp.sigmoid}
+
+
+def _divisors_desc(n: int, cands: Sequence[int]) -> int:
+    for c in cands:
+        if n % c == 0:
+            return c
+    return n
+
+
+def pick_tiles(m: int, k: int, n: int, dtype=jnp.bfloat16,
+               vmem_budget: int = 96 * 2 ** 20):
+    """MXU-aligned tile selection: prefer multiples of 128 on M/N (systolic
+    width) and deep K blocks (accumulation), constrained to the VMEM budget
+    with double buffering."""
+    bm = _divisors_desc(m, (512, 256, 128, 64, 32, 16, 8, 4, 2))
+    bn = _divisors_desc(n, (512, 256, 128, 64, 32, 16, 8, 4, 2))
+    bk = _divisors_desc(k, (2048, 1024, 512, 256, 128, 64, 32, 16, 8, 4, 2))
+    db = jnp.dtype(dtype).itemsize
+    while 2 * (bm * bk + bk * bn) * db + bm * bn * 4 > vmem_budget and bk > 8:
+        bk //= 2
+    return bm, bk, bn
+
+
+def matmul_pallas(
+    a,
+    b,
+    *,
+    spec_string: str = DEFAULT_SPEC,
+    tiles: Optional[tuple[int, int, int]] = None,
+    block_steps: dict | None = None,
+    bias=None,
+    activation: Optional[str] = None,
+    out_dtype=None,
+    interpret: bool = False,
+    mesh=None,
+):
+    """Flat-layout GEMM ``C[M,N] = act(A[M,K] @ B[K,N] + bias)``.
+
+    ``spec_string`` drives the Pallas schedule; ``block_steps`` optionally
+    provides the per-letter multi-level blocking lists (in units of base
+    tiles), e.g. ``{"b": (8, 2)}`` for an ``"bbcab"``-style spec.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    out_dtype = out_dtype or a.dtype
+    bm, bk, bn = tiles or pick_tiles(m, k, n, a.dtype)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
+    mb, kb, nb = m // bm, k // bk, n // bn
+    block_steps = block_steps or {}
+
+    loops = [
+        LoopSpec(0, kb, 1, block_steps=tuple(block_steps.get("a", ())), name="K"),
+        LoopSpec(0, mb, 1, block_steps=tuple(block_steps.get("b", ())), name="M"),
+        LoopSpec(0, nb, 1, block_steps=tuple(block_steps.get("c", ())), name="N"),
+    ]
+    tl = ThreadedLoop(loops, spec_string, reduction_letters=("a",))
+    validate_reduction_innermost(tl.nest, ("b", "c"), ("a",))
+    in_maps = [
+        TensorMap(("b", "a"), (bm, bk), layout="flat"),
+        TensorMap(("a", "c"), (bk, bn), layout="flat"),
+    ]
+    operands = [a, b]
+    if bias is not None:
+        in_maps.append(TensorMap((None, "c"), (1, bn), layout="flat"))
+        operands.append(bias.reshape(1, n))
+    out_map = TensorMap(("b", "c"), (bm, bn), layout="flat")
+    plan = plan_pallas(tl.nest, in_maps, out_map, reduction_letters=("a",))
+
+    kb_total = kb  # for last-visit epilogue detection
+    act_fn = _ACTIVATIONS[activation]
+
+    def body(ind, a_ref, *rest):
+        if bias is not None:
+            b_ref, bias_ref, o_ref, acc_ref = rest
+        else:
+            b_ref, o_ref, acc_ref = rest
+            bias_ref = None
+        ik = ind["a"]
+
+        @pl.when(ik == 0)
+        def _():
+            acc_ref[...] = tpp.zero(acc_ref.shape, acc_ref.dtype)
+
+        acc_ref[...] += jax.lax.dot_general(
+            a_ref[...], b_ref[...],
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+        k_step = tl.nest.innermost_step("a")
+
+        @pl.when(ik == kb_total - k_step)
+        def _():
+            r = acc_ref[...]
+            if bias_ref is not None:
+                r = tpp.bias_add(r, bias_ref[0])
+            o_ref[...] = act_fn(r).astype(o_ref.dtype)
+
+    acc_m = tl.nest.innermost_step("b") * bm
+    acc_n = tl.nest.innermost_step("c") * bn
+    fn = make_pallas_fn(
+        plan,
+        body,
+        jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((acc_m, acc_n), jnp.float32)],
+        interpret=interpret,
+        mesh=mesh,
+        cost_estimate=pl.CostEstimate(
+            flops=2 * m * n * k,
+            bytes_accessed=(m * k + k * n) * a.dtype.itemsize + m * n * jnp.dtype(out_dtype).itemsize,
+            transcendentals=0,
+        ),
+    )
+    return fn(*operands)
+
+
+def brgemm_blocked_pallas(
+    a,
+    b,
+    *,
+    spec_string: str = "bca",
+    k_step: int = 1,
+    block_steps: dict | None = None,
+    out_dtype=None,
+    interpret: bool = False,
+    mesh=None,
+):
+    """Paper Listing 1, verbatim layouts: A (Mb,Kb,bm,bk), B (Nb,Kb,bk,bn)
+    → C (Nb,Mb,bm,bn).  ``k_step`` is the stride-based batch-reduce count."""
+    mb, kb, bm, bk = a.shape
+    nb, kb2, bk2, bn = b.shape
+    assert kb == kb2 and bk == bk2
+    out_dtype = out_dtype or a.dtype
+    block_steps = block_steps or {}
+
+    loops = [
+        LoopSpec(0, kb, k_step, block_steps=tuple(block_steps.get("a", ())), name="K"),
+        LoopSpec(0, mb, 1, block_steps=tuple(block_steps.get("b", ())), name="M"),
+        LoopSpec(0, nb, 1, block_steps=tuple(block_steps.get("c", ())), name="N"),
+    ]
+    tl = ThreadedLoop(loops, spec_string, reduction_letters=("a",))
+    validate_reduction_innermost(tl.nest, ("b", "c"), ("a",))
+    in_maps = [
+        TensorMap(("b", "a"), (bm, bk), layout="blocked"),
+        TensorMap(("c", "a"), (bk, bn), layout="blocked"),
+    ]
+    out_map = TensorMap(("c", "b"), (bm, bn), layout="blocked")
+    plan = plan_pallas(tl.nest, in_maps, out_map, reduction_letters=("a",))
+
+    def body(ind, a_ref, b_ref, o_ref):
+        ik = ind["a"]
+
+        @pl.when(ik == 0)
+        def _():
+            o_ref[...] = tpp.zero(o_ref.shape, o_ref.dtype)
+
+        # batch-reduce over the k_step blocks in this visit (BRGEMM TPP)
+        av = a_ref[...].astype(jnp.float32)
+        bv = b_ref[...].astype(jnp.float32)
+        o_ref[...] += jnp.einsum(
+            "mkab,nkbc->nmac", av, bv, preferred_element_type=jnp.float32
+        ).astype(o_ref.dtype)
+
+    fn = make_pallas_fn(
+        plan,
+        body,
+        jax.ShapeDtypeStruct((nb, mb, bm, bn), jnp.float32 if out_dtype is None else out_dtype),
+        interpret=interpret,
+        mesh=mesh,
+    )
+    return fn(a, b)

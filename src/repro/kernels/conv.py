@@ -1,0 +1,127 @@
+"""Direct convolution via PARLOOPER + BRGEMM TPPs (paper §III-B, Listing 4).
+
+Two paths:
+  * ``conv2d_parlooper`` — the faithful Listing-4 mirror: 7 logical loops
+    (n, c, k, h, w, r, s) declared with PARLOOPER, body = zero TPP on the
+    first (c, r, s) visit + offset-based BRGEMM over the (c_step × r_step ×
+    s_step) input patches.  Executed by the pure-JAX nest executor (XLA
+    compiles the generated nest — the CPU-measurable path used by the Fig-7
+    benchmark).
+  * ``conv2d_1x1_pallas`` — the R=S=1 fast path: stride-based BRGEMM ==
+    a plain matmul over collapsed spatial dims, dispatched to the BRGEMM
+    Pallas kernel (exactly the paper's "for R=S=1 we can setup a stride-based
+    BRGEMM").
+
+Blocked layouts (paper lines 1–3): I (N, Cb, H, W, bc); W (Kb, Cb, R, S, bc,
+bk); O (N, Kb, P, Q, bk).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tpp
+from repro.core.loops import LoopSpec, ThreadedLoop
+
+__all__ = ["conv2d_parlooper", "conv2d_1x1_pallas", "block_conv_tensors"]
+
+
+def block_conv_tensors(x_nhwc, w_rsck, bc: int, bk: int):
+    """NHWC/HWIO → the paper's blocked layouts."""
+    n, h, w, c = x_nhwc.shape
+    r, s, c2, k = w_rsck.shape
+    assert c % bc == 0 and k % bk == 0 and c2 == c
+    xb = x_nhwc.reshape(n, h, w, c // bc, bc).transpose(0, 3, 1, 2, 4)
+    wb = (
+        w_rsck.reshape(r, s, c // bc, bc, k // bk, bk)
+        .transpose(4, 2, 0, 1, 3, 5)
+    )  # (Kb, Cb, R, S, bc, bk)
+    return xb, wb
+
+
+def conv2d_parlooper(
+    xb,
+    wb,
+    *,
+    spec_string: str = "abcdefg",
+    stride: int = 1,
+    w_step: int | None = None,
+    out_dtype=None,
+    mode: str = "auto",
+):
+    """Forward convolution, Listing 4.  xb (N,Cb,H,W,bc); wb (Kb,Cb,R,S,bc,bk).
+
+    Logical loops: a=n, b=c(in-feature blocks, reduction), c=k(out-feature
+    blocks), d=h(P rows), e=w(Q col-tiles), f=r, g=s (f, g reductions).
+    """
+    n, cb, h, w, bc = xb.shape
+    kb, cb2, r, s, bc2, bk = wb.shape
+    assert cb == cb2 and bc == bc2
+    p = (h - r) // stride + 1
+    q = (w - s) // stride + 1
+    w_step = w_step or q
+    assert q % w_step == 0
+    out_dtype = out_dtype or xb.dtype
+
+    loops = [
+        LoopSpec(0, n, 1, name="n"),
+        LoopSpec(0, cb, cb, name="c"),   # fold all C blocks into one BRGEMM
+        LoopSpec(0, kb, 1, name="k"),
+        LoopSpec(0, p, 1, name="h"),
+        LoopSpec(0, q, w_step, name="w"),
+        LoopSpec(0, r, r, name="r"),     # fold R, S into the BRGEMM (offsets)
+        LoopSpec(0, s, s, name="s"),
+    ]
+    tl = ThreadedLoop(loops, spec_string, reduction_letters=("b", "f", "g"))
+
+    def body(ind, out):
+        i_n, i_c, i_k, i_h, i_w, i_r, i_s = ind
+        # Gather the (c_step*r_step*s_step) input patches: offset-based BRGEMM.
+        acc = jnp.zeros((w_step, bk), jnp.float32)
+        for dc in range(cb):
+            for dr in range(r):
+                for ds in range(s):
+                    # input rows: i_h*stride + dr ; columns strided by `stride`
+                    row = i_h * stride + dr
+                    patch = jax.lax.dynamic_slice(
+                        xb,
+                        (i_n, dc, row, i_w * stride + ds, 0),
+                        (1, 1, 1, (w_step - 1) * stride + 1, bc),
+                    )[0, 0, 0][::stride]                      # (w_step, bc)
+                    wt = jax.lax.dynamic_slice(
+                        wb, (i_k, dc, dr, ds, 0, 0), (1, 1, 1, 1, bc, bk)
+                    )[0, 0, 0, 0]                             # (bc, bk)
+                    acc = acc + jnp.dot(
+                        patch.astype(jnp.float32), wt.astype(jnp.float32),
+                        preferred_element_type=jnp.float32,
+                    )
+        prev = jax.lax.dynamic_slice(
+            out, (i_n, i_k, i_h, i_w, 0), (1, 1, 1, w_step, bk)
+        )[0, 0, 0]
+        first = jnp.logical_and(jnp.equal(i_c, 0),
+                                jnp.logical_and(jnp.equal(i_r, 0), jnp.equal(i_s, 0)))
+        res = jnp.where(first, acc, prev.astype(jnp.float32) + acc)
+        return jax.lax.dynamic_update_slice(
+            out, res.astype(out.dtype)[None, None, None], (i_n, i_k, i_h, i_w, 0)
+        )
+
+    out0 = jnp.zeros((n, kb, p, q, bk), out_dtype)
+    return tl(body, carry=out0, mode=mode)
+
+
+def conv2d_1x1_pallas(xb, wb, *, stride: int = 1, out_dtype=None,
+                      interpret: bool = False, spec_string: str = "bca"):
+    """R=S=1 stride-based BRGEMM fast path through the Pallas GEMM."""
+    from repro.kernels.brgemm import matmul_pallas
+
+    n, cb, h, w, bc = xb.shape
+    kb, _, r, s, _, bk = wb.shape
+    assert r == 1 and s == 1
+    x = xb[:, :, ::stride, ::stride, :]
+    p, q = x.shape[2], x.shape[3]
+    # (N*P*Q, C) @ (C, K)
+    xm = x.transpose(0, 2, 3, 1, 4).reshape(n * p * q, cb * bc)
+    wm = wb[:, :, 0, 0].transpose(1, 2, 0, 3).reshape(cb * bc, kb * bk)
+    om = matmul_pallas(xm, wm, out_dtype=out_dtype or xb.dtype,
+                       interpret=interpret, spec_string=spec_string)
+    return om.reshape(n, p, q, kb, bk).transpose(0, 3, 1, 2, 4)

@@ -1,0 +1,106 @@
+"""Render EXPERIMENTS.md tables from results/dryrun.json.
+
+Usage:  PYTHONPATH=src python -m repro.launch.report results/dryrun.json
+"""
+import json
+import sys
+
+
+def _f(x, fmt="{:.3e}"):
+    return fmt.format(x) if isinstance(x, (int, float)) else "—"
+
+
+def dryrun_table(recs):
+    out = ["| arch | shape | mesh | compile | mem/dev | fits | mb | collectives |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] != "run":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | "
+                f"skip | — | {r['status'][:60]} |")
+            continue
+        mem = r["memory"]
+        colls = ",".join(f"{k.split('-')[1][:3] if '-' in k else k}:{v}"
+                         for k, v in sorted(r.get("collectives", {}).items()))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compile_s']}s | {mem['peak_per_device']/2**30:.1f}GiB | "
+            f"{'✓' if mem['fits_hbm'] else '✗'} | "
+            f"{r.get('microbatches', '—')} | {colls or '—'} |")
+    return "\n".join(out)
+
+
+def roofline_table(recs):
+    out = ["| arch | shape | compute s | memory s | collective s | dominant "
+           "| roofline frac | useful flops | next lever |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] != "run" or "compute_s" not in r:
+            continue
+        if r["mesh"] != "16x16":
+            continue
+        lever = {
+            "compute": "higher MXU util (tiling/fusion)",
+            "memory": "fuse epilogues / fewer fp32 round-trips",
+            "collective": "overlap or shrink all-gathers (FSDP prefetch, "
+                          "SP trade-off)",
+        }[r["dominant"]]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {_f(r['compute_s'])} | "
+            f"{_f(r['memory_s'])} | {_f(r['collective_s'])} | "
+            f"{r['dominant']} | {r['roofline_fraction']:.2f} | "
+            f"{_f(r.get('useful_flops_ratio'), '{:.3f}')} | {lever} |")
+    return "\n".join(out)
+
+
+def summary(recs):
+    run = [r for r in recs if r["status"] == "run"]
+    skips = [r for r in recs if r["status"].startswith("skip")]
+    fails = [r for r in recs if r["status"].startswith("FAILED")]
+    fits = [r for r in run if r.get("memory", {}).get("fits_hbm")]
+    return (f"{len(recs)} cells: {len(run)} compiled, {len(skips)} "
+            f"documented skips, {len(fails)} failures; "
+            f"{len(fits)}/{len(run)} fit 16 GiB/device as configured")
+
+
+def hillclimb_table(recs):
+    out = ["| cell | variant | compute s | memory s | collective s | dominant "
+           "| mem/dev GiB | Δ dominant vs baseline |",
+           "|---|---|---|---|---|---|---|---|"]
+    base = {}
+    for r in recs:
+        key = (r["arch"], r["shape"])
+        dom_t = max(r.get("compute_s", 0), r.get("memory_s", 0),
+                    r.get("collective_s", 0))
+        if r["variant_name"] in ("baseline", "fp32_moments", "full_cache"):
+            base[key] = dom_t
+        delta = ""
+        if key in base and base[key]:
+            delta = f"{(dom_t - base[key]) / base[key] * 100:+.1f}%"
+        mem = r.get("memory", {}).get("peak_per_device", 0) / 2 ** 30
+        out.append(
+            f"| {r['arch']}×{r['shape']} | {r['variant_name']} | "
+            f"{_f(r.get('compute_s'))} | {_f(r.get('memory_s'))} | "
+            f"{_f(r.get('collective_s'))} | {r.get('dominant', '—')} | "
+            f"{mem:.1f} | {delta} |")
+    return "\n".join(out)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.json"
+    recs = json.load(open(path))
+    if recs and "variant_name" in recs[0]:
+        print("## §Perf hillclimb variants\n")
+        print(hillclimb_table(recs))
+        return
+    recs.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print("## Summary\n")
+    print(summary(recs))
+    print("\n## §Dry-run\n")
+    print(dryrun_table(recs))
+    print("\n## §Roofline (single-pod 16×16)\n")
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Per the assignment (hardware constants: TPU v5e):
+
+    compute term    = HLO_FLOPs_per_device   / peak_FLOP/s_per_chip
+    memory term     = HLO_bytes_per_device   / HBM_bw_per_chip
+    collective term = link_bytes_per_device  / link_bw
+
+``cost_analysis()`` on the SPMD-partitioned executable reports *per-device*
+flops/bytes (verified empirically), so the per-chip division is already done.
+collective bytes are not in cost_analysis — we parse the partitioned HLO and
+sum, per collective op, the bytes that actually cross ICI links under a ring
+schedule:  all-reduce 2·(W−1)/W·bytes, all-gather/reduce-scatter (W−1)/W·
+(full bytes), all-to-all (W−1)/W·bytes, collective-permute bytes.  W is
+parsed from ``replica_groups``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+__all__ = ["HW", "CollectiveStats", "parse_collectives", "roofline_terms"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_bf16: float = 197e12
+    peak_fp32: float = 49.25e12
+    hbm_bw: float = 819e9
+    link_bw: float = 50e9
+    hbm_bytes: int = 16 * 2 ** 30   # v5e 16 GiB
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# result of a collective:  `%x = bf16[8,128]{1,0} all-reduce(...)`, possibly
+# a tuple `(bf16[..], bf16[..]) all-to-all(...)`
+_OP_RE = re.compile(
+    r"=\s*(\(?[a-z0-9]+\[[^=]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    result_bytes: dict
+    link_bytes: float      # per-device bytes crossing links (ring model)
+
+    def to_dict(self):
+        return {"counts": self.counts, "result_bytes": self.result_bytes,
+                "link_bytes": self.link_bytes}
+
+
+def parse_collectives(hlo_text: str, *, total_devices: int) -> CollectiveStats:
+    counts: dict = {}
+    rbytes: dict = {}
+    link = 0.0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        b = _shape_bytes(type_str)
+        w = _group_size(line, total_devices)
+        counts[op] = counts.get(op, 0) + 1
+        rbytes[op] = rbytes.get(op, 0) + b
+        if op == "all-reduce":
+            link += 2.0 * (w - 1) / w * b
+        elif op == "all-gather":
+            link += (w - 1) / w * b          # result = full gathered bytes
+        elif op == "reduce-scatter":
+            link += (w - 1) * b              # operand = W × result
+        elif op == "all-to-all":
+            link += (w - 1) / w * b
+        elif op == "collective-permute":
+            link += b
+    return CollectiveStats(counts, rbytes, link)
+
+
+def roofline_terms(*, flops_per_device: float, bytes_per_device: float,
+                   link_bytes_per_device: float, dtype_peak: str = "bf16",
+                   hw: HW = HW()) -> dict:
+    peak = hw.peak_bf16 if dtype_peak == "bf16" else hw.peak_fp32
+    t_c = flops_per_device / peak
+    t_m = bytes_per_device / hw.hbm_bw
+    t_x = link_bytes_per_device / hw.link_bw
+    terms = {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x}
+    dom = max(terms, key=terms.get)
+    bound = max(t_c, t_m, t_x)
+    return {
+        **terms,
+        "dominant": dom.replace("_s", ""),
+        "roofline_time_s": bound,
+        "roofline_fraction": (t_c / bound) if bound > 0 else 1.0,
+    }

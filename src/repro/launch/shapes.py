@@ -1,0 +1,38 @@
+"""Assigned input-shape sets (the 4 LM shapes × 10 architectures = 40 cells).
+
+``train_4k`` lowers ``train_step``; ``prefill_32k`` lowers the prefill;
+``decode_32k`` / ``long_500k`` lower ``serve_step`` (one new token against a
+KV cache of seq_len).  ``long_500k`` runs only for sub-quadratic families
+(SSM / hybrid / sliding-window) — skips recorded per DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["ShapeSpec", "SHAPES", "cell_status"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_status(cfg: ModelConfig, shape: ShapeSpec) -> str:
+    """'run' or a documented skip reason."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("skip: pure full attention — unbounded-KV quadratic prefill; "
+                "per assignment long_500k runs only for ssm/hybrid/local-attn")
+    return "run"

@@ -1,0 +1,6 @@
+# Model substrate: TPP-style blocks (attention/MLA/MoE/Mamba) assembled into
+# layer-pattern LMs, enc-dec and VLM backbones, with training loss and
+# KV-cache decode.
+from repro.models import blocks, lm
+
+__all__ = ["blocks", "lm"]

@@ -1,0 +1,31 @@
+"""Learning-rate schedules — cosine and WSD (Warmup-Stable-Decay, the
+minicpm-2b recipe [arXiv:2404.06395])."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_schedule", "wsd_schedule"]
+
+
+def cosine_schedule(step, *, peak_lr, warmup_steps, total_steps,
+                    final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    prog = jnp.clip((step - warmup_steps) /
+                    jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = final_frac * peak_lr + (1 - final_frac) * peak_lr * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def wsd_schedule(step, *, peak_lr, warmup_steps, stable_steps, decay_steps,
+                 final_frac: float = 0.01):
+    """Warmup → stable plateau → short exponential decay (WSD)."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    decay_start = warmup_steps + stable_steps
+    prog = jnp.clip((step - decay_start) / jnp.maximum(decay_steps, 1), 0.0, 1.0)
+    decay = peak_lr * jnp.power(final_frac, prog)
+    out = jnp.where(step < warmup_steps, warm,
+                    jnp.where(step < decay_start, peak_lr, decay))
+    return out

@@ -1,0 +1,2 @@
+from repro.serve.decode import ServeConfig, generate, make_serve_step
+__all__ = ["ServeConfig", "generate", "make_serve_step"]

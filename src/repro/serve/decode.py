@@ -1,0 +1,61 @@
+"""Batched-request serving: prefill + jitted KV-cache decode loop.
+
+``serve_step`` (one token for the whole batch against the caches) is the
+function the decode/long-context dry-run shapes lower — NOT ``train_step``
+(per the assignment).  ``generate`` drives it greedily for the examples and
+tests; per-request lengths are handled by the decode kernels' length masking
+(ragged batches without re-padding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+__all__ = ["ServeConfig", "make_serve_step", "generate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_seq: int = 2048
+    ep_axis: Optional[str] = "model"
+    greedy: bool = True
+    temperature: float = 1.0
+    unroll_layers: bool = False
+
+
+def make_serve_step(cfg: ModelConfig, scfg: ServeConfig):
+    """→ step(params, caches, tokens (B,), pos ()) → (next_tokens, caches)."""
+
+    def serve_step(params, caches, tokens, pos):
+        logits, caches = lm.decode_step(cfg, params, caches, tokens, pos,
+                                        ep_axis=scfg.ep_axis,
+                                        unroll=scfg.unroll_layers)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, caches
+
+    return serve_step
+
+
+def generate(cfg: ModelConfig, params, prompts, num_new: int, *,
+             scfg: ServeConfig = ServeConfig(), jit: bool = True):
+    """prompts (B, P) int32 → (B, P + num_new)."""
+    b, p = prompts.shape
+    caches = lm.init_cache(cfg, b, min(scfg.max_seq, p + num_new))
+    logits, caches = lm.prefill(cfg, params, caches, {"tokens": prompts},
+                                ep_axis=scfg.ep_axis)
+    step = make_serve_step(cfg, scfg)
+    if jit:
+        step = jax.jit(step)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [tok]
+    for t in range(num_new - 1):
+        tok, caches = step(params, caches, tok, jnp.int32(p + t))
+        out.append(tok)
+    return jnp.concatenate([prompts, jnp.stack(out, axis=1)], axis=1)

@@ -1,0 +1,4 @@
+from repro.train.steps import TrainConfig, init_train_state, make_train_step
+from repro.train.trainer import TrainerConfig, train
+__all__ = ["TrainConfig", "init_train_state", "make_train_step",
+           "TrainerConfig", "train"]

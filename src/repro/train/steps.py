@@ -1,0 +1,118 @@
+"""Train / eval step construction: mixed precision, gradient accumulation
+(microbatching), remat, LR schedules, optional gradient compression.
+
+The returned ``train_step(params, opt_state, batch, step)`` is pjit-ready:
+all tensors flow through the logical-axis constraints planted in the model,
+so compiling it with parameter/batch shardings from
+``distributed.sharding`` yields the FSDP×TP×EP distribution (the dry-run
+compiles exactly this function).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import compression
+from repro.models import lm
+from repro.optim import adamw as adamw_mod
+from repro.optim import schedules
+
+__all__ = ["TrainConfig", "make_train_step", "init_train_state"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"            # cosine | wsd
+    wsd_stable_frac: float = 0.8
+    microbatches: int = 1               # gradient accumulation
+    remat: bool = True
+    grad_compression: bool = False
+    loss_chunk: int = 512
+    ep_axis: Optional[str] = "model"
+    unroll_layers: bool = False         # dry-run: exact cost analysis
+    adamw: adamw_mod.AdamWConfig = adamw_mod.AdamWConfig()
+
+
+def _lr(tcfg: TrainConfig, step):
+    if tcfg.schedule == "wsd":
+        stable = int(tcfg.wsd_stable_frac * tcfg.total_steps)
+        return schedules.wsd_schedule(
+            step, peak_lr=tcfg.peak_lr, warmup_steps=tcfg.warmup_steps,
+            stable_steps=stable,
+            decay_steps=max(tcfg.total_steps - tcfg.warmup_steps - stable, 1))
+    return schedules.cosine_schedule(
+        step, peak_lr=tcfg.peak_lr, warmup_steps=tcfg.warmup_steps,
+        total_steps=tcfg.total_steps)
+
+
+def init_train_state(cfg: ModelConfig, tcfg: TrainConfig, key):
+    params = lm.init_params(cfg, key)
+    opt = adamw_mod.init_state(params, tcfg.adamw)
+    if tcfg.grad_compression:
+        opt["err"] = compression.init_error_state(params)
+    return params, opt
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    def loss_fn(params, microbatch):
+        return lm.lm_loss(cfg, params, microbatch, ep_axis=tcfg.ep_axis,
+                          remat=tcfg.remat, loss_chunk=tcfg.loss_chunk,
+                          unroll=tcfg.unroll_layers)
+
+    def train_step(params, opt_state, batch, step):
+        lr = _lr(tcfg, step)
+        nmb = tcfg.microbatches
+        if nmb > 1:
+            # split the global batch into microbatches and accumulate —
+            # per-microbatch DP grad reduction overlaps with the next
+            # microbatch's compute under the latency-hiding scheduler.
+            def split(x):
+                b = x.shape[0]
+                assert b % nmb == 0, (b, nmb)
+                return x.reshape(nmb, b // nmb, *x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(lambda a, b_: a + b_.astype(jnp.float32),
+                                     g_acc, g)
+                return (g_acc, l_acc + loss), None
+
+            (grads, loss_sum), _ = jax.lax.scan(
+                acc_body, (zero_g, jnp.zeros(())), mbs)
+            grads = jax.tree.map(lambda g: g / nmb, grads)
+            loss = loss_sum / nmb
+            metrics = {}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+
+        opt_state = dict(opt_state)
+        if tcfg.grad_compression:
+            grads, new_err = compression.compress_tree(grads, opt_state["err"])
+            opt_state["err"] = new_err
+
+        err = opt_state.pop("err", None)
+        params, opt_state, opt_metrics = adamw_mod.apply_updates(
+            params, grads, opt_state, lr=lr, cfg=tcfg.adamw)
+        if err is not None:
+            opt_state["err"] = err
+        out_metrics = {"loss": loss, "lr": lr, **opt_metrics}
+        for k, v in (metrics or {}).items():
+            out_metrics[k] = v
+        return params, opt_state, out_metrics
+
+    return train_step

@@ -1,0 +1,90 @@
+"""TPP collection: dtype sweeps against numpy semantics (precision-aware
+contract: bf16 in → fp32 internal → bf16 out)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tpp
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+RNG = np.random.default_rng(1)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("name", sorted(tpp.UNARY_TPPS))
+def test_unary_tpps(name, dtype):
+    x = jnp.asarray(RNG.normal(size=(8, 16)).astype(np.float32), dtype)
+    y = tpp.UNARY_TPPS[name](x)
+    assert y.dtype == x.dtype
+    assert np.isfinite(np.asarray(y, np.float32)).all()
+    if name == "relu":
+        np.testing.assert_array_equal(
+            np.asarray(y, np.float32) >= 0, True)
+    if name == "softmax":
+        np.testing.assert_allclose(
+            np.asarray(y, np.float32).sum(-1), 1.0, atol=2e-2)
+    if name == "transpose":
+        assert y.shape == (16, 8)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_brgemm_matches_einsum(dtype):
+    a = jnp.asarray(RNG.normal(size=(3, 8, 16)).astype(np.float32), dtype)
+    b = jnp.asarray(RNG.normal(size=(3, 16, 8)).astype(np.float32), dtype)
+    c0 = jnp.asarray(RNG.normal(size=(8, 8)).astype(np.float32), dtype)
+    out = tpp.brgemm(a, b, c0, beta=1.0, out_dtype=jnp.float32)
+    want = np.einsum("ijk,ikl->jl", np.asarray(a, np.float32),
+                     np.asarray(b, np.float32)) + np.asarray(c0, np.float32)
+    tol = 1e-4 if dtype == jnp.float32 else 0.35
+    np.testing.assert_allclose(np.asarray(out), want, atol=tol)
+
+
+def test_layernorm_rmsnorm_stats():
+    x = jnp.asarray(RNG.normal(size=(4, 64)).astype(np.float32)) * 10 + 3
+    g = jnp.ones((64,))
+    b = jnp.zeros((64,))
+    y = np.asarray(tpp.layernorm(x, g, b))
+    np.testing.assert_allclose(y.mean(-1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(y.std(-1), 1.0, atol=1e-2)
+    yr = np.asarray(tpp.rmsnorm(x, g))
+    ms = (yr ** 2).mean(-1)
+    np.testing.assert_allclose(ms, ms.mean(), rtol=0.2)  # scale-normalized
+
+
+def test_vnni_pack_roundtrip():
+    x = jnp.asarray(RNG.normal(size=(16, 8)).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(tpp.vnni_unpack(tpp.vnni_pack(x, 2))), np.asarray(x))
+
+
+def test_dropout_deterministic_and_scaling():
+    x = jnp.ones((64, 64))
+    y = tpp.dropout(x, jax.random.PRNGKey(0), 0.5)
+    kept = np.asarray(y) != 0
+    assert 0.3 < kept.mean() < 0.7
+    np.testing.assert_allclose(np.asarray(y)[kept], 2.0)
+    y2 = tpp.dropout(x, jax.random.PRNGKey(0), 0.5, deterministic=True)
+    np.testing.assert_array_equal(np.asarray(y2), np.asarray(x))
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_property_quantize_int8_bounded_error(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32) *
+                    rng.uniform(0.01, 100))
+    q, scale = tpp.quantize_int8(x)
+    deq = tpp.dequantize_int8(q, scale)
+    # error bounded by half a quantization step per element
+    err = np.abs(np.asarray(deq) - np.asarray(x))
+    bound = np.broadcast_to(np.asarray(scale) * 0.51 + 1e-9, err.shape)
+    np.testing.assert_array_less(err, bound)
+
+
+def test_gelu_grad_matches_autodiff():
+    x = jnp.asarray(RNG.normal(size=(32,)).astype(np.float32))
+    auto = jax.grad(lambda v: tpp.gelu(v).sum())(x)
+    manual = tpp.gelu_grad(jnp.ones_like(x), x)
+    np.testing.assert_allclose(np.asarray(auto), np.asarray(manual), atol=1e-4)

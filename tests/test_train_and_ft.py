@@ -1,0 +1,175 @@
+"""Training loop, fault tolerance, checkpointing, data pipeline,
+gradient compression."""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticCorpus
+from repro.distributed import compression
+from repro.optim import schedules
+from repro.train import TrainConfig, TrainerConfig, train
+from repro.train.trainer import SimulatedPreemption
+
+CFG = get_config("minicpm_2b").reduced()
+DCFG = DataConfig(vocab_size=CFG.vocab_size, seq_len=32, global_batch=8, seed=1)
+
+
+def _tcfg(**kw):
+    base = dict(peak_lr=3e-3, warmup_steps=5, total_steps=40, loss_chunk=32)
+    base.update(kw)
+    return TrainConfig(**base)
+
+
+def test_loss_decreases(tmp_path):
+    rcfg = TrainerConfig(num_steps=25, ckpt_every=100, ckpt_dir=None,
+                         log_every=0)
+    _, _, h = train(CFG, _tcfg(), DCFG, rcfg, seed=0)
+    assert h["loss"][-1] < h["loss"][0] - 0.3
+
+
+def test_preempt_resume_bitwise(tmp_path):
+    d1, d2 = str(tmp_path / "a"), str(tmp_path / "b")
+    rcfg = TrainerConfig(num_steps=20, ckpt_every=5, ckpt_dir=d1, log_every=0)
+    p1, _, _ = train(CFG, _tcfg(), DCFG, rcfg, seed=0)
+
+    rcfg_pre = TrainerConfig(num_steps=20, ckpt_every=5, ckpt_dir=d2,
+                             log_every=0, preempt_after=7)
+    with pytest.raises(SimulatedPreemption):
+        train(CFG, _tcfg(), DCFG, rcfg_pre, seed=0)
+    rcfg_res = TrainerConfig(num_steps=20, ckpt_every=5, ckpt_dir=d2,
+                             log_every=0)
+    p2, _, _ = train(CFG, _tcfg(), DCFG, rcfg_res, seed=0)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_microbatch_matches_full_batch():
+    """Gradient accumulation over 4 microbatches ≡ one full batch (same
+    global batch, deterministic data)."""
+    rcfg = TrainerConfig(num_steps=5, ckpt_every=100, ckpt_dir=None,
+                         log_every=0)
+    p1, _, h1 = train(CFG, _tcfg(microbatches=1), DCFG, rcfg, seed=0)
+    p2, _, h2 = train(CFG, _tcfg(microbatches=4), DCFG, rcfg, seed=0)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-4)
+
+
+def test_grad_compression_still_converges():
+    rcfg = TrainerConfig(num_steps=25, ckpt_every=100, ckpt_dir=None,
+                         log_every=0)
+    _, _, h = train(CFG, _tcfg(grad_compression=True), DCFG, rcfg, seed=0)
+    assert h["loss"][-1] < h["loss"][0] - 0.25
+
+
+def test_straggler_watchdog(tmp_path):
+    import time as _time
+    seen = []
+
+    def cb(step, params, metrics):
+        if step == 12:
+            _time.sleep(0.6)  # inject a straggler
+        seen.append(step)
+
+    rcfg = TrainerConfig(num_steps=16, ckpt_every=100, ckpt_dir=None,
+                         log_every=0, step_callback=cb, straggler_factor=2.5)
+    _, _, h = train(CFG, _tcfg(), DCFG, rcfg, seed=0)
+    assert any(s == 13 for s, *_ in h["slow_steps"])
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_keep(tmp_path):
+    d = str(tmp_path)
+    tree = {"a": jnp.arange(10), "b": [jnp.ones((2, 2)), jnp.zeros(3)]}
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(d, s, tree, extra={"x": s}, keep=2)
+    assert latest_step(d) == 5
+    from repro.checkpoint import all_steps
+    assert all_steps(d) == [4, 5]
+    out, step, extra = restore_checkpoint(d, tree)
+    assert step == 5 and extra["x"] == 5
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, {"a": jnp.ones((4,))})
+    with pytest.raises(ValueError):
+        restore_checkpoint(d, {"a": jnp.ones((5,))})
+
+
+def test_checkpoint_atomic_no_partial_dirs(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, {"a": jnp.ones((4,))})
+    assert not [f for f in os.listdir(d) if f.startswith(".tmp")]
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_resumable():
+    c1 = SyntheticCorpus(DCFG)
+    batches = [next(c1) for _ in range(5)]
+    c2 = SyntheticCorpus.from_state(DCFG, {"step": 3, "seed": DCFG.seed})
+    np.testing.assert_array_equal(next(c2)["tokens"], batches[3]["tokens"])
+
+
+def test_data_labels_are_shifted_tokens():
+    b = SyntheticCorpus(DCFG).batch_at(0)
+    # labels[t] continues tokens[t] — verify via the bigram construction:
+    # when the bigram fired, label = (token + shift) % V
+    assert b["tokens"].shape == (8, 32) and b["labels"].shape == (8, 32)
+
+
+def test_data_has_learnable_bigram_signal():
+    b = SyntheticCorpus(DCFG).batch_at(0)
+    v = DCFG.vocab_size
+    follows = (b["labels"] == (b["tokens"] + 7919 % v) % v).mean()
+    assert follows > 0.4  # ~50% by construction
+
+
+def test_data_prefetch_yields_same_stream():
+    c = SyntheticCorpus(DCFG)
+    it = c.prefetching(depth=2)
+    got = next(it)
+    np.testing.assert_array_equal(got["tokens"],
+                                  SyntheticCorpus(DCFG).batch_at(0)["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression numerics
+# ---------------------------------------------------------------------------
+
+def test_error_feedback_accumulates_to_truth():
+    """With error feedback, the time-average of dequantized grads converges
+    to the true gradient (bias-free compression)."""
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.normal(size=(64,)).astype(np.float32))
+    err = jnp.zeros_like(g_true)
+    total = jnp.zeros_like(g_true)
+    n = 50
+    for _ in range(n):
+        deq, err = compression._quantize_dequantize(g_true, err)
+        total = total + deq
+    np.testing.assert_allclose(np.asarray(total / n), np.asarray(g_true),
+                               atol=1e-2)
+
+
+def test_wsd_schedule_shape():
+    lr = [float(schedules.wsd_schedule(s, peak_lr=1.0, warmup_steps=10,
+                                       stable_steps=20, decay_steps=10))
+          for s in range(45)]
+    assert lr[0] == 0.0 and abs(lr[10] - 1.0) < 1e-6
+    assert all(abs(v - 1.0) < 1e-6 for v in lr[10:30])
+    assert lr[-1] < 0.05
