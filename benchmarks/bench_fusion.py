@@ -1,0 +1,152 @@
+"""Fused TPP-chain vs unfused per-op vs hand-written kernel (paper §IV-A).
+
+Three comparisons on the Bert-Output layer shape (Listing 6):
+
+  * **wall (XLA)** — the fusion compiler's reference path (one jitted
+    composed-TPP function) vs the honest unfused chain (one jitted function
+    *per op*, forcing an HBM round-trip between operators, the op-by-op
+    runtime the paper fuses away);
+  * **model (Pallas plan)** — ``fusion.graph_cost`` of the fused nest vs
+    ``fusion.estimate_unfused`` with the same schedule-aware GEMM pricing:
+    predicted time and HBM bytes on the TPU target;
+  * **parity** — the fused Pallas kernel (interpret mode) against the
+    hand-written ``kernels.fused_output`` oracle (``--smoke`` only; interpret
+    mode is too slow for timing).
+
+Row format matches the other benchmarks: ``name,usec,extras``.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import fusion
+from repro.core import perf_model
+from repro.kernels.brgemm import pick_tiles
+
+
+def _bench(fn, iters=10):
+    jax.block_until_ready(fn())  # warm the jit cache
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / iters
+
+
+def _unfused_chain_fns(graph):
+    """One jitted function per operator — each call round-trips through HBM."""
+    gemm = jax.jit(lambda x, w: jnp.dot(
+        x, w, preferred_element_type=jnp.float32))
+    steps = []
+    for nd in graph.nodes:
+        op = fusion.EPILOGUE_OPS[nd.op]
+        attrs = nd.attr_dict()
+        extra = nd.inputs[op.value_arity:]
+        steps.append((jax.jit(lambda v, *p, _op=op, _at=attrs:
+                              _op.apply(v, *p, **_at)), extra))
+    return gemm, steps
+
+
+def run(smoke: bool = False):
+    rows = []
+    rng = np.random.default_rng(0)
+    # Bert-large Output layer: d_ff=4096 → d=1024, tokens = minibatch·seq
+    shapes = [(256, 512, 512)] if smoke else [(4096, 4096, 1024),
+                                              (8192, 1024, 1024)]
+    dropout = 0.1
+    for (m, k, n) in shapes:
+        graph = fusion.fused_output_graph(dropout)
+        dt = np.float32
+        ops = {
+            "x": jnp.asarray(rng.normal(size=(m, k)).astype(dt)),
+            "w": jnp.asarray(rng.normal(size=(k, n)).astype(dt)),
+            "bias": jnp.asarray(rng.normal(size=(n,)).astype(dt)),
+            "keep_mask": jnp.asarray(rng.random((m, n)) > dropout),
+            "residual": jnp.asarray(rng.normal(size=(m, n)).astype(dt)),
+            "gamma": jnp.asarray(rng.normal(size=(n,)).astype(dt)),
+            "beta": jnp.asarray(rng.normal(size=(n,)).astype(dt)),
+        }
+
+        # ---- wall: fused (one jit) vs unfused (jit per op) ---------------
+        fused_fn = jax.jit(fusion.compile(graph, path="xla"))
+        t_fused = _bench(lambda: fused_fn(**ops), iters=5 if smoke else 10)
+
+        gemm, steps = _unfused_chain_fns(graph)
+
+        def unfused():
+            v = gemm(ops["x"], ops["w"])
+            jax.block_until_ready(v)
+            for fn, extra in steps:
+                v = fn(v, *(ops[e] for e in extra))
+                jax.block_until_ready(v)
+            return v
+
+        unfused()  # warm every jit
+        t0 = time.perf_counter()
+        iters = 5 if smoke else 10
+        for _ in range(iters):
+            unfused()
+        t_unfused = (time.perf_counter() - t0) / iters
+
+        # ---- model: fused Pallas plan vs schedule-aware unfused chain ----
+        tiles = pick_tiles(m, k, n, jnp.float32)
+        rep = fusion.graph_cost(graph, m, k, n, tiles=tiles, dtype=dt)
+        unf = fusion.estimate_unfused(graph, m, k, n, dtype=dt, tiles=tiles)
+        model_speedup = unf.total_time / rep.total_time
+        bytes_ratio = unf.hbm_bytes / rep.hbm_bytes
+
+        rows.append((
+            f"fusion_bert_output_{m}x{k}x{n}",
+            t_fused * 1e6,
+            f"wall_fused_vs_unfused={t_unfused / t_fused:.2f}"
+            f";model_fused_vs_unfused={model_speedup:.2f}"
+            f";model_bytes_ratio={bytes_ratio:.2f}"
+            f";spec={rep.spec};bound={rep.bound}",
+        ))
+
+        # ---- autotuned fused nest (model-ranked) -------------------------
+        results = fusion.autotune_graph(graph, m, k, n, tiles=tiles,
+                                        max_candidates=20 if smoke else 60)
+        if results:
+            best = results[0]
+            rows.append((
+                f"fusion_autotune_{m}x{k}x{n}",
+                best.report.total_time * 1e6,
+                f"best_spec={best.candidate.spec_string}"
+                f";gflops={best.report.gflops:.0f}"
+                f";candidates={len(results)}",
+            ))
+
+        if smoke:
+            # parity vs the hand-written kernel (interpret mode)
+            from repro.kernels.fused_output import fused_output_ref
+            sm, sk, sn = 64, 128, 256
+            sops = {
+                "x": ops["x"][:sm, :sk], "w": ops["w"][:sk, :sn],
+                "bias": ops["bias"][:sn],
+                "keep_mask": ops["keep_mask"][:sm, :sn],
+                "residual": ops["residual"][:sm, :sn],
+                "gamma": ops["gamma"][:sn], "beta": ops["beta"][:sn],
+            }
+            pal = fusion.compile(graph, path="pallas", tiles=(16, 32, 64),
+                                 interpret=True)(**sops)
+            want = fused_output_ref(
+                sops["x"], sops["w"], sops["bias"], sops["residual"],
+                sops["gamma"], sops["beta"], keep_mask=sops["keep_mask"],
+                dropout_rate=dropout)
+            err = float(np.max(np.abs(np.asarray(pal) - np.asarray(want))))
+            assert err < 1e-4, f"fused Pallas vs hand-written oracle: {err}"
+            rows.append((f"fusion_parity_{sm}x{sk}x{sn}", 0.0,
+                         f"max_err_vs_handwritten={err:.2e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes + interpret-mode parity check")
+    args = ap.parse_args()
+    for r in run(smoke=args.smoke):
+        print(",".join(map(str, r)))

@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the full pytest suite plus a smoke run of the fusion
+# benchmark, so the fused-kernel path is exercised on every PR.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q "$@"
+python benchmarks/bench_fusion.py --smoke

@@ -67,6 +67,7 @@ class ModelConfig:
 
     # misc
     norm: str = "rmsnorm"           # rmsnorm | layernorm
+    use_fusion: bool = False        # build layers via repro.fusion TppGraphs
     gated_mlp: bool = True
     mlp_activation: str = "silu"
     tie_embeddings: bool = False

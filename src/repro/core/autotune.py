@@ -180,6 +180,7 @@ def autotune(
     flops_per_body: float,
     tile_mnk=None,
     reduction_letters: Sequence[str] = (),
+    epilogue_flops: float = 0.0,
     max_blockings: Optional[Sequence[int]] = None,
     parallel_letters: Sequence[str] = (),
     mesh_decomp: Sequence[tuple[str, str, int]] = (),
@@ -213,6 +214,7 @@ def autotune(
             tl.nest, in_maps, out_map,
             dtype=dtype, flops_per_body=flops_per_body, tile_mnk=tile_mnk,
             target=target, reduction_letters=reduction_letters,
+            epilogue_flops=epilogue_flops,
         )
         results.append(TuneResult(c, rep))
     results.sort(key=lambda r: -r.score)

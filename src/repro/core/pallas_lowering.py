@@ -37,8 +37,16 @@ from repro.core.loops import Level, LoopNest
 
 __all__ = [
     "TensorMap", "PallasPlan", "plan_pallas", "make_pallas_fn",
-    "validate_reduction_innermost",
+    "validate_reduction_innermost", "tpu_compiler_params",
 ]
+
+# jax renamed TPUCompilerParams → CompilerParams across 0.4.x/0.5.x; accept both
+_COMPILER_PARAMS_CLS = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None))
+
+
+def tpu_compiler_params(**kw):
+    return _COMPILER_PARAMS_CLS(**kw)
 
 
 def validate_reduction_innermost(nest: LoopNest, out_letters, reduction_letters):
@@ -230,7 +238,7 @@ def make_pallas_fn(
         ind = plan.logical_index_fn()
         body(ind, *refs)
 
-    compiler_params = pltpu.CompilerParams(
+    compiler_params = tpu_compiler_params(
         dimension_semantics=plan.dimension_semantics,
         vmem_limit_bytes=vmem_limit_bytes,
     )

@@ -50,6 +50,7 @@ class TpuTarget:
     peak_flops_fp32: float = 49.25e12   # MXU native bf16; fp32 at 1/4
     hbm_bw: float = 819e9               # B/s
     vmem_bytes: int = 128 * 2 ** 20
+    vpu_flops: float = 3.2e12           # vector unit (fused-epilogue TPPs)
     ici_bw: float = 50e9                # B/s per link
     dma_latency: float = 1.0e-6         # per block-change overhead (s)
     num_cores: int = 1                  # v5e has one TensorCore (no megacore)
@@ -128,10 +129,20 @@ def predict(
     tile_mnk: Optional[tuple[int, int, int]] = None,
     target: TpuTarget = TpuTarget(),
     reduction_letters: Sequence[str] = (),
+    epilogue_flops: float = 0.0,
+    scratch_bytes: float = 0.0,
     mode: str = "analytic",
     trace_limit: int = 2_000_000,
 ) -> PerfReport:
-    """Predict the execution profile of one device's share of the nest."""
+    """Predict the execution profile of one device's share of the nest.
+
+    ``epilogue_flops`` is the total elementwise work of TPPs fused onto the
+    contraction's output tiles (``fusion`` subsystem); it runs on the VPU and
+    overlaps DMA but not the MXU, so it adds to compute time at
+    ``target.vpu_flops``.  The fused epilogue's *operand* traffic is already
+    captured by passing its TensorMaps in ``in_maps``; ``scratch_bytes`` is
+    the kernel's VMEM scratch footprint (fp32 accumulator, norm row panel)
+    counted against the VMEM feasibility budget."""
     db = _dtype_bytes(dtype)
     trips = _local_trips(nest)
     total_steps = math.prod(trips)
@@ -144,7 +155,7 @@ def predict(
     if mode == "trace" and total_steps <= trace_limit:
         # Paper-faithful LRU walk.  Budget: VMEM minus double buffers.
         resident_budget = max(
-            0, target.vmem_bytes - 2 * sum(block_bytes)
+            0, target.vmem_bytes - 2 * sum(block_bytes) - int(scratch_bytes)
         )
         lru: OrderedDict = OrderedDict()
         lru_bytes = 0
@@ -206,9 +217,12 @@ def predict(
     eff = mxu_efficiency(*tile_mnk) if tile_mnk else 1.0
     peak = target.peak_flops(db) * eff
     compute_time = flops / peak
+    if epilogue_flops:
+        compute_time += epilogue_flops / target.vpu_flops
+        flops += epilogue_flops
 
     # ---- VMEM feasibility -------------------------------------------------
-    ws = 2 * sum(block_bytes)
+    ws = 2 * sum(block_bytes) + scratch_bytes
     if ws > target.vmem_bytes:
         notes.append(
             f"working set {ws/2**20:.1f}MiB exceeds VMEM "

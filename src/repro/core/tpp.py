@@ -48,11 +48,19 @@ def brgemm(a, b, c=None, *, beta: float = 1.0, accum_dtype=jnp.float32,
         a = a[None]
     if b.ndim == 2:
         b = b[None]
-    acc = jax.lax.dot_general(
-        a, b,
-        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
-        preferred_element_type=accum_dtype,
-    ).sum(axis=0)
+    if a.shape[0] == 1 and b.shape[0] == 1:
+        # batch-reduce count 1: skip the batch dim (XLA's plain GEMM path)
+        acc = jax.lax.dot_general(
+            a[0], b[0],
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=accum_dtype,
+        )
+    else:
+        acc = jax.lax.dot_general(
+            a, b,
+            dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=accum_dtype,
+        ).sum(axis=0)
     if c is not None and beta != 0.0:
         acc = acc + beta * c.astype(accum_dtype)
     out_dtype = out_dtype or (c.dtype if c is not None else a.dtype)

@@ -1,0 +1,21 @@
+"""TPP-chain fusion compiler: declarative epilogue graphs lowered to single
+Pallas kernels.  See README.md in this directory for the design."""
+from repro.fusion.graph import (EPILOGUE_OPS, EpilogueOp, FusionLegalityError,
+                                Node, OperandSpec, TppGraph,
+                                register_epilogue)
+from repro.fusion.lowering import (DEFAULT_SPEC, compile, compile_for_backend,
+                                   validate_epilogue_band)
+from repro.fusion.cost import (autotune_graph, estimate_unfused, graph_cost,
+                               schedule_kwargs, UnfusedEstimate)
+from repro.fusion.library import (fused_mlp_apply, fused_mlp_graph,
+                                  fused_output_apply, fused_output_graph)
+
+__all__ = [
+    "TppGraph", "Node", "OperandSpec", "EpilogueOp", "EPILOGUE_OPS",
+    "register_epilogue", "FusionLegalityError",
+    "compile", "compile_for_backend", "validate_epilogue_band", "DEFAULT_SPEC",
+    "graph_cost", "autotune_graph", "estimate_unfused", "UnfusedEstimate",
+    "schedule_kwargs",
+    "fused_output_graph", "fused_mlp_graph", "fused_output_apply",
+    "fused_mlp_apply",
+]

@@ -1,0 +1,226 @@
+"""Cost path for TppGraphs — perf-model scoring and end-to-end autotuning of
+the fused nest (paper Fig. 1 Box B3, extended to fused epilogues).
+
+Fusing the epilogue changes the traffic picture in two ways the base GEMM
+model does not see:
+
+  * the epilogue operands (residual tiles, masks, row vectors) ride the same
+    nest and add HBM fetches — they enter ``perf_model.predict`` as extra
+    ``TensorMap``s built by ``lowering.build_nest_inputs``;
+  * the epilogue itself costs VPU (vector unit) time proportional to the
+    output elements — ``predict``'s ``epilogue_flops`` term.
+
+What fusion *saves* is the unfused chain's intermediate round-trips: each
+stand-alone epilogue op re-reads and re-writes the (M, N) activation from
+HBM.  ``estimate_unfused`` prices that chain so benchmarks and the tuner can
+report the fused-vs-unfused delta.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import autotune, perf_model
+from repro.core.loops import LegalityError, ThreadedLoop
+from repro.fusion import lowering
+from repro.fusion.graph import EPILOGUE_OPS, TppGraph
+
+__all__ = ["graph_cost", "autotune_graph", "estimate_unfused",
+           "UnfusedEstimate", "schedule_kwargs"]
+
+
+def schedule_kwargs(candidate: autotune.Candidate) -> dict:
+    """Turn an ``autotune_graph`` winner into ``fusion.compile`` kwargs —
+    multi-level blockings live in the candidate's loops, not the spec string:
+
+        best = fusion.autotune_graph(g, m, k, n, ...)[0]
+        fn = fusion.compile(g, **fusion.schedule_kwargs(best.candidate))
+    """
+    return {
+        "spec_string": candidate.spec_string,
+        "block_steps": {
+            letter: tuple(loop.block_steps)
+            for letter, loop in zip("abc", candidate.loops)
+            if loop.block_steps
+        },
+    }
+
+
+def _epilogue_flops(graph: TppGraph, m: int, n: int) -> float:
+    return graph.epilogue_flops_per_elem() * m * n
+
+
+def _scratch_bytes(graph: TppGraph, nest, tiles, n: int) -> int:
+    """VMEM scratch the fused kernel allocates: fp32 accumulator tile plus,
+    for normalizing epilogues, the full-row panel and stats strip (mirrors
+    ``lowering._compile_pallas``)."""
+    bm, bk, bn = tiles
+    acc_m = nest.innermost_step("b") * bm
+    acc_n = nest.innermost_step("c") * bn
+    sb = acc_m * acc_n * 4
+    if graph.reducing_node() is not None:
+        sb += acc_m * n * 4 + acc_m * 2 * 4
+    return sb
+
+
+def graph_cost(
+    graph: TppGraph,
+    m: int, k: int, n: int,
+    *,
+    tiles: tuple[int, int, int],
+    dtype,
+    spec_string: str = lowering.DEFAULT_SPEC,
+    block_steps: Optional[dict] = None,
+    target: perf_model.TpuTarget = perf_model.TpuTarget(),
+    mode: str = "analytic",
+) -> perf_model.PerfReport:
+    """Predict one fused-nest schedule, epilogue traffic + VPU time included."""
+    bm, bk, bn = tiles
+    loops, in_maps, out_map = lowering.build_nest_inputs(
+        graph, m, k, n, tiles, block_steps)
+    tl = ThreadedLoop(loops, spec_string, reduction_letters=("a",))
+    lowering.validate_reduction_innermost(tl.nest, ("b", "c"), ("a",))
+    lowering.validate_epilogue_band(tl.nest, graph)
+    return perf_model.predict(
+        tl.nest, in_maps, out_map,
+        dtype=dtype,
+        flops_per_body=2.0 * bm * bn * bk,
+        tile_mnk=(bm, bn, bk),
+        target=target,
+        reduction_letters=("a",),
+        epilogue_flops=_epilogue_flops(graph, m, n),
+        scratch_bytes=_scratch_bytes(graph, tl.nest, tiles, n),
+        mode=mode,
+    )
+
+
+def autotune_graph(
+    graph: TppGraph,
+    m: int, k: int, n: int,
+    *,
+    tiles: Optional[tuple[int, int, int]] = None,
+    dtype=np.float32,
+    parallel_letters: Sequence[str] = ("b", "c"),
+    max_blockings: Optional[Sequence[int]] = None,
+    max_candidates: int = 200,
+    target: perf_model.TpuTarget = perf_model.TpuTarget(),
+    seed: int = 0,
+) -> list[autotune.TuneResult]:
+    """Tune the fused nest end-to-end: enumerate loop_spec_strings under the
+    paper's constraint grammar, drop candidates that are illegal *for this
+    graph* (epilogue band conflicts), score the rest with the fused perf
+    model.  Returns results best-first; feed the winner's spec back into
+    ``fusion.compile(graph, spec_string=...)``."""
+    if tiles is None:
+        import jax.numpy as jnp
+        from repro.kernels.brgemm import pick_tiles
+        tiles = pick_tiles(m, k, n, jnp.dtype(dtype))
+    bm, bk, bn = tiles
+    loops, in_maps, out_map = lowering.build_nest_inputs(graph, m, k, n, tiles)
+    # a normalizing epilogue forbids PARALLEL semantics on the N loop
+    if graph.reducing_node() is not None:
+        parallel_letters = tuple(l for l in parallel_letters if l != "c")
+    cands = autotune.generate_candidates(
+        loops,
+        max_blockings=list(max_blockings) if max_blockings else [2] * len(loops),
+        parallel_letters=parallel_letters,
+        max_candidates=max_candidates,
+        seed=seed,
+    )
+    results = []
+    for c in cands:
+        tl = autotune.cached_threaded_loop(
+            c.loops, c.spec_string, reduction_letters=("a",))
+        try:
+            lowering.validate_reduction_innermost(tl.nest, ("b", "c"), ("a",))
+            lowering.validate_epilogue_band(tl.nest, graph)
+        except LegalityError:
+            # graph-illegal for this schedule (band/parallel/mesh conflicts)
+            continue
+        rep = perf_model.predict(
+            tl.nest, in_maps, out_map,
+            dtype=dtype,
+            flops_per_body=2.0 * bm * bn * bk,
+            tile_mnk=(bm, bn, bk),
+            target=target,
+            reduction_letters=("a",),
+            epilogue_flops=_epilogue_flops(graph, m, n),
+            scratch_bytes=_scratch_bytes(graph, tl.nest, tiles, n),
+        )
+        results.append(autotune.TuneResult(c, rep))
+    results.sort(key=lambda r: -r.score)
+    return results
+
+
+# ---------------------------------------------------------------------------
+# The unfused comparison chain
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class UnfusedEstimate:
+    """Price of running the graph as one GEMM plus one HBM round-trip per
+    epilogue op (what XLA-on-CPU or an op-by-op runtime would do at size)."""
+
+    gemm_time: float
+    epilogue_time: float
+    hbm_bytes: float
+    total_time: float
+    per_op: dict
+
+
+def estimate_unfused(
+    graph: TppGraph,
+    m: int, k: int, n: int,
+    *,
+    dtype,
+    tiles: Optional[tuple[int, int, int]] = None,
+    spec_string: str = lowering.DEFAULT_SPEC,
+    target: perf_model.TpuTarget = perf_model.TpuTarget(),
+) -> UnfusedEstimate:
+    db = np.dtype(dtype).itemsize
+    act_bytes = m * n * db
+
+    if tiles is not None:
+        # price the stand-alone GEMM with the same schedule-aware model the
+        # fused nest is scored with (apples-to-apples refetch traffic)
+        gemm_graph = TppGraph(
+            name=f"{graph.name}_gemm_only",
+            operands=(dataclasses.replace(graph.lhs),
+                      dataclasses.replace(graph.rhs)))
+        rep = graph_cost(gemm_graph, m, k, n, tiles=tiles, dtype=dtype,
+                         spec_string=spec_string, target=target)
+        gemm_time, gemm_bytes = rep.total_time, rep.hbm_bytes
+    else:
+        gemm_flops = 2.0 * m * n * k
+        gemm_bytes = (m * k + k * n + m * n) * db
+        gemm_time = max(gemm_flops / target.peak_flops(db),
+                        gemm_bytes / target.hbm_bw)
+
+    per_op = {}
+    ep_time = 0.0
+    ep_bytes = 0.0
+    for nd in graph.nodes:
+        op = EPILOGUE_OPS[nd.op]
+        operand_bytes = 0
+        for ref in nd.inputs:
+            try:
+                spec = graph.operand(ref)
+            except KeyError:
+                continue  # chained value — already on HBM, counted as read
+            operand_bytes += (m * n if spec.kind in ("tile", "mask") else n) * db
+        bytes_op = 2 * act_bytes + operand_bytes      # read + write the act
+        flops_op = op.flops_per_elem * m * n
+        t = max(bytes_op / target.hbm_bw, flops_op / target.vpu_flops)
+        per_op[nd.name] = t
+        ep_time += t
+        ep_bytes += bytes_op
+
+    return UnfusedEstimate(
+        gemm_time=gemm_time,
+        epilogue_time=ep_time,
+        hbm_bytes=gemm_bytes + ep_bytes,
+        total_time=gemm_time + ep_time,
+        per_op=per_op,
+    )

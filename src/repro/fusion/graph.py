@@ -1,0 +1,329 @@
+"""TppGraph — declarative IR for TPP-chain fusion (paper §IV-A, Listing 6).
+
+A graph is **one contraction root** (a GEMM over flat 2D operands, the
+BRGEMM/GEMM TPP) plus an **epilogue DAG** of unary/binary/normalization TPPs
+applied to the contraction result while it is still VMEM-resident.  This is
+exactly the paper's fused-layer shape: "chains of TPPs" inside one PARLOOPER
+nest, where every operator after the contraction works at small 2D-block
+granularity "to maximize the out-of-cache reuse of tensors among subsequent
+operators".
+
+The IR is deliberately tiny:
+
+  * ``OperandSpec`` — a named graph input with a *kind* that fixes its shape
+    role relative to the contraction ``C[M,N] = A[M,K] @ B[K,N]``:
+      - ``lhs``    (M, K)   contraction A
+      - ``rhs``    (K, N)   contraction B
+      - ``tile``   (M, N)   elementwise epilogue operand (residual, …)
+      - ``mask``   (M, N)   boolean epilogue operand (dropout keep-mask)
+      - ``rowvec`` (N,)     row-broadcast vector (bias, gamma, beta)
+  * ``Node`` — one epilogue TPP application; inputs name either the
+    contraction result (``"acc"``), earlier nodes, or operands.
+  * ``TppGraph`` — operands + topologically ordered nodes.  The last node's
+    value is the graph output.  At most one node may *reduce* (layernorm /
+    rmsnorm / softmax over the N axis), and it must be the last node — the
+    lowering handles it with the row-panel statistics trick.
+
+Epilogue TPPs are drawn from a fixed registry (``EPILOGUE_OPS``) whose
+``apply`` functions operate on fp32 values — the same functions run in the XLA
+reference path (on full arrays) and inside the Pallas kernel body (on VMEM
+tiles), which is what makes the two lowerings agree bit-for-bit up to
+contraction blocking order.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tpp
+from repro.core.loops import LegalityError
+
+__all__ = [
+    "FusionLegalityError", "OperandSpec", "Node", "TppGraph",
+    "EpilogueOp", "EPILOGUE_OPS", "register_epilogue",
+]
+
+OPERAND_KINDS = ("lhs", "rhs", "tile", "mask", "rowvec")
+
+
+class FusionLegalityError(LegalityError):
+    """Raised when a TppGraph is malformed or cannot be lowered onto the
+    requested loop nest (e.g. a normalizing epilogue whose reduction axis
+    conflicts with the nest's innermost band)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class OperandSpec:
+    name: str
+    kind: str
+
+    def __post_init__(self):
+        if self.kind not in OPERAND_KINDS:
+            raise FusionLegalityError(
+                f"operand {self.name!r}: unknown kind {self.kind!r}; "
+                f"expected one of {OPERAND_KINDS}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Node:
+    """One epilogue TPP application.  ``inputs`` are value names: ``"acc"``,
+    an earlier node's name, or an operand name.  ``attrs`` are static op
+    parameters (e.g. dropout rate, norm eps) as a sorted kv tuple."""
+
+    name: str
+    op: str
+    inputs: tuple[str, ...]
+    attrs: tuple[tuple[str, Any], ...] = ()
+
+    def attr_dict(self) -> dict:
+        return dict(self.attrs)
+
+
+# ---------------------------------------------------------------------------
+# Epilogue op registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EpilogueOp:
+    """A registered epilogue TPP.
+
+    ``value_arity``     — how many leading inputs are *values* (acc / node
+                          outputs / ``tile``/``mask`` operands);
+    ``operand_kinds``   — kinds of the trailing inputs, which must be graph
+                          operands (e.g. ``("rowvec",)`` for bias_add);
+    ``reduces``         — ``None`` for pointwise ops, ``"n"`` when the op
+                          reduces over the feature (N) axis and therefore
+                          needs the full row resident;
+    ``apply``           — fp32 tile semantics, shared by every lowering path;
+    ``flops_per_elem``  — rough VPU flop count per output element, consumed
+                          by the perf model's fused-epilogue term.
+    """
+
+    name: str
+    value_arity: int
+    operand_kinds: tuple[str, ...]
+    apply: Callable
+    reduces: Optional[str] = None
+    flops_per_elem: float = 1.0
+
+
+EPILOGUE_OPS: dict[str, EpilogueOp] = {}
+
+
+def register_epilogue(op: EpilogueOp):
+    EPILOGUE_OPS[op.name] = op
+    return op
+
+
+def _f32(x):
+    return x.astype(jnp.float32)
+
+
+def _dropout_apply(v, mask, *, rate: float = 0.0):
+    if rate <= 0.0:
+        return v
+    return jnp.where(mask, v * (1.0 / (1.0 - rate)), jnp.zeros((), v.dtype))
+
+
+def _layernorm_apply(v, gamma, beta, *, eps: float = 1e-5):
+    mu = jnp.mean(v, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(v - mu), axis=-1, keepdims=True)
+    y = (v - mu) * jax.lax.rsqrt(var + eps)
+    return y * _f32(gamma) + _f32(beta)
+
+
+def _rmsnorm_apply(v, gamma, *, eps: float = 1e-6):
+    ms = jnp.mean(jnp.square(v), axis=-1, keepdims=True)
+    return v * jax.lax.rsqrt(ms + eps) * _f32(gamma)
+
+
+def _softmax_apply(v):
+    m = jnp.max(v, axis=-1, keepdims=True)
+    e = jnp.exp(v - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+# Pointwise unary TPPs (fp32-in, fp32-out inside the fused region).
+register_epilogue(EpilogueOp("identity", 1, (), lambda v: v, flops_per_elem=0.0))
+register_epilogue(EpilogueOp("relu", 1, (), lambda v: jnp.maximum(v, 0.0)))
+register_epilogue(EpilogueOp("gelu", 1, (), tpp.gelu, flops_per_elem=10.0))
+register_epilogue(EpilogueOp("silu", 1, (), tpp.silu, flops_per_elem=5.0))
+register_epilogue(EpilogueOp(
+    "sigmoid", 1, (), lambda v: jax.nn.sigmoid(v), flops_per_elem=4.0))
+register_epilogue(EpilogueOp(
+    "scale", 1, (), lambda v, *, s: v * s, flops_per_elem=1.0))
+
+# Binary TPPs over two (M, N) values.
+register_epilogue(EpilogueOp("add", 2, (), lambda a, b: a + b))
+register_epilogue(EpilogueOp("sub", 2, (), lambda a, b: a - b))
+register_epilogue(EpilogueOp("mul", 2, (), lambda a, b: a * b))
+register_epilogue(EpilogueOp(
+    "residual_add", 1, ("tile",), lambda v, r: v + _f32(r)))
+
+# Row-broadcast vector TPPs.
+register_epilogue(EpilogueOp(
+    "bias_add", 1, ("rowvec",), lambda v, b: v + _f32(b)))
+register_epilogue(EpilogueOp(
+    "scale_rowvec", 1, ("rowvec",), lambda v, s: v * _f32(s)))
+
+# Masked dropout (pre-generated keep-mask, counter-based bits upstream).
+register_epilogue(EpilogueOp(
+    "dropout", 1, ("mask",), _dropout_apply, flops_per_elem=2.0))
+
+# Normalizations over the feature axis — row-panel epilogues.
+register_epilogue(EpilogueOp(
+    "layernorm", 1, ("rowvec", "rowvec"), _layernorm_apply,
+    reduces="n", flops_per_elem=6.0))
+register_epilogue(EpilogueOp(
+    "rmsnorm", 1, ("rowvec",), _rmsnorm_apply, reduces="n",
+    flops_per_elem=4.0))
+register_epilogue(EpilogueOp(
+    "softmax", 1, (), _softmax_apply, reduces="n", flops_per_elem=7.0))
+
+
+# ---------------------------------------------------------------------------
+# The graph
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TppGraph:
+    """One contraction root + an epilogue DAG of TPP nodes.
+
+    ``operands`` must contain exactly one ``lhs`` and one ``rhs``; ``nodes``
+    are in topological order and the last node's value is the graph output
+    (an empty epilogue returns the contraction result itself).
+    """
+
+    name: str
+    operands: tuple[OperandSpec, ...]
+    nodes: tuple[Node, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "operands", tuple(self.operands))
+        object.__setattr__(self, "nodes", tuple(self.nodes))
+        self.validate()
+
+    # -- views ----------------------------------------------------------
+    def operand(self, name: str) -> OperandSpec:
+        for o in self.operands:
+            if o.name == name:
+                return o
+        raise KeyError(name)
+
+    @property
+    def lhs(self) -> OperandSpec:
+        return next(o for o in self.operands if o.kind == "lhs")
+
+    @property
+    def rhs(self) -> OperandSpec:
+        return next(o for o in self.operands if o.kind == "rhs")
+
+    @property
+    def epilogue_operands(self) -> tuple[OperandSpec, ...]:
+        return tuple(o for o in self.operands if o.kind not in ("lhs", "rhs"))
+
+    def reducing_node(self) -> Optional[Node]:
+        for nd in self.nodes:
+            if EPILOGUE_OPS[nd.op].reduces is not None:
+                return nd
+        return None
+
+    @property
+    def operand_names(self) -> tuple[str, ...]:
+        return tuple(o.name for o in self.operands)
+
+    def epilogue_flops_per_elem(self) -> float:
+        """Summed per-output-element VPU flop estimate of the epilogue DAG —
+        the perf model's fused-epilogue compute term."""
+        return float(sum(EPILOGUE_OPS[nd.op].flops_per_elem for nd in self.nodes))
+
+    # -- validation ------------------------------------------------------
+    def validate(self):
+        kinds = [o.kind for o in self.operands]
+        if kinds.count("lhs") != 1 or kinds.count("rhs") != 1:
+            raise FusionLegalityError(
+                f"graph {self.name!r}: need exactly one lhs and one rhs "
+                f"operand, got kinds {kinds}")
+        names = [o.name for o in self.operands]
+        if len(set(names)) != len(names):
+            raise FusionLegalityError(f"graph {self.name!r}: duplicate operand names")
+
+        visible = {"acc"} | set(names)
+        for i, nd in enumerate(self.nodes):
+            op = EPILOGUE_OPS.get(nd.op)
+            if op is None:
+                raise FusionLegalityError(
+                    f"graph {self.name!r}: node {nd.name!r} uses unregistered "
+                    f"epilogue op {nd.op!r}")
+            want = op.value_arity + len(op.operand_kinds)
+            if len(nd.inputs) != want:
+                raise FusionLegalityError(
+                    f"graph {self.name!r}: node {nd.name!r} ({nd.op}) takes "
+                    f"{want} inputs, got {len(nd.inputs)}")
+            for ref in nd.inputs:
+                if ref not in visible:
+                    raise FusionLegalityError(
+                        f"graph {self.name!r}: node {nd.name!r} references "
+                        f"unknown value {ref!r} (nodes must be topologically "
+                        "ordered)")
+            # trailing inputs must be operands of the declared kinds
+            for ref, kind in zip(nd.inputs[op.value_arity:], op.operand_kinds):
+                try:
+                    spec = self.operand(ref)
+                except KeyError:
+                    raise FusionLegalityError(
+                        f"graph {self.name!r}: node {nd.name!r} ({nd.op}) "
+                        f"input {ref!r} must be a graph operand of kind "
+                        f"{kind!r}") from None
+                if spec.kind != kind:
+                    raise FusionLegalityError(
+                        f"graph {self.name!r}: node {nd.name!r} ({nd.op}) "
+                        f"expects a {kind!r} operand, {ref!r} is {spec.kind!r}")
+            if op.reduces is not None and i != len(self.nodes) - 1:
+                raise FusionLegalityError(
+                    f"graph {self.name!r}: reducing node {nd.name!r} "
+                    f"({nd.op}) must be the last epilogue node — its output "
+                    "needs the full row resident (row-panel epilogue)")
+            if nd.name in visible:
+                raise FusionLegalityError(
+                    f"graph {self.name!r}: node name {nd.name!r} shadows an "
+                    "earlier value")
+            visible.add(nd.name)
+
+    # -- convenience builder --------------------------------------------
+    @classmethod
+    def chain(cls, name: str, ops: list, operands: list) -> "TppGraph":
+        """Build a straight-line graph: each entry of ``ops`` is
+        ``(op_name, extra_input_names, attrs_dict)`` (or just the op name),
+        chained on the previous value starting from ``"acc"``."""
+        specs = tuple(OperandSpec(n, k) for n, k in operands)
+        nodes, prev = [], "acc"
+        for i, entry in enumerate(ops):
+            if isinstance(entry, str):
+                op_name, extra, attrs = entry, (), {}
+            else:
+                op_name, extra, attrs = entry
+            nd = Node(
+                name=f"n{i}_{op_name}",
+                op=op_name,
+                inputs=(prev, *extra),
+                attrs=tuple(sorted(attrs.items())),
+            )
+            nodes.append(nd)
+            prev = nd.name
+        return cls(name=name, operands=specs, nodes=tuple(nodes))
+
+    def describe(self) -> str:
+        out = [f"TppGraph {self.name!r}:"]
+        out.append("  acc = gemm(%s, %s)" % (self.lhs.name, self.rhs.name))
+        for nd in self.nodes:
+            attrs = ", ".join(f"{k}={v}" for k, v in nd.attrs)
+            out.append(
+                f"  {nd.name} = {nd.op}({', '.join(nd.inputs)}"
+                + (f"; {attrs}" if attrs else "") + ")")
+        last = self.nodes[-1].name if self.nodes else "acc"
+        out.append(f"  return {last}")
+        return "\n".join(out)

@@ -1,0 +1,358 @@
+"""Lower a ``TppGraph`` three ways (paper Fig. 1):
+
+  * ``path="xla"``    — the reference: compose the ``core.tpp`` functions on
+    full arrays and let XLA fuse them (the paper's "straightforward"
+    framework path);
+  * ``path="pallas"`` — ONE fused Pallas kernel: the contraction runs under a
+    PARLOOPER ``loop_spec_string`` (letters ``a``=K reduction, ``b``=M,
+    ``c``=N, exactly ``kernels.brgemm``), the epilogue DAG is applied to the
+    fp32 accumulator tile while it is VMEM-resident, and normalizing
+    epilogues (layernorm / rmsnorm / softmax over N) use the row-panel
+    statistics trick of ``kernels.fused_output``: the pre-norm row panel is
+    staged in VMEM scratch, (sum, sum-of-squares) statistics accumulate per
+    N tile, and the normalization equation is applied to the finished panel
+    on the last N visit;
+  * the cost path lives in ``fusion.cost`` (perf-model + autotune hook).
+
+Legality: besides the usual K-innermost requirement
+(``validate_reduction_innermost``), a normalizing epilogue pins the N loop to
+the nest's innermost band *under* every M level — a row's tiles must be
+visited consecutively for its statistics to close before the panel is reused.
+``validate_epilogue_band`` diagnoses schedules that violate this instead of
+producing silently wrong kernels (the paper leaves such legality to the user).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import tpp
+from repro.core.loops import LoopSpec, ThreadedLoop
+from repro.core.pallas_lowering import (TensorMap, make_pallas_fn, plan_pallas,
+                                        validate_reduction_innermost)
+from repro.fusion.graph import (EPILOGUE_OPS, FusionLegalityError, TppGraph)
+
+__all__ = [
+    "compile", "compile_for_backend", "validate_epilogue_band",
+    "build_nest_inputs", "DEFAULT_SPEC",
+]
+
+DEFAULT_SPEC = "bca"  # M, N outer; K (reduction) innermost — output-stationary
+
+
+# ---------------------------------------------------------------------------
+# Legality
+# ---------------------------------------------------------------------------
+
+def validate_epilogue_band(nest, graph: TppGraph, *, m_letter="b", n_letter="c"):
+    """A normalizing epilogue reduces over N; its row panel closes only when
+    all N tiles of a row are visited consecutively.  Reject schedules where
+    any N level sits outside (above) an M level, where the N loop is
+    parallelized (statistics accumulate sequentially), or where N is sharded
+    over a mesh axis (the row statistics would be partial per shard)."""
+    nd = graph.reducing_node()
+    if nd is None:
+        return
+    grid = [(p, l) for p, l in enumerate(nest.levels) if l.mesh_axis is None]
+    m_pos = [p for p, l in grid if l.letter == m_letter]
+    n_pos = [p for p, l in grid if l.letter == n_letter]
+    if m_pos and n_pos and max(m_pos) > min(n_pos):
+        raise FusionLegalityError(
+            f"graph {graph.name!r}: epilogue {nd.op!r} reduces over the N "
+            f"axis but spec {nest.spec.raw!r} places an N loop level (grid "
+            f"position {min(n_pos)}) outside the innermost band (deepest M "
+            f"level at {max(m_pos)}) — row statistics would close before the "
+            "row is complete. Use an N-inside-M order, e.g. 'bca'.")
+    if any(l.parallel for p, l in grid if l.letter == n_letter):
+        raise FusionLegalityError(
+            f"graph {graph.name!r}: epilogue {nd.op!r} reduces over N; the N "
+            f"loop in spec {nest.spec.raw!r} cannot take PARALLEL grid "
+            "semantics (row statistics accumulate sequentially).")
+    if any(l.letter == n_letter for l in nest.mesh_levels):
+        raise FusionLegalityError(
+            f"graph {graph.name!r}: epilogue {nd.op!r} reduces over N; "
+            f"sharding N over a mesh axis in {nest.spec.raw!r} would leave "
+            "per-shard partial row statistics (no cross-shard norm combine).")
+
+
+# ---------------------------------------------------------------------------
+# Shared nest construction (also used by fusion.cost)
+# ---------------------------------------------------------------------------
+
+def build_nest_inputs(graph: TppGraph, m: int, k: int, n: int,
+                      tiles: tuple[int, int, int],
+                      block_steps: Optional[dict] = None):
+    """LoopSpecs + TensorMaps for lowering ``graph`` at problem size
+    (M, K, N) with base tiles (bm, bk, bn).  Operand order is
+    ``[lhs, rhs, *epilogue_operands]`` (graph declaration order); row
+    vectors are fully VMEM-resident ``(1, n)`` blocks, (M, N) operands are
+    tiled with the output."""
+    bm, bk, bn = tiles
+    if m % bm or k % bk or n % bn:
+        raise FusionLegalityError(
+            f"graph {graph.name!r}: problem ({m},{k},{n}) not divisible by "
+            f"tiles ({bm},{bk},{bn})")
+    mb, kb, nb = m // bm, k // bk, n // bn
+    block_steps = block_steps or {}
+    loops = [
+        LoopSpec(0, kb, 1, block_steps=tuple(block_steps.get("a", ())), name="K"),
+        LoopSpec(0, mb, 1, block_steps=tuple(block_steps.get("b", ())), name="M"),
+        LoopSpec(0, nb, 1, block_steps=tuple(block_steps.get("c", ())), name="N"),
+    ]
+    in_maps = [
+        TensorMap(("b", "a"), (bm, bk), layout="flat"),
+        TensorMap(("a", "c"), (bk, bn), layout="flat"),
+    ]
+    for spec in graph.epilogue_operands:
+        if spec.kind in ("tile", "mask"):
+            in_maps.append(TensorMap(("b", "c"), (bm, bn), layout="flat"))
+        else:  # rowvec — whole vector visible every call (norms need full N)
+            in_maps.append(TensorMap((None, None), (1, n), layout="flat"))
+    if graph.reducing_node() is not None:
+        out_map = TensorMap(("b", None), (bm, n), layout="flat")
+    else:
+        out_map = TensorMap(("b", "c"), (bm, bn), layout="flat")
+    return loops, in_maps, out_map
+
+
+def _pack_operands(graph: TppGraph, operands: dict):
+    """Canonically order ([lhs, rhs, *epilogue-operands]) and reshape
+    call-time operands: rowvecs (n,) → (1, n).  Canonical order is
+    independent of the graph's declaration order — the Pallas lowering's
+    TensorMaps are built in the same order."""
+    packed = []
+    for spec in (graph.lhs, graph.rhs) + graph.epilogue_operands:
+        if spec.name not in operands:
+            raise TypeError(
+                f"graph {graph.name!r}: missing operand {spec.name!r}; "
+                f"expected {graph.operand_names}")
+        v = operands[spec.name]
+        if spec.kind == "rowvec":
+            v = v.reshape(1, -1)
+        packed.append(v)
+    extra = set(operands) - set(graph.operand_names)
+    if extra:
+        raise TypeError(f"graph {graph.name!r}: unexpected operands {sorted(extra)}")
+    return packed
+
+
+# ---------------------------------------------------------------------------
+# Path 1: XLA reference — compose core.tpp functions, let XLA fuse
+# ---------------------------------------------------------------------------
+
+def _compile_xla(graph: TppGraph, *, out_dtype=None):
+    def fn(**operands):
+        _pack_operands(graph, operands)  # validates the operand set
+        x, w = operands[graph.lhs.name], operands[graph.rhs.name]
+        acc = tpp.gemm(x, w, beta=0.0, out_dtype=jnp.float32)
+        env = {"acc": acc}
+
+        def value(ref):
+            if ref in env:
+                return env[ref]
+            spec = graph.operand(ref)
+            v = operands[ref]
+            return v if spec.kind == "mask" else v.astype(jnp.float32)
+
+        for nd in graph.nodes:
+            op = EPILOGUE_OPS[nd.op]
+            env[nd.name] = op.apply(*(value(r) for r in nd.inputs),
+                                    **nd.attr_dict())
+        out = env[graph.nodes[-1].name] if graph.nodes else acc
+        return out.astype(out_dtype or x.dtype)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Path 2: one fused Pallas kernel
+# ---------------------------------------------------------------------------
+
+def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
+                    block_steps=None, out_dtype=None, interpret=False,
+                    mesh=None, vmem_limit_bytes=None):
+    reducing = graph.reducing_node()
+    pre_nodes = tuple(nd for nd in graph.nodes if nd is not reducing)
+    ep_specs = graph.epilogue_operands
+
+    def fn(**operands):
+        packed = _pack_operands(graph, operands)
+        x, w = packed[0], packed[1]
+        m, k = x.shape
+        k2, n = w.shape
+        assert k == k2, (x.shape, w.shape)
+        odt = out_dtype or x.dtype
+        from repro.kernels.brgemm import pick_tiles
+        bm, bk, bn = tiles or pick_tiles(m, k, n, x.dtype)
+        loops, in_maps, out_map = build_nest_inputs(
+            graph, m, k, n, (bm, bk, bn), block_steps)
+        tl = ThreadedLoop(loops, spec_string, reduction_letters=("a",))
+        validate_reduction_innermost(tl.nest, ("b", "c"), ("a",))
+        validate_epilogue_band(tl.nest, graph)
+        plan = plan_pallas(tl.nest, in_maps, out_map, reduction_letters=("a",))
+
+        kb = k // bk
+        nb = n // bn
+        k_step = tl.nest.innermost_step("a")
+        c_step = tl.nest.innermost_step("c")
+        acc_m = tl.nest.innermost_step("b") * bm
+        acc_n = c_step * bn
+        n_ep = len(ep_specs)
+
+        def body(ind, *refs):
+            a_ref, b_ref = refs[0], refs[1]
+            ep_refs = {s.name: r for s, r in zip(ep_specs, refs[2:2 + n_ep])}
+            o_ref = refs[2 + n_ep]
+            scratch = refs[3 + n_ep:]
+            acc_ref = scratch[0]
+            ik = ind["a"]
+            jc = ind["c"]
+
+            # only the strip-statistics norms consume the stats scratch;
+            # softmax-style reducers work off the staged panel alone
+            use_stats = reducing is not None and reducing.op in (
+                "layernorm", "rmsnorm")
+            if reducing is not None:
+                panel_ref, stats_ref = scratch[1], scratch[2]
+
+            if use_stats:
+                @pl.when(jnp.logical_and(jc == 0, ik == 0))
+                def _():
+                    stats_ref[...] = jnp.zeros_like(stats_ref)
+
+            @pl.when(ik == 0)
+            def _():
+                acc_ref[...] = tpp.zero(acc_ref.shape, acc_ref.dtype)
+
+            acc_ref[...] += jax.lax.dot_general(
+                a_ref[...], b_ref[...],
+                dimension_numbers=(((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+
+            # last K visit: run the epilogue DAG on the VMEM-resident tile
+            @pl.when(ik == kb - k_step)
+            def _():
+                env = {"acc": acc_ref[...]}
+
+                def value(ref, full_row=False):
+                    if ref in env:
+                        return env[ref]
+                    spec = graph.operand(ref)
+                    r = ep_refs[ref]
+                    if spec.kind == "rowvec":
+                        v = r[...] if full_row else r[:, pl.ds(jc * bn, acc_n)]
+                        return v.astype(jnp.float32)
+                    v = r[...]
+                    return v if spec.kind == "mask" else v.astype(jnp.float32)
+
+                for nd in pre_nodes:
+                    op = EPILOGUE_OPS[nd.op]
+                    env[nd.name] = op.apply(
+                        *(value(r) for r in nd.inputs), **nd.attr_dict())
+                tail = env[pre_nodes[-1].name] if pre_nodes else env["acc"]
+
+                if reducing is None:
+                    o_ref[...] = tail.astype(o_ref.dtype)
+                    return
+
+                # row-panel statistics trick: stage the pre-norm tile, close
+                # the (sum, sum-sq) strip, normalize the panel on the last
+                # N visit (kernels.fused_output, generalized)
+                panel_ref[:, pl.ds(jc * bn, acc_n)] = tail
+                if use_stats:
+                    stats_ref[:, 0] += jnp.sum(tail, axis=1)
+                    stats_ref[:, 1] += jnp.sum(tail * tail, axis=1)
+
+                @pl.when(jc == nb - c_step)
+                def _():
+                    attrs = reducing.attr_dict()
+                    op = EPILOGUE_OPS[reducing.op]
+                    panel = panel_ref[...]
+                    params = [value(r, full_row=True)
+                              for r in reducing.inputs[op.value_arity:]]
+                    if reducing.op == "layernorm":
+                        mu = stats_ref[:, 0:1] / n
+                        var = jnp.maximum(
+                            stats_ref[:, 1:2] / n - mu * mu, 0.0)
+                        y = (panel - mu) * jax.lax.rsqrt(
+                            var + attrs.get("eps", 1e-5))
+                        y = y * params[0] + params[1]
+                    elif reducing.op == "rmsnorm":
+                        ms = stats_ref[:, 1:2] / n
+                        y = panel * jax.lax.rsqrt(
+                            ms + attrs.get("eps", 1e-6)) * params[0]
+                    else:  # softmax & any panel-wide reducer: full-row apply
+                        y = op.apply(panel, *params, **attrs)
+                    o_ref[...] = y.astype(o_ref.dtype)
+
+        scratch_shapes = [pltpu.VMEM((acc_m, acc_n), jnp.float32)]
+        if reducing is not None:
+            scratch_shapes += [
+                pltpu.VMEM((acc_m, n), jnp.float32),   # pre-norm row panel
+                pltpu.VMEM((acc_m, 2), jnp.float32),   # (sum, sum-sq) strip
+            ]
+
+        db = jnp.dtype(x.dtype).itemsize
+        ep_elems = sum(
+            (m * n if s.kind in ("tile", "mask") else n) for s in ep_specs)
+        call = make_pallas_fn(
+            plan,
+            body,
+            jax.ShapeDtypeStruct((m, n), odt),
+            scratch_shapes=scratch_shapes,
+            interpret=interpret,
+            mesh=mesh,
+            vmem_limit_bytes=vmem_limit_bytes,
+            cost_estimate=pl.CostEstimate(
+                flops=2 * m * n * k + int(
+                    graph.epilogue_flops_per_elem() * m * n),
+                bytes_accessed=(m * k + k * n + ep_elems) * db
+                + m * n * jnp.dtype(odt).itemsize,
+                transcendentals=0,
+            ),
+        )
+        return call(*packed)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def compile(graph: TppGraph, *, path: str = "pallas", **kw):
+    """Lower ``graph`` to a callable ``fn(**operands) -> (M, N) array``.
+
+    ``path="pallas"`` (default) emits one fused Pallas kernel; ``path="xla"``
+    emits the composed-TPP reference.  Keyword options for the Pallas path:
+    ``spec_string``, ``tiles``, ``block_steps``, ``out_dtype``, ``interpret``,
+    ``mesh``, ``vmem_limit_bytes``; the XLA path takes ``out_dtype`` only.
+    """
+    if path == "xla":
+        allowed = {"out_dtype"}
+        bad = set(kw) - allowed
+        if bad:
+            raise TypeError(f"xla path does not accept {sorted(bad)}")
+        return _compile_xla(graph, **kw)
+    if path == "pallas":
+        return _compile_pallas(graph, **kw)
+    raise ValueError(f"unknown lowering path {path!r}; use 'pallas' or 'xla'")
+
+
+def compile_for_backend(graph: TppGraph, backend: Optional[str] = None, **kw):
+    """Pick the lowering path from the active ``kernels.ops`` backend — the
+    hook ``models.blocks`` uses behind the ``use_fusion`` config flag."""
+    from repro.kernels import ops
+    backend = backend or ops.current_backend()
+    if backend == "xla":
+        kw.pop("tiles", None)
+        kw.pop("spec_string", None)
+        kw.pop("block_steps", None)
+        return compile(graph, path="xla", **kw)
+    return compile(graph, path="pallas",
+                   interpret=(backend == "pallas_interpret"), **kw)

@@ -25,6 +25,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.pallas_lowering import tpu_compiler_params
+
 __all__ = ["flash_attention_pallas", "flash_decode_pallas"]
 
 _NEG_INF = -1e30
@@ -129,7 +131,7 @@ def flash_attention_pallas(
             pltpu.VMEM((block_q, 1), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
     )
@@ -224,7 +226,7 @@ def flash_decode_pallas(
             pltpu.VMEM((1, 1), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
     )

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.pallas_lowering import tpu_compiler_params
+
 __all__ = ["mamba_scan_pallas"]
 
 
@@ -99,7 +101,7 @@ def mamba_scan_pallas(
         ],
         scratch_shapes=[pltpu.VMEM((dch, n), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
     )

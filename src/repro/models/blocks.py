@@ -294,7 +294,13 @@ def init_mlp(cfg: ModelConfig, key, d_ff: Optional[int] = None):
 
 def mlp_apply(cfg: ModelConfig, p, x2d):
     """x2d (T, d) → (T, d).  BRGEMM + fused activation epilogue (paper
-    §III-A MLP)."""
+    §III-A MLP).
+
+    With ``cfg.use_fusion`` the non-gated up-projection is built through the
+    TPP-chain fusion compiler (``repro.fusion``): the GEMM → bias →
+    activation chain is declared as a ``TppGraph`` and lowered to one fused
+    Pallas kernel (or the composed-TPP reference on the XLA backend) instead
+    of the hand-parameterized ``ops.matmul`` epilogue."""
     dt = compute_dtype(cfg)
     pw = _cast(p, dt)
     act = cfg.mlp_activation
@@ -302,6 +308,10 @@ def mlp_apply(cfg: ModelConfig, p, x2d):
         g = ops.matmul(x2d, pw["wg"], activation=act)
         u = ops.matmul(x2d, pw["wu"])
         return ops.matmul(tpp.mul(g, u), pw["wd"])
+    if cfg.use_fusion:
+        from repro.fusion import fused_mlp_apply
+        h = fused_mlp_apply(x2d, pw["wu"], pw["bu"], activation=act)
+        return ops.matmul(h, pw["wd"], bias=pw["bd"])
     h = ops.matmul(x2d, pw["wu"], bias=pw["bu"], activation=act)
     return ops.matmul(h, pw["wd"], bias=pw["bd"])
 

@@ -1,0 +1,102 @@
+"""Hypothesis compatibility shim.
+
+The property tests use a small slice of the hypothesis API.  When hypothesis
+is installed we re-export it untouched; otherwise a tiny deterministic
+fallback provides the same surface — ``@given`` runs the test body
+``max_examples`` times with values drawn from a seeded PRNG, so the property
+tests still exercise many cases (just without shrinking / the example
+database).  Import from here instead of ``hypothesis`` directly:
+
+    from _hypothesis_compat import given, settings, st
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback
+    import functools
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_MAX_EXAMPLES = 10
+    _SEED = 0xC0FFEE
+
+    class _Strategy:
+        """A strategy is just a draw function over a PRNG."""
+
+        def __init__(self, draw_fn):
+            self._draw_fn = draw_fn
+
+        def draw(self, rng):
+            return self._draw_fn(rng)
+
+    class _StrategiesShim:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+        @staticmethod
+        def permutations(values):
+            seq = list(values)
+            return _Strategy(lambda rng: rng.sample(seq, len(seq)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def composite(fn):
+            """hypothesis passes ``draw`` as the build function's first
+            argument; here ``draw`` resolves a strategy against the PRNG."""
+
+            @functools.wraps(fn)
+            def builder(*args, **kwargs):
+                def draw_with(rng):
+                    return fn(lambda strat: strat.draw(rng), *args, **kwargs)
+
+                return _Strategy(draw_with)
+
+            return builder
+
+    st = _StrategiesShim()
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                # @settings may be stacked above OR below @given: above sets
+                # the attribute on this wrapper, below on the inner fn
+                n = getattr(wrapper, "_shim_max_examples",
+                            getattr(fn, "_shim_max_examples",
+                                    _DEFAULT_MAX_EXAMPLES))
+                rng = random.Random(_SEED)
+                for _ in range(n):
+                    drawn = tuple(s.draw(rng) for s in strategies)
+                    fn(*args, *drawn, **kwargs)
+
+            # hide the drawn (right-aligned, hypothesis-style) parameters
+            # from pytest's fixture resolution
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            wrapper.__signature__ = sig.replace(
+                parameters=params[: len(params) - len(strategies)])
+            return wrapper
+
+        return deco

@@ -1,0 +1,8 @@
+"""Make ``python -m pytest`` work without the ``PYTHONPATH=src`` incantation:
+the package lives in ``src/`` (no installation step in this environment)."""
+import pathlib
+import sys
+
+_SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

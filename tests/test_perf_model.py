@@ -1,7 +1,7 @@
 """Performance model (§II-E) and auto-tuner (§II-D) behaviour."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import LoopSpec, TensorMap, ThreadedLoop, autotune, perf_model
 
