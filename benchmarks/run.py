@@ -1,5 +1,9 @@
 """Benchmark harness — one module per paper table/figure (DESIGN.md §7).
-Prints ``name,us_per_call,derived`` CSV rows."""
+Prints ``name,us_per_call,derived`` CSV rows.  Modules may additionally write
+machine-readable artifacts (``bench_autotune`` → ``BENCH_autotune.json`` at
+the repo root: configs/sec, generated vs scored vs pruned candidate counts,
+analytic-vs-trace model agreement) so perf trajectories are tracked PR over
+PR; such modules advertise the path via a ``JSON_PATH`` attribute."""
 import sys
 import traceback
 
@@ -22,6 +26,9 @@ def main() -> None:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
             for row in mod.run():
                 print(",".join(str(x) for x in row), flush=True)
+            artifact = getattr(mod, "JSON_PATH", None)
+            if artifact:
+                print(f"# {name}: wrote {artifact}", file=sys.stderr)
         except Exception:
             traceback.print_exc()
             failures += 1

@@ -1,6 +1,8 @@
 #!/usr/bin/env bash
-# Tier-1 verification: the full pytest suite plus a smoke run of the fusion
-# benchmark, so the fused-kernel path is exercised on every PR.
+# Tier-1 verification: the full pytest suite plus smoke runs of the fusion
+# benchmark (fused-kernel path) and the autotune benchmark (streaming search
+# must keep matching the exhaustive baseline's top schedules), so both are
+# exercised on every PR.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -8,3 +10,4 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q "$@"
 python benchmarks/bench_fusion.py --smoke
+REPRO_TUNE_CACHE=0 python benchmarks/bench_autotune.py --smoke

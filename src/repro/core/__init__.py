@@ -5,11 +5,12 @@ from repro.core.loops import LegalityError, LoopSpec, ThreadedLoop
 from repro.core.parser import ParsedSpec, SpecSyntaxError, parse_spec_string
 from repro.core.pallas_lowering import PallasPlan, TensorMap, make_pallas_fn, plan_pallas
 from repro.core.executor import run_nest
-from repro.core import tpp, perf_model, autotune
+from repro.core.loops import loop_signature
+from repro.core import tpp, perf_model, autotune, tunecache
 
 __all__ = [
-    "LegalityError", "LoopSpec", "ThreadedLoop",
+    "LegalityError", "LoopSpec", "ThreadedLoop", "loop_signature",
     "ParsedSpec", "SpecSyntaxError", "parse_spec_string",
     "PallasPlan", "TensorMap", "make_pallas_fn", "plan_pallas",
-    "run_nest", "tpp", "perf_model", "autotune",
+    "run_nest", "tpp", "perf_model", "autotune", "tunecache",
 ]

@@ -18,7 +18,10 @@ from typing import Optional, Sequence
 
 from repro.core.parser import ParsedSpec, SpecSyntaxError, parse_spec_string
 
-__all__ = ["LoopSpec", "Level", "LoopNest", "ThreadedLoop", "LegalityError"]
+__all__ = [
+    "LoopSpec", "Level", "LoopNest", "ThreadedLoop", "LegalityError",
+    "loop_signature",
+]
 
 
 class LegalityError(ValueError):
@@ -52,6 +55,13 @@ class LoopSpec:
     def extent(self) -> int:
         return self.bound - self.start
 
+    @property
+    def signature(self) -> tuple:
+        """Plan-relevant identity of this loop.  Excludes ``name``: two loops
+        that differ only in their label plan identically, so plan/tune caches
+        keyed on signatures share entries across call sites."""
+        return (self.start, self.bound, self.step, self.block_steps)
+
     def steps_for(self, n_occurrences: int) -> tuple[int, ...]:
         """Outer→inner step sizes when this loop appears ``n_occurrences`` times.
 
@@ -68,6 +78,17 @@ class LoopSpec:
             )
         outer = tuple(self.block_steps[:n_blockings])
         return outer + (self.step,)
+
+
+def loop_signature(loops: Sequence["LoopSpec"]) -> str:
+    """Stable, cheap string signature of a declared nest — the hash component
+    shared by the in-memory plan cache (``autotune.cached_threaded_loop``) and
+    the persistent tune cache (``core.tunecache``).  Two nests with equal
+    signatures are interchangeable for planning and tuning."""
+    return ";".join(
+        f"{start}:{bound}:{step}:{','.join(map(str, blocks))}"
+        for start, bound, step, blocks in (l.signature for l in loops)
+    )
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,118 @@
+"""Persistent schedule cache — the paper's JIT plan cache, across processes.
+
+The paper (§II-B) caches JITed loop nests keyed on the spec string inside one
+process; PolyDL-style tuning pays off only when search results survive the
+process.  This module stores *tuning outcomes* (ranked spec strings + blocking
+factors + scores, and measured times when a ``measure_fn`` ran) on disk, keyed
+on everything that determines the search result:
+
+    (loop signature, tensor maps, dtype, flops/tiles, target, epilogue,
+     search parameters, cache schema version)
+
+``autotune`` / ``autotune_graph`` consult the cache before generating a single
+candidate; a hit reconstructs the ranked ``TuneResult`` list from the stored
+specs (re-predicting each report is microseconds — the expensive part was the
+search).  Entries carrying ``measured_s`` (offline-benchmark re-ranking, paper
+Fig. 1 Box B2) are preferred over purely model-ranked entries on hits.
+
+Location: ``$REPRO_TUNE_CACHE_DIR`` if set, else ``~/.cache/repro-tune``.
+Disable globally with ``REPRO_TUNE_CACHE=0`` (or ``off``/``no``/``false``).
+Each entry is one ``<sha256>.json`` file; ``TuneCache.clear()`` or simply
+``rm -r ~/.cache/repro-tune`` resets it (see docs/autotuning.md).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+import time
+from pathlib import Path
+from typing import Optional
+
+__all__ = [
+    "CACHE_VERSION", "TuneCache", "default_cache_dir", "default_cache",
+    "cache_key",
+]
+
+CACHE_VERSION = 1
+
+_DISABLE_VALUES = ("0", "off", "no", "false")
+
+
+def default_cache_dir() -> Path:
+    env = os.environ.get("REPRO_TUNE_CACHE_DIR")
+    if env:
+        return Path(env).expanduser()
+    return Path.home() / ".cache" / "repro-tune"
+
+
+def cache_key(**components) -> str:
+    """sha256 over a canonical JSON rendering of the key components.  Values
+    must be JSON-serializable after a str() fallback (dtypes, targets)."""
+    blob = json.dumps(
+        {"version": CACHE_VERSION, **components},
+        sort_keys=True, default=str, separators=(",", ":"),
+    )
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+class TuneCache:
+    """One directory of ``<key>.json`` tuning entries with atomic writes.
+
+    Lookups tolerate missing/corrupt files (treated as misses) so concurrent
+    writers and interrupted runs can never poison later searches.
+    """
+
+    def __init__(self, path=None):
+        self.path = Path(path) if path is not None else default_cache_dir()
+
+    def _file(self, key: str) -> Path:
+        return self.path / f"{key}.json"
+
+    def lookup(self, key: str) -> Optional[dict]:
+        try:
+            with open(self._file(key)) as f:
+                entry = json.load(f)
+        except (OSError, ValueError):
+            return None
+        if entry.get("version") != CACHE_VERSION:
+            return None
+        return entry
+
+    def store(self, key: str, entry: dict) -> None:
+        entry = {"version": CACHE_VERSION, "stored_at": time.time(), **entry}
+        self.path.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=self.path, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(entry, f, indent=1)
+            os.replace(tmp, self._file(key))
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    def clear(self) -> int:
+        """Remove every entry; returns the number of files deleted."""
+        n = 0
+        if self.path.is_dir():
+            for p in self.path.glob("*.json"):
+                try:
+                    p.unlink()
+                    n += 1
+                except OSError:
+                    pass
+        return n
+
+    def __len__(self) -> int:
+        return len(list(self.path.glob("*.json"))) if self.path.is_dir() else 0
+
+
+def default_cache() -> Optional[TuneCache]:
+    """The process-default cache, or ``None`` when disabled via env."""
+    if os.environ.get("REPRO_TUNE_CACHE", "").strip().lower() in _DISABLE_VALUES:
+        return None
+    return TuneCache()

@@ -23,12 +23,12 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.core import autotune, perf_model
-from repro.core.loops import LegalityError, ThreadedLoop
+from repro.core.loops import ThreadedLoop
 from repro.fusion import lowering
 from repro.fusion.graph import EPILOGUE_OPS, TppGraph
 
 __all__ = ["graph_cost", "autotune_graph", "estimate_unfused",
-           "UnfusedEstimate", "schedule_kwargs"]
+           "UnfusedEstimate", "schedule_kwargs", "graph_signature"]
 
 
 def schedule_kwargs(candidate: autotune.Candidate) -> dict:
@@ -48,6 +48,18 @@ def schedule_kwargs(candidate: autotune.Candidate) -> dict:
     }
 
 
+def graph_signature(graph: TppGraph) -> str:
+    """Stable identity of a graph's cost-relevant structure — the epilogue
+    component of the persistent tune-cache key."""
+    parts = [graph.name]
+    parts += [f"{o.name}:{o.kind}" for o in graph.operands]
+    parts += [
+        f"{nd.name}={nd.op}({','.join(nd.inputs)};{sorted(nd.attrs)})"
+        for nd in graph.nodes
+    ]
+    return "|".join(parts)
+
+
 def _epilogue_flops(graph: TppGraph, m: int, n: int) -> float:
     return graph.epilogue_flops_per_elem() * m * n
 
@@ -59,6 +71,20 @@ def _scratch_bytes(graph: TppGraph, nest, tiles, n: int) -> int:
     bm, bk, bn = tiles
     acc_m = nest.innermost_step("b") * bm
     acc_n = nest.innermost_step("c") * bn
+    sb = acc_m * acc_n * 4
+    if graph.reducing_node() is not None:
+        sb += acc_m * n * 4 + acc_m * 2 * 4
+    return sb
+
+
+def _scratch_bytes_static(graph: TppGraph, loops, tiles, n: int) -> int:
+    """``_scratch_bytes`` without a planned nest: the innermost occurrence of
+    a letter always advances by the loop's base step, so the accumulator
+    footprint is schedule-invariant (loops are [K, M, N] from
+    ``build_nest_inputs``)."""
+    bm, bk, bn = tiles
+    acc_m = loops[1].step * bm
+    acc_n = loops[2].step * bn
     sb = acc_m * acc_n * 4
     if graph.reducing_node() is not None:
         sb += acc_m * n * 4 + acc_m * 2 * 4
@@ -96,6 +122,47 @@ def graph_cost(
     )
 
 
+def _graph_schedule_filter(graph: TppGraph, *, m_letter="b", n_letter="c",
+                           reduction=("a",)):
+    """Generation-time counterpart of ``validate_reduction_innermost`` +
+    ``validate_epilogue_band``, expressed on the raw occurrence sequence so
+    the streaming tuner can reject graph-illegal schedules without planning a
+    nest.  Positions in ``mesh_pos`` are sharded levels (excluded from the
+    grid-order comparisons, like ``nest.grid_levels``); ``par_pos`` are
+    occurrences with parallel semantics (uppercase or mesh-implied).  The
+    survivors are re-validated against the real validators on the planned
+    top-k — and a property test pins this filter to them."""
+    reducing = graph.reducing_node() is not None
+
+    def ok(perm, par_pos, mesh_pos):
+        mesh = set(mesh_pos)
+        out_pos = [i for i, ch in enumerate(perm)
+                   if (ch == m_letter or ch == n_letter) and i not in mesh]
+        red_pos = [i for i, ch in enumerate(perm)
+                   if ch in reduction and i not in mesh]
+        if out_pos and red_pos and min(red_pos) < max(out_pos):
+            return False  # output revisits would not be consecutive on TPU
+        if reducing:
+            m_pos = [i for i in out_pos if perm[i] == m_letter]
+            n_pos = [i for i in out_pos if perm[i] == n_letter]
+            if m_pos and n_pos and max(m_pos) > min(n_pos):
+                return False  # row statistics close before the row completes
+            if any(perm[i] == n_letter for i in par_pos):
+                return False  # statistics accumulate sequentially
+            if any(perm[i] == n_letter for i in mesh_pos):
+                return False  # per-shard partial row statistics
+        return True
+
+    return ok
+
+
+def _graph_validator(graph: TppGraph):
+    def validate(tl):
+        lowering.validate_reduction_innermost(tl.nest, ("b", "c"), ("a",))
+        lowering.validate_epilogue_band(tl.nest, graph)
+    return validate
+
+
 def autotune_graph(
     graph: TppGraph,
     m: int, k: int, n: int,
@@ -104,15 +171,25 @@ def autotune_graph(
     dtype=np.float32,
     parallel_letters: Sequence[str] = ("b", "c"),
     max_blockings: Optional[Sequence[int]] = None,
-    max_candidates: int = 200,
+    max_candidates: Optional[int] = 200,
     target: perf_model.TpuTarget = perf_model.TpuTarget(),
     seed: int = 0,
-) -> list[autotune.TuneResult]:
-    """Tune the fused nest end-to-end: enumerate loop_spec_strings under the
+    strategy: str = "streaming",
+    top_k: Optional[int] = 32,
+    measure_fn=None,
+    measure_top_k: int = 5,
+    cache=None,
+    cache_dir=None,
+    use_cache: bool = True,
+    return_stats: bool = False,
+):
+    """Tune the fused nest end-to-end: stream loop_spec_strings under the
     paper's constraint grammar, drop candidates that are illegal *for this
-    graph* (epilogue band conflicts), score the rest with the fused perf
-    model.  Returns results best-first; feed the winner's spec back into
-    ``fusion.compile(graph, spec_string=...)``."""
+    graph* (epilogue band conflicts) at generation time, score the rest with
+    the fused perf model in batches, and persist the ranked schedules in the
+    tune cache keyed on the graph signature.  Returns results best-first;
+    feed the winner's spec back into ``fusion.compile(graph, spec_string=...)``
+    via :func:`schedule_kwargs`."""
     if tiles is None:
         import jax.numpy as jnp
         from repro.kernels.brgemm import pick_tiles
@@ -122,36 +199,31 @@ def autotune_graph(
     # a normalizing epilogue forbids PARALLEL semantics on the N loop
     if graph.reducing_node() is not None:
         parallel_letters = tuple(l for l in parallel_letters if l != "c")
-    cands = autotune.generate_candidates(
-        loops,
-        max_blockings=list(max_blockings) if max_blockings else [2] * len(loops),
+    results, stats = autotune.autotune_with_stats(
+        loops, in_maps, out_map,
+        dtype=dtype,
+        flops_per_body=2.0 * bm * bn * bk,
+        tile_mnk=(bm, bn, bk),
+        reduction_letters=("a",),
+        epilogue_flops=_epilogue_flops(graph, m, n),
+        scratch_bytes=_scratch_bytes_static(graph, loops, tiles, n),
+        max_blockings=list(max_blockings) if max_blockings else None,
         parallel_letters=parallel_letters,
+        target=target,
         max_candidates=max_candidates,
         seed=seed,
+        strategy=strategy,
+        top_k=top_k,
+        spec_filter=_graph_schedule_filter(graph),
+        validate_fn=_graph_validator(graph),
+        measure_fn=measure_fn,
+        measure_top_k=measure_top_k,
+        cache=cache,
+        cache_dir=cache_dir,
+        use_cache=use_cache,
+        cache_extra=("tppgraph", graph_signature(graph), m, k, n),
     )
-    results = []
-    for c in cands:
-        tl = autotune.cached_threaded_loop(
-            c.loops, c.spec_string, reduction_letters=("a",))
-        try:
-            lowering.validate_reduction_innermost(tl.nest, ("b", "c"), ("a",))
-            lowering.validate_epilogue_band(tl.nest, graph)
-        except LegalityError:
-            # graph-illegal for this schedule (band/parallel/mesh conflicts)
-            continue
-        rep = perf_model.predict(
-            tl.nest, in_maps, out_map,
-            dtype=dtype,
-            flops_per_body=2.0 * bm * bn * bk,
-            tile_mnk=(bm, bn, bk),
-            target=target,
-            reduction_letters=("a",),
-            epilogue_flops=_epilogue_flops(graph, m, n),
-            scratch_bytes=_scratch_bytes(graph, tl.nest, tiles, n),
-        )
-        results.append(autotune.TuneResult(c, rep))
-    results.sort(key=lambda r: -r.score)
-    return results
+    return (results, stats) if return_stats else results
 
 
 # ---------------------------------------------------------------------------

@@ -53,7 +53,75 @@ EXPERIMENTS = [
 ]
 
 
+def tune_schedules(out_path="results/hillclimb_tune.json",
+                   cache_dir="results/tunecache"):
+    """Schedule hillclimbing for the §V-A2 GEMM nest: model-rank with the
+    streaming tuner, then re-rank the top-5 by "measurement" — here the
+    paper-faithful trace oracle (``perf_model.predict(mode="trace")``), the
+    stand-in for offline benchmarking until real-TPU timing lands.  Measured
+    times persist in the tune cache (``measured_s``), so re-running this
+    driver — or any later ``autotune`` with the same nest — returns the
+    measured ranking from disk instead of re-searching (verified by the
+    second call below)."""
+    import jax.numpy as jnp
+
+    from repro.core import LoopSpec, TensorMap, autotune, perf_model
+
+    loops = [LoopSpec(0, 32, 1, name="K"), LoopSpec(0, 32, 1, name="M"),
+             LoopSpec(0, 32, 1, name="N")]
+    in_maps = [TensorMap(("b", "a"), (128, 128), layout="flat"),
+               TensorMap(("a", "c"), (128, 128), layout="flat")]
+    out_map = TensorMap(("b", "c"), (128, 128), layout="flat")
+
+    def measure(cand):
+        tl = autotune.cached_threaded_loop(
+            cand.loops, cand.spec_string, reduction_letters=("a",))
+        rep = perf_model.predict(
+            tl.nest, in_maps, out_map, dtype=jnp.bfloat16,
+            flops_per_body=2 * 128 ** 3, tile_mnk=(128, 128, 128),
+            reduction_letters=("a",), mode="trace")
+        return rep.total_time
+
+    kw = dict(dtype=jnp.bfloat16, flops_per_body=2 * 128 ** 3,
+              tile_mnk=(128, 128, 128), reduction_letters=("a",),
+              parallel_letters=("b", "c"), max_candidates=None,
+              measure_fn=measure, cache_dir=cache_dir)
+    results, stats = autotune.autotune_with_stats(loops, in_maps, out_map, **kw)
+    again, again_stats = autotune.autotune_with_stats(
+        loops, in_maps, out_map, **kw)
+    record = {
+        "experiment": "tune_gemm_32x32x32_bf16",
+        "hypothesis": "model top-5 contains the measured best (paper Fig. 6); "
+                      "measured ranking survives the process via the tune "
+                      "cache",
+        "stats": {
+            "considered": stats.considered,
+            "scored": stats.candidates_scored,
+            "pruned": stats.candidates_pruned,
+            "search_time_s": stats.search_time_s,
+            "cache_hit": stats.cache_hit,
+        },
+        "rerun_cache_hit": again_stats.cache_hit,
+        "rerun_preserves_measured":
+            [r.measured_s for r in again[:5]] ==
+            [r.measured_s for r in results[:5]],
+        "ranked": [
+            {"spec": r.candidate.spec_string,
+             "model_gflops": round(r.score, 2),
+             "measured_s": r.measured_s}
+            for r in results[:5]
+        ],
+    }
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"[hillclimb] schedule tuning record in {out_path} "
+          f"(rerun cache hit: {again_stats.cache_hit})")
+    return record
+
+
 def main():
+    tune_schedules()
     out_path = "results/hillclimb.json"
     results = []
     if os.path.exists(out_path):

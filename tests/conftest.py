@@ -1,8 +1,21 @@
 """Make ``python -m pytest`` work without the ``PYTHONPATH=src`` incantation:
 the package lives in ``src/`` (no installation step in this environment)."""
+import atexit
+import os
 import pathlib
+import shutil
 import sys
+import tempfile
 
 _SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
+
+# Keep the persistent tune cache (core.tunecache) hermetic across test runs:
+# point it at a per-session tmpdir unless the invoker pinned one.  Tests that
+# exercise cache persistence pass explicit cache_dir/TuneCache objects.
+if "REPRO_TUNE_CACHE_DIR" not in os.environ and \
+        "REPRO_TUNE_CACHE" not in os.environ:
+    _tune_dir = tempfile.mkdtemp(prefix="repro-tune-test-")
+    os.environ["REPRO_TUNE_CACHE_DIR"] = _tune_dir
+    atexit.register(shutil.rmtree, _tune_dir, ignore_errors=True)

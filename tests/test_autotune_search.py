@@ -1,0 +1,389 @@
+"""Streaming-search equivalence, bound-pruning safety, batched-scoring
+parity, and persistent-cache behaviour (docs/autotuning.md)."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (LoopSpec, TensorMap, ThreadedLoop, autotune,
+                        loop_signature, perf_model, tunecache)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _setup(kb=8, mb=8, nb=8, bm=64, bk=64, bn=64, dtype=np.float32):
+    loops = [LoopSpec(0, kb, 1, name="k"), LoopSpec(0, mb, 1, name="m"),
+             LoopSpec(0, nb, 1, name="n")]
+    in_maps = [TensorMap(("b", "a"), (bm, bk), layout="flat"),
+               TensorMap(("a", "c"), (bk, bn), layout="flat")]
+    out_map = TensorMap(("b", "c"), (bm, bn), layout="flat")
+    kw = dict(dtype=dtype, flops_per_body=2 * bm * bk * bn,
+              tile_mnk=(bm, bn, bk), reduction_letters=("a",),
+              parallel_letters=("b", "c"), use_cache=False)
+    return loops, in_maps, out_map, kw
+
+
+def _key(c):
+    return (c.spec_string, tuple(l.block_steps for l in c.loops))
+
+
+# ---------------------------------------------------------------------------
+# Generation equivalence + legality at generation time
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from([2, 3, 4, 6, 8, 12]),
+       st.sampled_from([2, 3, 4, 6, 8, 12]),
+       st.sampled_from([2, 4, 9]))
+@settings(max_examples=10, deadline=None)
+def test_property_streaming_set_equals_exhaustive(kb, mb, nb):
+    loops = [LoopSpec(0, kb, 1), LoopSpec(0, mb, 1), LoopSpec(0, nb, 1)]
+    kw = dict(max_blockings=[2, 2, 2], parallel_letters=("b", "c"))
+    streamed = {_key(c) for c in autotune.generate_candidates(
+        loops, max_candidates=10 ** 6, **kw)}
+    exhaustive = {_key(c) for c in autotune._generate_candidates_exhaustive(
+        loops, max_candidates=None, **kw)}
+    assert streamed == exhaustive and streamed
+
+
+def test_streaming_set_equals_exhaustive_with_mesh():
+    loops = [LoopSpec(0, 8, 1), LoopSpec(0, 8, 1), LoopSpec(0, 8, 1)]
+    kw = dict(max_blockings=[2, 2, 2], parallel_letters=("b", "c"),
+              mesh_decomp=(("b", "x", 2),))
+    streamed = {_key(c) for c in autotune.generate_candidates(
+        loops, max_candidates=10 ** 6, **kw)}
+    exhaustive = {_key(c) for c in autotune._generate_candidates_exhaustive(
+        loops, max_candidates=None, **kw)}
+    assert streamed == exhaustive and streamed
+
+
+def test_blocking_chains_legal_at_generation():
+    """Every chain `_blocking_choices` emits must plan without LegalityError
+    for the matching occurrence count — illegality is filtered before
+    permutation expansion, not after."""
+    for extent, step in [(12, 1), (16, 2), (24, 1), (36, 3)]:
+        loop = LoopSpec(0, extent * step, step)
+        for chain in autotune._blocking_choices(loop, 3):
+            blocked = LoopSpec(0, extent * step, step, block_steps=chain)
+            spec = "a" * (len(chain) + 1)
+            ThreadedLoop([blocked], spec)  # must not raise
+
+
+def test_max_candidates_bounds_stream():
+    loops = [LoopSpec(0, 16, 1), LoopSpec(0, 16, 1), LoopSpec(0, 16, 1)]
+    cands = autotune.generate_candidates(
+        loops, max_blockings=[3, 3, 3], parallel_letters=("b", "c"),
+        max_candidates=50)
+    assert len(cands) == 50
+
+
+# ---------------------------------------------------------------------------
+# Pruning safety + batched-scoring parity
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from([(8, 8), (16, 16), (128, 128)]),
+       st.sampled_from([np.float32, np.float16]),
+       st.sampled_from([4, 8, 16]))
+@settings(max_examples=6, deadline=None)
+def test_property_pruning_never_drops_argmax(tile, dtype, top_k):
+    bm = bk = bn = tile[0]
+    loops, in_maps, out_map, kw = _setup(bm=bm, bk=bk, bn=bn, dtype=dtype)
+    ex, _ = autotune.autotune_with_stats(
+        loops, in_maps, out_map, strategy="exhaustive",
+        max_candidates=None, top_k=top_k, **kw)
+    st_, _ = autotune.autotune_with_stats(
+        loops, in_maps, out_map, strategy="streaming",
+        max_candidates=None, top_k=top_k, **kw)
+    assert ex[0].candidate.spec_string == st_[0].candidate.spec_string
+    assert ex[0].score == pytest.approx(st_[0].score, rel=1e-12)
+
+
+def test_mesh_split_k_strategies_agree():
+    """Sharding the reduction letter (mesh split-K) must work — and agree —
+    under both strategies (exhaustive plans with allow_races like the
+    streaming path's final planning)."""
+    loops, in_maps, out_map, kw = _setup()
+    kw["mesh_decomp"] = (("a", "x", 2),)
+    ex, _ = autotune.autotune_with_stats(
+        loops, in_maps, out_map, strategy="exhaustive",
+        max_candidates=None, top_k=8, **kw)
+    st_, _ = autotune.autotune_with_stats(
+        loops, in_maps, out_map, strategy="streaming",
+        max_candidates=None, top_k=8, **kw)
+    assert ex and st_
+    assert ex[0].candidate.spec_string == st_[0].candidate.spec_string
+    assert ex[0].report.collective_time > 0
+
+
+def test_unkeyed_hooks_bypass_cache(tmp_path):
+    """A custom validate_fn/spec_filter cannot be hashed into the cache key:
+    without a distinguishing cache_extra the search must skip the persistent
+    cache instead of colliding with a differently-filtered search."""
+    loops, in_maps, out_map, kw = _setup()
+    kw.pop("use_cache")
+    _, s1 = autotune.autotune_with_stats(
+        loops, in_maps, out_map, cache_dir=tmp_path, **kw)
+    assert not s1.cache_hit
+    r2, s2 = autotune.autotune_with_stats(
+        loops, in_maps, out_map, cache_dir=tmp_path,
+        validate_fn=lambda tl: None, **kw)
+    assert not s2.cache_hit and s2.candidates_generated > 0
+    # with a distinguishing cache_extra the hooks may cache (fresh key)
+    _, s3 = autotune.autotune_with_stats(
+        loops, in_maps, out_map, cache_dir=tmp_path,
+        validate_fn=lambda tl: None, cache_extra=("v1",), **kw)
+    _, s4 = autotune.autotune_with_stats(
+        loops, in_maps, out_map, cache_dir=tmp_path,
+        validate_fn=lambda tl: None, cache_extra=("v1",), **kw)
+    assert not s3.cache_hit and s4.cache_hit
+
+
+def test_unfiltered_validator_disables_pruning():
+    """An unfiltered validator must not let invalid candidates' scores prune
+    families containing the valid argmax: pruning is disabled and the
+    surviving ranking matches an exhaustive post-filtered one."""
+    loops, in_maps, out_map, kw = _setup(
+        kb=32, mb=32, nb=32, bm=128, bk=128, bn=128)
+    from repro.core.loops import LegalityError
+
+    def only_k_innermost(tl):
+        if tl.nest.levels[-1].letter != "a":
+            raise LegalityError("reject")
+
+    ex, _ = autotune.autotune_with_stats(
+        loops, in_maps, out_map, strategy="exhaustive",
+        max_candidates=None, top_k=8, validate_fn=only_k_innermost, **kw)
+    st_, stats = autotune.autotune_with_stats(
+        loops, in_maps, out_map, strategy="streaming",
+        max_candidates=None, top_k=8, validate_fn=only_k_innermost, **kw)
+    assert stats.candidates_pruned == 0
+    assert ex[0].candidate.spec_string == st_[0].candidate.spec_string
+    assert all(r.candidate.spec_string.lower().endswith("a") for r in st_)
+
+
+def test_pruning_fires_and_counts():
+    loops, in_maps, out_map, kw = _setup(
+        kb=32, mb=32, nb=32, bm=128, bk=128, bn=128)
+    _, stats = autotune.autotune_with_stats(
+        loops, in_maps, out_map, strategy="streaming",
+        max_candidates=None, top_k=16, **kw)
+    assert stats.candidates_pruned > 0
+    assert stats.considered == (stats.candidates_scored
+                                + stats.candidates_pruned
+                                + stats.candidates_filtered)
+
+
+@given(st.integers(0, 10 ** 6))
+@settings(max_examples=8, deadline=None)
+def test_property_predict_batch_matches_predict(pick):
+    loops, in_maps, out_map, kw = _setup()
+    cands = autotune.generate_candidates(
+        loops, max_blockings=[2, 2, 2], parallel_letters=("b", "c"),
+        max_candidates=400)
+    c = cands[pick % len(cands)]
+    tl = ThreadedLoop(c.loops, c.spec_string, reduction_letters=("a",))
+    single = perf_model.predict(
+        tl.nest, in_maps, out_map, dtype=np.float32,
+        flops_per_body=kw["flops_per_body"], tile_mnk=kw["tile_mnk"],
+        reduction_letters=("a",))
+    trips = [[lvl.trip_count for lvl in tl.nest.levels]]
+    all_maps = list(in_maps) + [out_map]
+    pmax = [[perf_model._p_max(tl.nest, tm) for tm in all_maps]]
+    bb = [perf_model._operand_block_bytes(tl.nest, tm, 4) for tm in all_maps]
+    batch = perf_model.predict_batch(
+        trips, pmax, bb, dtype=np.float32,
+        flops_per_body=kw["flops_per_body"], tile_mnk=kw["tile_mnk"])
+    assert batch["gflops"][0] == pytest.approx(single.gflops, rel=1e-9)
+    assert batch["hbm_bytes"][0] == pytest.approx(single.hbm_bytes, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Persistent cache
+# ---------------------------------------------------------------------------
+
+def test_cache_hit_in_process(tmp_path):
+    loops, in_maps, out_map, kw = _setup()
+    kw.pop("use_cache")
+    r1, s1 = autotune.autotune_with_stats(
+        loops, in_maps, out_map, cache_dir=tmp_path, **kw)
+    r2, s2 = autotune.autotune_with_stats(
+        loops, in_maps, out_map, cache_dir=tmp_path, **kw)
+    assert not s1.cache_hit and s2.cache_hit
+    assert s2.candidates_generated == 0
+    assert [_key(r.candidate) for r in r1] == [_key(r.candidate) for r in r2]
+    assert r1[0].score == pytest.approx(r2[0].score, rel=1e-12)
+
+
+_FRESH_PROCESS_SCRIPT = """
+import json, sys
+import numpy as np
+sys.path.insert(0, {src!r})
+from repro.core import LoopSpec, TensorMap, autotune
+loops = [LoopSpec(0, 8, 1), LoopSpec(0, 8, 1), LoopSpec(0, 8, 1)]
+in_maps = [TensorMap(("b", "a"), (64, 64), layout="flat"),
+           TensorMap(("a", "c"), (64, 64), layout="flat")]
+out_map = TensorMap(("b", "c"), (64, 64), layout="flat")
+res, stats = autotune.autotune_with_stats(
+    loops, in_maps, out_map, dtype=np.float32, flops_per_body=2 * 64 ** 3,
+    tile_mnk=(64, 64, 64), reduction_letters=("a",),
+    parallel_letters=("b", "c"), cache_dir={cache!r})
+print(json.dumps({{"hit": stats.cache_hit,
+                   "generated": stats.candidates_generated,
+                   "top": res[0].candidate.spec_string}}))
+"""
+
+
+def test_cache_hit_across_processes(tmp_path):
+    """A second ``autotune()`` with identical inputs in a fresh process must
+    return from the persistent cache without regenerating candidates."""
+    script = _FRESH_PROCESS_SCRIPT.format(
+        src=os.path.join(REPO, "src"), cache=str(tmp_path))
+
+    def run_once():
+        out = subprocess.run(
+            [sys.executable, "-c", script], capture_output=True, text=True,
+            check=True, cwd=REPO)
+        return json.loads(out.stdout.strip().splitlines()[-1])
+
+    first, second = run_once(), run_once()
+    assert not first["hit"] and first["generated"] > 0
+    assert second["hit"] and second["generated"] == 0
+    assert second["top"] == first["top"]
+
+
+def test_cache_measured_rerank_persists(tmp_path):
+    loops, in_maps, out_map, kw = _setup()
+    kw.pop("use_cache")
+    r1, s1 = autotune.autotune_with_stats(
+        loops, in_maps, out_map, cache_dir=tmp_path,
+        measure_fn=lambda c: float(len(c.spec_string)), measure_top_k=3, **kw)
+    # hit: stored measured_s preferred — the new measure_fn must NOT run
+    r2, s2 = autotune.autotune_with_stats(
+        loops, in_maps, out_map, cache_dir=tmp_path,
+        measure_fn=lambda c: 1e9, measure_top_k=3, **kw)
+    assert s2.cache_hit
+    assert [r.measured_s for r in r2[:3]] == [r.measured_s for r in r1[:3]]
+    assert r2[0].measured_s == min(r.measured_s for r in r2[:3])
+
+
+def test_uncacheable_top_k_bypasses_cache(tmp_path):
+    """A search asking for more results than an entry can store must skip the
+    persistent cache — a warm cache must never shrink the returned list."""
+    loops, in_maps, out_map, kw = _setup()
+    kw.pop("use_cache")
+    r1, s1 = autotune.autotune_with_stats(
+        loops, in_maps, out_map, cache_dir=tmp_path, top_k=None, **kw)
+    r2, s2 = autotune.autotune_with_stats(
+        loops, in_maps, out_map, cache_dir=tmp_path, top_k=None, **kw)
+    assert not s1.cache_hit and not s2.cache_hit
+    assert len(r1) == len(r2) > autotune._CACHE_STORE_K
+
+
+def test_measured_upgrade_keeps_search_stats(tmp_path):
+    """Measuring on a cache hit upgrades the entry with measured_s but must
+    not overwrite the producing search's stats with the hit's zeros."""
+    loops, in_maps, out_map, kw = _setup()
+    kw.pop("use_cache")
+    tc = tunecache.TuneCache(tmp_path)
+    _, s1 = autotune.autotune_with_stats(
+        loops, in_maps, out_map, cache=tc, **kw)
+    key = next(iter(tmp_path.glob("*.json"))).stem
+    before = tc.lookup(key)["stats"]
+    assert before["candidates_scored"] == s1.candidates_scored > 0
+    _, s2 = autotune.autotune_with_stats(
+        loops, in_maps, out_map, cache=tc,
+        measure_fn=lambda c: float(len(c.spec_string)), **kw)
+    assert s2.cache_hit
+    after = tc.lookup(key)
+    assert after["stats"] == before
+    assert any(r["measured_s"] is not None for r in after["results"])
+
+
+def test_cache_corrupt_entry_is_miss(tmp_path):
+    tc = tunecache.TuneCache(tmp_path)
+    key = tunecache.cache_key(anything=1)
+    tc.store(key, {"results": []})
+    assert tc.lookup(key) is not None
+    (tmp_path / f"{key}.json").write_text("{not json")
+    assert tc.lookup(key) is None
+
+
+def test_cache_disabled_by_env(monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_CACHE", "0")
+    assert tunecache.default_cache() is None
+
+
+# ---------------------------------------------------------------------------
+# Plan-cache keying (satellite fix) + signatures
+# ---------------------------------------------------------------------------
+
+def test_cached_threaded_loop_unhashable_kwargs():
+    loops = [LoopSpec(0, 8, 1), LoopSpec(0, 8, 1), LoopSpec(0, 8, 1)]
+    a = autotune.cached_threaded_loop(loops, "bca", reduction_letters=["a"])
+    b = autotune.cached_threaded_loop(loops, "bca", reduction_letters=("a",))
+    assert a is b  # normalized keys share the plan
+
+
+def test_loop_signature_ignores_names():
+    a = [LoopSpec(0, 8, 1, name="k"), LoopSpec(0, 8, 1, name="m")]
+    b = [LoopSpec(0, 8, 1, name="x"), LoopSpec(0, 8, 1)]
+    assert loop_signature(a) == loop_signature(b)
+    c = [LoopSpec(0, 8, 1, block_steps=(4,)), LoopSpec(0, 8, 1)]
+    assert loop_signature(a) != loop_signature(c)
+
+
+# ---------------------------------------------------------------------------
+# Fusion: cheap schedule filter must agree with the planned validators
+# ---------------------------------------------------------------------------
+
+def test_graph_filter_matches_validators():
+    from repro import fusion
+    from repro.core.loops import LegalityError
+    from repro.core.parser import parse_spec_string
+    from repro.fusion import lowering
+    from repro.fusion.cost import _graph_schedule_filter
+
+    g = fusion.fused_output_graph(0.0)  # reducing epilogue (layernorm)
+    flt = _graph_schedule_filter(g)
+    loops = [LoopSpec(0, 8, 1), LoopSpec(0, 8, 1), LoopSpec(0, 8, 1)]
+    cands = autotune.generate_candidates(
+        loops, max_blockings=[2, 2, 2], parallel_letters=("b",),
+        max_candidates=2000)
+    assert len(cands) > 200
+    agree = 0
+    for c in cands:
+        spec = parse_spec_string(c.spec_string)
+        perm = tuple(o.letter for o in spec.occurrences)
+        par_pos = tuple(o.position for o in spec.occurrences if o.parallel)
+        mesh_pos = tuple(o.position for o in spec.occurrences
+                         if o.mesh_axis is not None)
+        cheap = flt(perm, par_pos, mesh_pos)
+        tl = ThreadedLoop(c.loops, c.spec_string, reduction_letters=("a",))
+        try:
+            lowering.validate_reduction_innermost(tl.nest, ("b", "c"), ("a",))
+            lowering.validate_epilogue_band(tl.nest, g)
+            real = True
+        except LegalityError:
+            real = False
+        assert cheap == real, (c.spec_string, cheap, real)
+        agree += cheap
+    assert 0 < agree < len(cands)  # both classes exercised
+
+
+def test_autotune_graph_cache_roundtrip(tmp_path):
+    from repro import fusion
+
+    g = fusion.fused_mlp_graph()
+    kw = dict(tiles=(16, 32, 64), max_candidates=200, cache_dir=tmp_path,
+              return_stats=True)
+    r1, s1 = fusion.autotune_graph(g, 64, 64, 128, **kw)
+    r2, s2 = fusion.autotune_graph(g, 64, 64, 128, **kw)
+    assert not s1.cache_hit and s2.cache_hit
+    assert r1[0].candidate.spec_string == r2[0].candidate.spec_string
+    # a different graph must not hit the same entry
+    g2 = fusion.fused_output_graph(0.0)
+    _, s3 = fusion.autotune_graph(g2, 64, 64, 128, **kw)
+    assert not s3.cache_hit
