@@ -1,13 +1,24 @@
 #!/usr/bin/env bash
 # Tier-1 verification: the full pytest suite plus smoke runs of the fusion
-# benchmark (fused-kernel path) and the autotune benchmark (streaming search
-# must keep matching the exhaustive baseline's top schedules), so both are
-# exercised on every PR.
+# benchmark (fused-kernel path, incl. the two-root gated-MLP parity case) and
+# the autotune benchmark (streaming search must keep matching the exhaustive
+# baseline's top schedules), so both are exercised on every PR.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -x -q "$@"
+# Guard against a collection-level wipeout passing the gate silently: pytest
+# signals "no tests collected" with exit code 5 (and usage/collection errors
+# with 4) — make those explicit failures with a diagnosis instead of relying
+# on whoever reads the set -e abort to know the exit-code table.
+rc=0
+python -m pytest -x -q "$@" || rc=$?
+if [ "${rc}" -eq 5 ]; then
+    echo "check.sh: pytest collected ZERO tests — refusing to pass" >&2
+    exit 1
+elif [ "${rc}" -ne 0 ]; then
+    exit "${rc}"
+fi
 python benchmarks/bench_fusion.py --smoke
 REPRO_TUNE_CACHE=0 python benchmarks/bench_autotune.py --smoke

@@ -1,21 +1,29 @@
-"""TPP-chain fusion compiler: declarative epilogue graphs lowered to single
-Pallas kernels.  See README.md in this directory for the design."""
-from repro.fusion.graph import (EPILOGUE_OPS, EpilogueOp, FusionLegalityError,
-                                Node, OperandSpec, TppGraph,
-                                register_epilogue)
+"""TPP-chain fusion compiler: declarative epilogue graphs (single- or
+multi-root contractions) lowered to single Pallas kernels.  See README.md in
+this directory for the design."""
+from repro.fusion.graph import (EPILOGUE_OPS, ContractionRoot, EpilogueOp,
+                                FusionLegalityError, Node, OperandSpec,
+                                TppGraph, register_epilogue, simplify_graph)
 from repro.fusion.lowering import (DEFAULT_SPEC, compile, compile_for_backend,
                                    validate_epilogue_band)
 from repro.fusion.cost import (autotune_graph, estimate_unfused, graph_cost,
-                               schedule_kwargs, UnfusedEstimate)
-from repro.fusion.library import (fused_mlp_apply, fused_mlp_graph,
-                                  fused_output_apply, fused_output_graph)
+                               graph_signature, schedule_kwargs,
+                               UnfusedEstimate)
+from repro.fusion.library import (fused_attn_out_apply, fused_attn_out_graph,
+                                  fused_gated_mlp_apply, fused_gated_mlp_graph,
+                                  fused_mlp_apply, fused_mlp_graph,
+                                  fused_output_apply, fused_output_graph,
+                                  fused_qkv_apply, fused_qkv_graph)
 
 __all__ = [
-    "TppGraph", "Node", "OperandSpec", "EpilogueOp", "EPILOGUE_OPS",
-    "register_epilogue", "FusionLegalityError",
+    "TppGraph", "ContractionRoot", "Node", "OperandSpec", "EpilogueOp",
+    "EPILOGUE_OPS", "register_epilogue", "FusionLegalityError",
+    "simplify_graph",
     "compile", "compile_for_backend", "validate_epilogue_band", "DEFAULT_SPEC",
     "graph_cost", "autotune_graph", "estimate_unfused", "UnfusedEstimate",
-    "schedule_kwargs",
-    "fused_output_graph", "fused_mlp_graph", "fused_output_apply",
-    "fused_mlp_apply",
+    "schedule_kwargs", "graph_signature",
+    "fused_output_graph", "fused_mlp_graph", "fused_gated_mlp_graph",
+    "fused_qkv_graph", "fused_attn_out_graph",
+    "fused_output_apply", "fused_mlp_apply", "fused_gated_mlp_apply",
+    "fused_qkv_apply", "fused_attn_out_apply",
 ]

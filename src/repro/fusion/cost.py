@@ -25,7 +25,7 @@ import numpy as np
 from repro.core import autotune, perf_model
 from repro.core.loops import ThreadedLoop
 from repro.fusion import lowering
-from repro.fusion.graph import EPILOGUE_OPS, TppGraph
+from repro.fusion.graph import EPILOGUE_OPS, TppGraph, simplify_graph
 
 __all__ = ["graph_cost", "autotune_graph", "estimate_unfused",
            "UnfusedEstimate", "schedule_kwargs", "graph_signature"]
@@ -50,13 +50,18 @@ def schedule_kwargs(candidate: autotune.Candidate) -> dict:
 
 def graph_signature(graph: TppGraph) -> str:
     """Stable identity of a graph's cost-relevant structure — the epilogue
-    component of the persistent tune-cache key."""
+    component of the persistent tune-cache key.  Root structure (how many
+    contractions, which operands they share) and the output tuple are part of
+    the identity: a two-root gated-MLP nest costs differently from a
+    single-GEMM nest over the same operand kinds."""
     parts = [graph.name]
     parts += [f"{o.name}:{o.kind}" for o in graph.operands]
+    parts += [f"{r.name}<-{r.lhs}@{r.rhs}" for r in graph.roots]
     parts += [
         f"{nd.name}={nd.op}({','.join(nd.inputs)};{sorted(nd.attrs)})"
         for nd in graph.nodes
     ]
+    parts.append("out:" + ",".join(graph.outputs))
     return "|".join(parts)
 
 
@@ -65,13 +70,13 @@ def _epilogue_flops(graph: TppGraph, m: int, n: int) -> float:
 
 
 def _scratch_bytes(graph: TppGraph, nest, tiles, n: int) -> int:
-    """VMEM scratch the fused kernel allocates: fp32 accumulator tile plus,
-    for normalizing epilogues, the full-row panel and stats strip (mirrors
-    ``lowering._compile_pallas``)."""
+    """VMEM scratch the fused kernel allocates: one fp32 accumulator tile per
+    contraction root plus, for normalizing epilogues, the full-row panel and
+    stats strip (mirrors ``lowering._compile_pallas``)."""
     bm, bk, bn = tiles
     acc_m = nest.innermost_step("b") * bm
     acc_n = nest.innermost_step("c") * bn
-    sb = acc_m * acc_n * 4
+    sb = len(graph.roots) * acc_m * acc_n * 4
     if graph.reducing_node() is not None:
         sb += acc_m * n * 4 + acc_m * 2 * 4
     return sb
@@ -85,7 +90,7 @@ def _scratch_bytes_static(graph: TppGraph, loops, tiles, n: int) -> int:
     bm, bk, bn = tiles
     acc_m = loops[1].step * bm
     acc_n = loops[2].step * bn
-    sb = acc_m * acc_n * 4
+    sb = len(graph.roots) * acc_m * acc_n * 4
     if graph.reducing_node() is not None:
         sb += acc_m * n * 4 + acc_m * 2 * 4
     return sb
@@ -102,7 +107,12 @@ def graph_cost(
     target: perf_model.TpuTarget = perf_model.TpuTarget(),
     mode: str = "analytic",
 ) -> perf_model.PerfReport:
-    """Predict one fused-nest schedule, epilogue traffic + VPU time included."""
+    """Predict one fused-nest schedule, epilogue traffic + VPU time included.
+    Multi-root graphs issue one GEMM per root per body visit (the
+    ``flops_per_body`` factor) and map each distinct contraction operand once
+    — a shared lhs is fetched once per (M, K) visit, which is precisely the
+    traffic the fusion saves over R separate GEMMs."""
+    graph = simplify_graph(graph)
     bm, bk, bn = tiles
     loops, in_maps, out_map = lowering.build_nest_inputs(
         graph, m, k, n, tiles, block_steps)
@@ -112,7 +122,7 @@ def graph_cost(
     return perf_model.predict(
         tl.nest, in_maps, out_map,
         dtype=dtype,
-        flops_per_body=2.0 * bm * bn * bk,
+        flops_per_body=2.0 * bm * bn * bk * len(graph.roots),
         tile_mnk=(bm, bn, bk),
         target=target,
         reduction_letters=("a",),
@@ -131,7 +141,11 @@ def _graph_schedule_filter(graph: TppGraph, *, m_letter="b", n_letter="c",
     grid-order comparisons, like ``nest.grid_levels``); ``par_pos`` are
     occurrences with parallel semantics (uppercase or mesh-implied).  The
     survivors are re-validated against the real validators on the planned
-    top-k — and a property test pins this filter to them."""
+    top-k — and a property test pins this filter to them.
+
+    Multi-root graphs add no *schedule* constraints beyond these: every root
+    rides the same (K, M, N) nest, so K-innermost and (for a reducing
+    epilogue) the N-inside-M band rules cover all roots at once."""
     reducing = graph.reducing_node() is not None
 
     def ok(perm, par_pos, mesh_pos):
@@ -157,6 +171,8 @@ def _graph_schedule_filter(graph: TppGraph, *, m_letter="b", n_letter="c",
 
 
 def _graph_validator(graph: TppGraph):
+    """Planned-nest legality for ``graph`` (single- or multi-root): K in the
+    innermost band, plus the reducing-epilogue band rules when present."""
     def validate(tl):
         lowering.validate_reduction_innermost(tl.nest, ("b", "c"), ("a",))
         lowering.validate_epilogue_band(tl.nest, graph)
@@ -190,6 +206,7 @@ def autotune_graph(
     tune cache keyed on the graph signature.  Returns results best-first;
     feed the winner's spec back into ``fusion.compile(graph, spec_string=...)``
     via :func:`schedule_kwargs`."""
+    graph = simplify_graph(graph)
     if tiles is None:
         import jax.numpy as jnp
         from repro.kernels.brgemm import pick_tiles
@@ -202,7 +219,7 @@ def autotune_graph(
     results, stats = autotune.autotune_with_stats(
         loops, in_maps, out_map,
         dtype=dtype,
-        flops_per_body=2.0 * bm * bn * bk,
+        flops_per_body=2.0 * bm * bn * bk * len(graph.roots),
         tile_mnk=(bm, bn, bk),
         reduction_letters=("a",),
         epilogue_flops=_epilogue_flops(graph, m, n),
@@ -232,8 +249,10 @@ def autotune_graph(
 
 @dataclasses.dataclass
 class UnfusedEstimate:
-    """Price of running the graph as one GEMM plus one HBM round-trip per
-    epilogue op (what XLA-on-CPU or an op-by-op runtime would do at size)."""
+    """Price of running the graph as one stand-alone GEMM per contraction
+    root plus one HBM round-trip per epilogue op (what XLA-on-CPU or an
+    op-by-op runtime would do at size).  A shared lhs operand is re-read per
+    GEMM — that re-read is exactly what the multi-root fused nest saves."""
 
     gemm_time: float
     epilogue_time: float
@@ -251,24 +270,28 @@ def estimate_unfused(
     spec_string: str = lowering.DEFAULT_SPEC,
     target: perf_model.TpuTarget = perf_model.TpuTarget(),
 ) -> UnfusedEstimate:
+    graph = simplify_graph(graph)
     db = np.dtype(dtype).itemsize
     act_bytes = m * n * db
+    n_roots = len(graph.roots)
 
     if tiles is not None:
         # price the stand-alone GEMM with the same schedule-aware model the
-        # fused nest is scored with (apples-to-apples refetch traffic)
+        # fused nest is scored with (apples-to-apples refetch traffic); every
+        # root runs as its own nest, re-reading its operands
         gemm_graph = TppGraph(
             name=f"{graph.name}_gemm_only",
             operands=(dataclasses.replace(graph.lhs),
                       dataclasses.replace(graph.rhs)))
         rep = graph_cost(gemm_graph, m, k, n, tiles=tiles, dtype=dtype,
                          spec_string=spec_string, target=target)
-        gemm_time, gemm_bytes = rep.total_time, rep.hbm_bytes
+        gemm_time, gemm_bytes = n_roots * rep.total_time, n_roots * rep.hbm_bytes
     else:
         gemm_flops = 2.0 * m * n * k
         gemm_bytes = (m * k + k * n + m * n) * db
-        gemm_time = max(gemm_flops / target.peak_flops(db),
-                        gemm_bytes / target.hbm_bw)
+        gemm_time = n_roots * max(gemm_flops / target.peak_flops(db),
+                                  gemm_bytes / target.hbm_bw)
+        gemm_bytes *= n_roots
 
     per_op = {}
     ep_time = 0.0

@@ -1,12 +1,14 @@
 """TppGraph — declarative IR for TPP-chain fusion (paper §IV-A, Listing 6).
 
-A graph is **one contraction root** (a GEMM over flat 2D operands, the
-BRGEMM/GEMM TPP) plus an **epilogue DAG** of unary/binary/normalization TPPs
-applied to the contraction result while it is still VMEM-resident.  This is
-exactly the paper's fused-layer shape: "chains of TPPs" inside one PARLOOPER
-nest, where every operator after the contraction works at small 2D-block
-granularity "to maximize the out-of-cache reuse of tensors among subsequent
-operators".
+A graph is a tuple of **contraction roots** (GEMMs over flat 2D operands, the
+BRGEMM/GEMM TPP — roots may share an ``lhs`` operand) plus an **epilogue DAG**
+of unary/binary/normalization TPPs applied to the contraction results while
+they are still VMEM-resident.  This is exactly the paper's fused-layer shape:
+"chains of TPPs" inside one PARLOOPER nest, where every operator after the
+contraction works at small 2D-block granularity "to maximize the out-of-cache
+reuse of tensors among subsequent operators".  Multi-root graphs cover the
+paper's multi-GEMM fused blocks: the gated MLP (``silu(x@wg) * (x@wu)``) and
+the fused QKV projection (one lhs, three rhs, stacked output).
 
 The IR is deliberately tiny:
 
@@ -17,18 +19,31 @@ The IR is deliberately tiny:
       - ``tile``   (M, N)   elementwise epilogue operand (residual, …)
       - ``mask``   (M, N)   boolean epilogue operand (dropout keep-mask)
       - ``rowvec`` (N,)     row-broadcast vector (bias, gamma, beta)
-  * ``Node`` — one epilogue TPP application; inputs name either the
-    contraction result (``"acc"``), earlier nodes, or operands.
-  * ``TppGraph`` — operands + topologically ordered nodes.  The last node's
-    value is the graph output.  At most one node may *reduce* (layernorm /
-    rmsnorm / softmax over the N axis), and it must be the last node — the
-    lowering handles it with the row-panel statistics trick.
+  * ``ContractionRoot`` — one named GEMM ``root = lhs @ rhs``; the root name
+    is a value visible to every epilogue node.  All roots of a graph share
+    the problem shape (M, K, N) — that is what lets one loop nest carry them
+    and load a shared A tile once per (M, K) visit.
+  * ``Node`` — one epilogue TPP application; inputs name a root's accumulator
+    (``"acc"`` stays as an alias when there is exactly one root), earlier
+    nodes, or operands.
+  * ``TppGraph`` — operands + roots + topologically ordered nodes +
+    ``outputs`` (value names).  With one output the graph returns (M, N);
+    with R > 1 outputs the values are stacked on a leading axis → (R, M, N)
+    (the fused-QKV shape).  At most one node may *reduce* (layernorm /
+    rmsnorm / softmax over the N axis); it must be the last node and the
+    graph must be single-output — the lowering handles it with the row-panel
+    statistics trick.
 
 Epilogue TPPs are drawn from a fixed registry (``EPILOGUE_OPS``) whose
 ``apply`` functions operate on fp32 values — the same functions run in the XLA
 reference path (on full arrays) and inside the Pallas kernel body (on VMEM
 tiles), which is what makes the two lowerings agree bit-for-bit up to
 contraction blocking order.
+
+``simplify_graph`` is the graph-level cleanup pass run by ``fusion.compile``:
+``identity`` nodes and rate-0 ``dropout`` nodes forward their value input,
+and operands no longer referenced by any node/root/output are dropped (so a
+rate-0 dropout's keep-mask never becomes a mapped kernel operand).
 """
 from __future__ import annotations
 
@@ -42,8 +57,9 @@ from repro.core import tpp
 from repro.core.loops import LegalityError
 
 __all__ = [
-    "FusionLegalityError", "OperandSpec", "Node", "TppGraph",
-    "EpilogueOp", "EPILOGUE_OPS", "register_epilogue",
+    "FusionLegalityError", "OperandSpec", "ContractionRoot", "Node",
+    "TppGraph", "EpilogueOp", "EPILOGUE_OPS", "register_epilogue",
+    "simplify_graph",
 ]
 
 OPERAND_KINDS = ("lhs", "rhs", "tile", "mask", "rowvec")
@@ -65,6 +81,18 @@ class OperandSpec:
             raise FusionLegalityError(
                 f"operand {self.name!r}: unknown kind {self.kind!r}; "
                 f"expected one of {OPERAND_KINDS}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ContractionRoot:
+    """One GEMM root ``name = lhs @ rhs``: ``lhs``/``rhs`` are operand names
+    of the matching kinds, ``name`` is the accumulator value visible to the
+    epilogue DAG.  Roots may share an ``lhs`` operand (fused QKV / gated MLP
+    read the activation once)."""
+
+    name: str
+    lhs: str
+    rhs: str
 
 
 @dataclasses.dataclass(frozen=True)
@@ -190,20 +218,42 @@ register_epilogue(EpilogueOp(
 
 @dataclasses.dataclass(frozen=True)
 class TppGraph:
-    """One contraction root + an epilogue DAG of TPP nodes.
+    """Contraction roots + an epilogue DAG of TPP nodes.
 
-    ``operands`` must contain exactly one ``lhs`` and one ``rhs``; ``nodes``
-    are in topological order and the last node's value is the graph output
-    (an empty epilogue returns the contraction result itself).
+    ``roots`` defaults to the single root ``acc = lhs @ rhs`` derived from
+    the unique lhs/rhs operands (the PR-1 single-contraction form).
+    ``outputs`` defaults to the last node's value (or the sole root for an
+    empty epilogue); multi-output graphs return the named values stacked on
+    a leading axis.
     """
 
     name: str
     operands: tuple[OperandSpec, ...]
     nodes: tuple[Node, ...] = ()
+    roots: tuple[ContractionRoot, ...] = ()
+    outputs: tuple[str, ...] = ()
 
     def __post_init__(self):
         object.__setattr__(self, "operands", tuple(self.operands))
         object.__setattr__(self, "nodes", tuple(self.nodes))
+        if not self.roots:
+            # single-contraction form: derive "acc" from the lhs/rhs operands
+            lhs = [o.name for o in self.operands if o.kind == "lhs"]
+            rhs = [o.name for o in self.operands if o.kind == "rhs"]
+            if len(lhs) != 1 or len(rhs) != 1:
+                raise FusionLegalityError(
+                    f"graph {self.name!r}: without explicit roots the graph "
+                    f"needs exactly one lhs and one rhs operand, got "
+                    f"{len(lhs)} lhs / {len(rhs)} rhs — declare roots=")
+            object.__setattr__(
+                self, "roots", (ContractionRoot("acc", lhs[0], rhs[0]),))
+        else:
+            object.__setattr__(self, "roots", tuple(self.roots))
+        if not self.outputs:
+            last = self.nodes[-1].name if self.nodes else self.roots[0].name
+            object.__setattr__(self, "outputs", (last,))
+        else:
+            object.__setattr__(self, "outputs", tuple(self.outputs))
         self.validate()
 
     # -- views ----------------------------------------------------------
@@ -213,13 +263,32 @@ class TppGraph:
                 return o
         raise KeyError(name)
 
+    def root(self, name: str) -> ContractionRoot:
+        for r in self.roots:
+            if r.name == name:
+                return r
+        raise KeyError(name)
+
     @property
     def lhs(self) -> OperandSpec:
-        return next(o for o in self.operands if o.kind == "lhs")
+        """The first root's lhs operand (single-root convenience view)."""
+        return self.operand(self.roots[0].lhs)
 
     @property
     def rhs(self) -> OperandSpec:
-        return next(o for o in self.operands if o.kind == "rhs")
+        """The first root's rhs operand (single-root convenience view)."""
+        return self.operand(self.roots[0].rhs)
+
+    @property
+    def contraction_operands(self) -> tuple[OperandSpec, ...]:
+        """lhs/rhs operands in canonical (root-declaration) order, shared
+        operands listed once — the packing order of the lowering."""
+        seen: dict[str, OperandSpec] = {}
+        for r in self.roots:
+            for nm in (r.lhs, r.rhs):
+                if nm not in seen:
+                    seen[nm] = self.operand(nm)
+        return tuple(seen.values())
 
     @property
     def epilogue_operands(self) -> tuple[OperandSpec, ...]:
@@ -235,6 +304,17 @@ class TppGraph:
     def operand_names(self) -> tuple[str, ...]:
         return tuple(o.name for o in self.operands)
 
+    @property
+    def root_names(self) -> tuple[str, ...]:
+        return tuple(r.name for r in self.roots)
+
+    def resolve_acc(self, ref: str) -> str:
+        """Map the ``"acc"`` alias to the sole root's name (identity for
+        everything else)."""
+        if ref == "acc" and len(self.roots) == 1:
+            return self.roots[0].name
+        return ref
+
     def epilogue_flops_per_elem(self) -> float:
         """Summed per-output-element VPU flop estimate of the epilogue DAG —
         the perf model's fused-epilogue compute term."""
@@ -242,16 +322,41 @@ class TppGraph:
 
     # -- validation ------------------------------------------------------
     def validate(self):
-        kinds = [o.kind for o in self.operands]
-        if kinds.count("lhs") != 1 or kinds.count("rhs") != 1:
-            raise FusionLegalityError(
-                f"graph {self.name!r}: need exactly one lhs and one rhs "
-                f"operand, got kinds {kinds}")
         names = [o.name for o in self.operands]
         if len(set(names)) != len(names):
             raise FusionLegalityError(f"graph {self.name!r}: duplicate operand names")
 
-        visible = {"acc"} | set(names)
+        # roots: unique names, no shadowing, lhs/rhs of the declared kinds
+        root_names = [r.name for r in self.roots]
+        if len(set(root_names)) != len(root_names):
+            raise FusionLegalityError(
+                f"graph {self.name!r}: duplicate root names {root_names}")
+        for r in self.roots:
+            if r.name in names or (r.name == "acc" and len(self.roots) > 1):
+                raise FusionLegalityError(
+                    f"graph {self.name!r}: root name {r.name!r} shadows an "
+                    "operand or the single-root 'acc' alias")
+            for side, nm, kind in (("lhs", r.lhs, "lhs"), ("rhs", r.rhs, "rhs")):
+                try:
+                    spec = self.operand(nm)
+                except KeyError:
+                    raise FusionLegalityError(
+                        f"graph {self.name!r}: root {r.name!r} {side} operand "
+                        f"{nm!r} is not declared") from None
+                if spec.kind != kind:
+                    raise FusionLegalityError(
+                        f"graph {self.name!r}: root {r.name!r} {side} operand "
+                        f"{nm!r} must have kind {kind!r}, got {spec.kind!r}")
+        rooted = {nm for r in self.roots for nm in (r.lhs, r.rhs)}
+        for o in self.operands:
+            if o.kind in ("lhs", "rhs") and o.name not in rooted:
+                raise FusionLegalityError(
+                    f"graph {self.name!r}: {o.kind} operand {o.name!r} is not "
+                    "referenced by any contraction root")
+
+        visible = set(names) | set(root_names)
+        if len(self.roots) == 1:
+            visible.add("acc")
         for i, nd in enumerate(self.nodes):
             op = EPILOGUE_OPS.get(nd.op)
             if op is None:
@@ -293,6 +398,24 @@ class TppGraph:
                     "earlier value")
             visible.add(nd.name)
 
+        # outputs: computed values only (roots/nodes, not plain operands —
+        # the lowering's output write has no operand fallback), and stacking
+        # and row-panel norms don't mix
+        if len(set(self.outputs)) != len(self.outputs):
+            raise FusionLegalityError(
+                f"graph {self.name!r}: duplicate outputs {self.outputs}")
+        computed = visible - set(names)
+        for ref in self.outputs:
+            if ref not in computed:
+                raise FusionLegalityError(
+                    f"graph {self.name!r}: output {ref!r} names no root, "
+                    "node, or the 'acc' alias")
+        if self.reducing_node() is not None and len(self.outputs) != 1:
+            raise FusionLegalityError(
+                f"graph {self.name!r}: a reducing epilogue "
+                f"({self.reducing_node().op}) requires a single output — "
+                "the row-panel trick produces one (M, N) value, not a stack")
+
     # -- convenience builder --------------------------------------------
     @classmethod
     def chain(cls, name: str, ops: list, operands: list) -> "TppGraph":
@@ -318,12 +441,59 @@ class TppGraph:
 
     def describe(self) -> str:
         out = [f"TppGraph {self.name!r}:"]
-        out.append("  acc = gemm(%s, %s)" % (self.lhs.name, self.rhs.name))
+        for r in self.roots:
+            out.append(f"  {r.name} = gemm({r.lhs}, {r.rhs})")
         for nd in self.nodes:
             attrs = ", ".join(f"{k}={v}" for k, v in nd.attrs)
             out.append(
                 f"  {nd.name} = {nd.op}({', '.join(nd.inputs)}"
                 + (f"; {attrs}" if attrs else "") + ")")
-        last = self.nodes[-1].name if self.nodes else "acc"
-        out.append(f"  return {last}")
+        ret = ", ".join(self.outputs)
+        out.append(f"  return {'stack(' + ret + ')' if len(self.outputs) > 1 else ret}")
         return "\n".join(out)
+
+
+# ---------------------------------------------------------------------------
+# Graph simplification — run by ``fusion.compile`` before lowering
+# ---------------------------------------------------------------------------
+
+def _node_is_noop(nd: Node) -> bool:
+    if nd.op == "identity":
+        return True
+    if nd.op == "dropout":
+        return float(nd.attr_dict().get("rate", 0.0)) <= 0.0
+    return False
+
+
+def simplify_graph(graph: TppGraph) -> TppGraph:
+    """Drop no-op epilogue nodes (``identity``, rate-0 ``dropout``) and any
+    operand no longer referenced by a node, root, or output.  A rate-0
+    fused-output graph therefore lowers with *no* keep-mask operand — no
+    all-ones (M, N) mask streamed through the kernel.  Value semantics are
+    preserved exactly: a dropped node forwards its (rewritten) value input.
+    Returns ``graph`` itself when there is nothing to do."""
+    repl: dict[str, str] = {}
+    kept: list[Node] = []
+    for nd in graph.nodes:
+        inputs = tuple(repl.get(r, r) for r in nd.inputs)
+        # a no-op that IS a named output keeps its node: rewriting the output
+        # instead could leave an operand-named output or collide with another
+        # output it aliases — both invalid graphs
+        if _node_is_noop(nd) and nd.name not in graph.outputs:
+            repl[nd.name] = inputs[0]
+            continue
+        kept.append(nd if inputs == nd.inputs
+                    else dataclasses.replace(nd, inputs=inputs))
+    outputs = tuple(repl.get(r, r) for r in graph.outputs)
+
+    referenced = {nm for r in graph.roots for nm in (r.lhs, r.rhs)}
+    referenced.update(outputs)
+    for nd in kept:
+        referenced.update(nd.inputs)
+    operands = tuple(o for o in graph.operands if o.name in referenced)
+
+    if (len(kept) == len(graph.nodes) and operands == graph.operands
+            and outputs == graph.outputs):
+        return graph
+    return TppGraph(name=graph.name, operands=operands, nodes=tuple(kept),
+                    roots=graph.roots, outputs=outputs)

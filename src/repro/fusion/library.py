@@ -1,33 +1,51 @@
 """Canonical fused-layer TppGraphs — the paper's showcase fusions, expressed
 declaratively instead of as bespoke Pallas files.
 
-  * ``fused_output_graph``  — Listing 6, the Bert-Output/Bert-SelfOutput
+Single-root graphs:
+
+  * ``fused_output_graph``    — Listing 6, the Bert-Output/Bert-SelfOutput
     layer: GEMM → bias → dropout → residual-add → layernorm.  Replaces the
     hand-written ``kernels.fused_output`` (kept as the parity oracle).
-  * ``fused_mlp_graph``     — the Bert-Intermediate / MLP block:
+  * ``fused_mlp_graph``       — the Bert-Intermediate / MLP block:
     GEMM → bias → activation (§III-A).
+  * ``fused_attn_out_graph``  — the attention output projection:
+    GEMM [→ +residual] [→ layernorm/rmsnorm] — the post-attention tail.
 
-Both are cached by their static parameters so repeated layer construction
-(inside jit traces) reuses the same graph object — and therefore the same
-cached ``ThreadedLoop`` plan downstream.
+Multi-root graphs (the paper's multi-GEMM fused blocks):
+
+  * ``fused_gated_mlp_graph`` — act(x @ wg) * (x @ wu): two GEMMs sharing the
+    activation lhs, combined by a ``mul`` epilogue in one nest.
+  * ``fused_qkv_graph``       — x @ wq / x @ wk / x @ wv: one lhs, three rhs,
+    output stacked (3, M, N).
+
+Graphs are cached by their static parameters so repeated layer construction
+(inside jit traces) reuses the same graph object; the ``fused_*_apply``
+helpers go through ``compile_for_backend``, which additionally memoizes the
+compiled callable per (graph, backend, options) — an eager call neither
+rebuilds the closure nor re-plans the nest.
 """
 from __future__ import annotations
 
 import functools
 
-from repro.fusion.graph import TppGraph
+from repro.fusion.graph import ContractionRoot, Node, OperandSpec, TppGraph
 from repro.fusion.lowering import compile_for_backend
 
 __all__ = [
-    "fused_output_graph", "fused_mlp_graph",
-    "fused_output_apply", "fused_mlp_apply",
+    "fused_output_graph", "fused_mlp_graph", "fused_gated_mlp_graph",
+    "fused_qkv_graph", "fused_attn_out_graph",
+    "fused_output_apply", "fused_mlp_apply", "fused_gated_mlp_apply",
+    "fused_qkv_apply", "fused_attn_out_apply",
 ]
 
 
 @functools.lru_cache(maxsize=None)
 def fused_output_graph(dropout_rate: float = 0.0, eps: float = 1e-5) -> TppGraph:
     """x (M,K) @ w (K,N) + bias → dropout(keep_mask) → + residual →
-    layernorm(gamma, beta) — paper Listing 6 as a TppGraph."""
+    layernorm(gamma, beta) — paper Listing 6 as a TppGraph.  With
+    ``dropout_rate=0`` the simplification pass in ``fusion.compile`` removes
+    the dropout node *and* the keep-mask operand, so no mask is ever built or
+    streamed."""
     return TppGraph.chain(
         "fused_output",
         [
@@ -54,19 +72,77 @@ def fused_mlp_graph(activation: str = "gelu") -> TppGraph:
     )
 
 
+@functools.lru_cache(maxsize=None)
+def fused_gated_mlp_graph(activation: str = "silu") -> TppGraph:
+    """act(x @ wg) * (x @ wu) — the gated-MLP up projection as ONE two-root
+    nest: both GEMMs share the activation lhs (loaded once per (M, K) visit)
+    and the ``act``/``mul`` combine runs on the VMEM-resident accumulators."""
+    return TppGraph(
+        name=f"fused_gated_mlp_{activation}",
+        operands=(OperandSpec("x", "lhs"), OperandSpec("wg", "rhs"),
+                  OperandSpec("wu", "rhs")),
+        roots=(ContractionRoot("g", "x", "wg"),
+               ContractionRoot("u", "x", "wu")),
+        nodes=(Node("n0_act", activation, ("g",)),
+               Node("n1_mul", "mul", ("n0_act", "u"))),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def fused_qkv_graph() -> TppGraph:
+    """x @ wq, x @ wk, x @ wv — one lhs, three rhs, three roots, output
+    stacked (3, M, N).  Requires equal head widths (N) per projection —
+    MHA-style attention, or GQA padded to it."""
+    return TppGraph(
+        name="fused_qkv",
+        operands=(OperandSpec("x", "lhs"), OperandSpec("wq", "rhs"),
+                  OperandSpec("wk", "rhs"), OperandSpec("wv", "rhs")),
+        roots=(ContractionRoot("q", "x", "wq"),
+               ContractionRoot("k", "x", "wk"),
+               ContractionRoot("v", "x", "wv")),
+        outputs=("q", "k", "v"),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def fused_attn_out_graph(residual: bool = False, norm: str = "",
+                         eps: float = 1e-5) -> TppGraph:
+    """o (M,K) @ wo (K,N) [+ residual] [→ layernorm/rmsnorm] — the attention
+    output projection with its post-attention tail fused in."""
+    ops, operands = [], [("o", "lhs"), ("wo", "rhs")]
+    if residual:
+        ops.append(("residual_add", ("residual",), {}))
+        operands.append(("residual", "tile"))
+    if norm == "layernorm":
+        ops.append(("layernorm", ("gamma", "beta"), {"eps": eps}))
+        operands += [("gamma", "rowvec"), ("beta", "rowvec")]
+    elif norm == "rmsnorm":
+        ops.append(("rmsnorm", ("gamma",), {"eps": eps}))
+        operands.append(("gamma", "rowvec"))
+    elif norm:
+        raise ValueError(f"unknown norm {norm!r}; use 'layernorm'/'rmsnorm'")
+    name = "fused_attn_out" + ("_res" if residual else "") + \
+        (f"_{norm}" if norm else "")
+    return TppGraph.chain(name, ops, operands)
+
+
 def fused_output_apply(x, w, bias, residual, gamma, beta, *, keep_mask=None,
                        dropout_rate: float = 0.0, eps: float = 1e-5,
                        backend=None, **kw):
     """Backend-dispatched fused-output layer through the fusion compiler —
-    drop-in for ``kernels.fused_output.fused_output_pallas``."""
-    import jax.numpy as jnp
-    if keep_mask is None:
-        keep_mask = jnp.ones(
-            (x.shape[0], w.shape[1]), jnp.bool_)
+    drop-in for ``kernels.fused_output.fused_output_pallas``.  At rate 0 no
+    keep-mask is built or passed: the simplified graph has no mask operand."""
     g = fused_output_graph(dropout_rate, eps)
     fn = compile_for_backend(g, backend, **kw)
-    return fn(x=x, w=w, bias=bias, keep_mask=keep_mask, residual=residual,
-              gamma=gamma, beta=beta)
+    operands = dict(x=x, w=w, bias=bias, residual=residual,
+                    gamma=gamma, beta=beta)
+    if dropout_rate > 0.0:
+        if keep_mask is None:
+            raise ValueError(
+                f"fused_output_apply: dropout_rate={dropout_rate} needs a "
+                "keep_mask (in-kernel PRNG is a roadmap item)")
+        operands["keep_mask"] = keep_mask
+    return fn(**operands)
 
 
 def fused_mlp_apply(x, w, bias, *, activation: str = "gelu", backend=None,
@@ -75,3 +151,41 @@ def fused_mlp_apply(x, w, bias, *, activation: str = "gelu", backend=None,
     g = fused_mlp_graph(activation)
     fn = compile_for_backend(g, backend, **kw)
     return fn(x=x, w=w, bias=bias)
+
+
+def fused_gated_mlp_apply(x, wg, wu, *, activation: str = "silu",
+                          backend=None, **kw):
+    """Backend-dispatched fused gated up-projection: act(x@wg) * (x@wu) in
+    one two-root nest."""
+    g = fused_gated_mlp_graph(activation)
+    fn = compile_for_backend(g, backend, **kw)
+    return fn(x=x, wg=wg, wu=wu)
+
+
+def fused_qkv_apply(x, wq, wk, wv, *, backend=None, **kw):
+    """Backend-dispatched fused QKV projection.  Returns the (3, M, N) stack;
+    unpack with ``q, k, v = fused_qkv_apply(...)``."""
+    g = fused_qkv_graph()
+    fn = compile_for_backend(g, backend, **kw)
+    return fn(x=x, wq=wq, wk=wk, wv=wv)
+
+
+def fused_attn_out_apply(o, wo, *, residual=None, gamma=None, beta=None,
+                         norm: str = "", eps: float = 1e-5, backend=None,
+                         **kw):
+    """Backend-dispatched attention output projection (+residual, +norm)."""
+    need = {"layernorm": ("gamma", "beta"), "rmsnorm": ("gamma",)}.get(norm, ())
+    given = {"gamma": gamma, "beta": beta}
+    missing = [p for p in need if given[p] is None]
+    stray = [p for p, v in given.items() if v is not None and p not in need]
+    if missing or stray:
+        raise ValueError(
+            f"fused_attn_out_apply: norm={norm!r} takes parameters "
+            f"{list(need)}; missing {missing}, unused {stray}")
+    g = fused_attn_out_graph(residual is not None, norm, eps)
+    fn = compile_for_backend(g, backend, **kw)
+    operands = dict(o=o, wo=wo)
+    if residual is not None:
+        operands["residual"] = residual
+    operands.update({p: given[p] for p in need})
+    return fn(**operands)

@@ -3,16 +3,24 @@
   * ``path="xla"``    — the reference: compose the ``core.tpp`` functions on
     full arrays and let XLA fuse them (the paper's "straightforward"
     framework path);
-  * ``path="pallas"`` — ONE fused Pallas kernel: the contraction runs under a
-    PARLOOPER ``loop_spec_string`` (letters ``a``=K reduction, ``b``=M,
-    ``c``=N, exactly ``kernels.brgemm``), the epilogue DAG is applied to the
-    fp32 accumulator tile while it is VMEM-resident, and normalizing
-    epilogues (layernorm / rmsnorm / softmax over N) use the row-panel
-    statistics trick of ``kernels.fused_output``: the pre-norm row panel is
-    staged in VMEM scratch, (sum, sum-of-squares) statistics accumulate per
-    N tile, and the normalization equation is applied to the finished panel
-    on the last N visit;
+  * ``path="pallas"`` — ONE fused Pallas kernel: every contraction root runs
+    under the same PARLOOPER ``loop_spec_string`` (letters ``a``=K reduction,
+    ``b``=M, ``c``=N, exactly ``kernels.brgemm``) with one fp32 accumulator
+    tile per root — a shared lhs operand is loaded once per (M, K) visit and
+    feeds all its roots' MXU issues — the epilogue DAG is applied to the
+    VMEM-resident accumulator tiles, and normalizing epilogues (layernorm /
+    rmsnorm / softmax over N) use the row-panel statistics trick of
+    ``kernels.fused_output``: the pre-norm row panel is staged in VMEM
+    scratch, (sum, sum-of-squares) statistics accumulate per N tile, and the
+    normalization equation is applied to the finished panel on the last N
+    visit.  Multi-output graphs write each output value into a leading
+    stacking axis → (R, M, N) (fused QKV);
   * the cost path lives in ``fusion.cost`` (perf-model + autotune hook).
+
+``compile`` first runs ``simplify_graph`` (dropping identity / rate-0 dropout
+nodes and now-unreferenced operands); operands the simplification removed are
+still *accepted* at call time and ignored, so callers keep one call signature
+per graph family.
 
 Legality: besides the usual K-innermost requirement
 (``validate_reduction_innermost``), a normalizing epilogue pins the N loop to
@@ -31,10 +39,12 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import tpp
+from repro.core.autotune import _freeze as _freeze_kw
 from repro.core.loops import LoopSpec, ThreadedLoop
 from repro.core.pallas_lowering import (TensorMap, make_pallas_fn, plan_pallas,
                                         validate_reduction_innermost)
-from repro.fusion.graph import (EPILOGUE_OPS, FusionLegalityError, TppGraph)
+from repro.fusion.graph import (EPILOGUE_OPS, FusionLegalityError, TppGraph,
+                                simplify_graph)
 
 __all__ = [
     "compile", "compile_for_backend", "validate_epilogue_band",
@@ -88,9 +98,11 @@ def build_nest_inputs(graph: TppGraph, m: int, k: int, n: int,
                       block_steps: Optional[dict] = None):
     """LoopSpecs + TensorMaps for lowering ``graph`` at problem size
     (M, K, N) with base tiles (bm, bk, bn).  Operand order is
-    ``[lhs, rhs, *epilogue_operands]`` (graph declaration order); row
-    vectors are fully VMEM-resident ``(1, n)`` blocks, (M, N) operands are
-    tiled with the output."""
+    ``[*contraction_operands, *epilogue_operands]`` (shared lhs operands
+    mapped — and fetched — once); row vectors are fully VMEM-resident
+    ``(1, n)`` blocks, (M, N) operands are tiled with the output.  A
+    multi-output graph's out map carries a leading unindexed stacking axis
+    of extent R (array shape ``(R, M, N)``)."""
     bm, bk, bn = tiles
     if m % bm or k % bk or n % bn:
         raise FusionLegalityError(
@@ -103,29 +115,35 @@ def build_nest_inputs(graph: TppGraph, m: int, k: int, n: int,
         LoopSpec(0, mb, 1, block_steps=tuple(block_steps.get("b", ())), name="M"),
         LoopSpec(0, nb, 1, block_steps=tuple(block_steps.get("c", ())), name="N"),
     ]
-    in_maps = [
-        TensorMap(("b", "a"), (bm, bk), layout="flat"),
-        TensorMap(("a", "c"), (bk, bn), layout="flat"),
-    ]
+    in_maps = []
+    for spec in graph.contraction_operands:
+        if spec.kind == "lhs":
+            in_maps.append(TensorMap(("b", "a"), (bm, bk), layout="flat"))
+        else:
+            in_maps.append(TensorMap(("a", "c"), (bk, bn), layout="flat"))
     for spec in graph.epilogue_operands:
         if spec.kind in ("tile", "mask"):
             in_maps.append(TensorMap(("b", "c"), (bm, bn), layout="flat"))
         else:  # rowvec — whole vector visible every call (norms need full N)
             in_maps.append(TensorMap((None, None), (1, n), layout="flat"))
+    n_out = len(graph.outputs)
     if graph.reducing_node() is not None:
         out_map = TensorMap(("b", None), (bm, n), layout="flat")
+    elif n_out > 1:
+        out_map = TensorMap((None, "b", "c"), (n_out, bm, bn), layout="flat")
     else:
         out_map = TensorMap(("b", "c"), (bm, bn), layout="flat")
     return loops, in_maps, out_map
 
 
-def _pack_operands(graph: TppGraph, operands: dict):
-    """Canonically order ([lhs, rhs, *epilogue-operands]) and reshape
-    call-time operands: rowvecs (n,) → (1, n).  Canonical order is
+def _pack_operands(graph: TppGraph, operands: dict, ignore=frozenset()):
+    """Canonically order ([*contraction-operands, *epilogue-operands]) and
+    reshape call-time operands: rowvecs (n,) → (1, n).  Canonical order is
     independent of the graph's declaration order — the Pallas lowering's
-    TensorMaps are built in the same order."""
+    TensorMaps are built in the same order.  Names in ``ignore`` (operands a
+    simplification pass removed from the graph) are accepted and dropped."""
     packed = []
-    for spec in (graph.lhs, graph.rhs) + graph.epilogue_operands:
+    for spec in graph.contraction_operands + graph.epilogue_operands:
         if spec.name not in operands:
             raise TypeError(
                 f"graph {graph.name!r}: missing operand {spec.name!r}; "
@@ -134,7 +152,7 @@ def _pack_operands(graph: TppGraph, operands: dict):
         if spec.kind == "rowvec":
             v = v.reshape(1, -1)
         packed.append(v)
-    extra = set(operands) - set(graph.operand_names)
+    extra = set(operands) - set(graph.operand_names) - set(ignore)
     if extra:
         raise TypeError(f"graph {graph.name!r}: unexpected operands {sorted(extra)}")
     return packed
@@ -144,12 +162,17 @@ def _pack_operands(graph: TppGraph, operands: dict):
 # Path 1: XLA reference — compose core.tpp functions, let XLA fuse
 # ---------------------------------------------------------------------------
 
-def _compile_xla(graph: TppGraph, *, out_dtype=None):
+def _compile_xla(graph: TppGraph, *, out_dtype=None, ignore=frozenset()):
     def fn(**operands):
-        _pack_operands(graph, operands)  # validates the operand set
-        x, w = operands[graph.lhs.name], operands[graph.rhs.name]
-        acc = tpp.gemm(x, w, beta=0.0, out_dtype=jnp.float32)
-        env = {"acc": acc}
+        _pack_operands(graph, operands, ignore)  # validates the operand set
+        x = operands[graph.roots[0].lhs]
+        env = {}
+        for root in graph.roots:
+            env[root.name] = tpp.gemm(
+                operands[root.lhs], operands[root.rhs],
+                beta=0.0, out_dtype=jnp.float32)
+        if len(graph.roots) == 1:
+            env["acc"] = env[graph.roots[0].name]
 
         def value(ref):
             if ref in env:
@@ -162,8 +185,10 @@ def _compile_xla(graph: TppGraph, *, out_dtype=None):
             op = EPILOGUE_OPS[nd.op]
             env[nd.name] = op.apply(*(value(r) for r in nd.inputs),
                                     **nd.attr_dict())
-        out = env[graph.nodes[-1].name] if graph.nodes else acc
-        return out.astype(out_dtype or x.dtype)
+        odt = out_dtype or x.dtype
+        if len(graph.outputs) > 1:
+            return jnp.stack([env[o] for o in graph.outputs]).astype(odt)
+        return env[graph.outputs[0]].astype(odt)
 
     return fn
 
@@ -174,20 +199,20 @@ def _compile_xla(graph: TppGraph, *, out_dtype=None):
 
 def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
                     block_steps=None, out_dtype=None, interpret=False,
-                    mesh=None, vmem_limit_bytes=None):
+                    mesh=None, vmem_limit_bytes=None, ignore=frozenset()):
     reducing = graph.reducing_node()
     pre_nodes = tuple(nd for nd in graph.nodes if nd is not reducing)
+    con_specs = graph.contraction_operands
     ep_specs = graph.epilogue_operands
+    roots = graph.roots
+    outputs = graph.outputs
+    # position of each contraction operand in the packed/ref order
+    con_pos = {s.name: i for i, s in enumerate(con_specs)}
+    plan_cache: dict = {}  # (operand shapes/dtypes) -> pallas call
 
-    def fn(**operands):
-        packed = _pack_operands(graph, operands)
-        x, w = packed[0], packed[1]
-        m, k = x.shape
-        k2, n = w.shape
-        assert k == k2, (x.shape, w.shape)
-        odt = out_dtype or x.dtype
+    def build_call(m, k, n, x_dtype, odt):
         from repro.kernels.brgemm import pick_tiles
-        bm, bk, bn = tiles or pick_tiles(m, k, n, x.dtype)
+        bm, bk, bn = tiles or pick_tiles(m, k, n, x_dtype)
         loops, in_maps, out_map = build_nest_inputs(
             graph, m, k, n, (bm, bk, bn), block_steps)
         tl = ThreadedLoop(loops, spec_string, reduction_letters=("a",))
@@ -201,14 +226,17 @@ def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
         c_step = tl.nest.innermost_step("c")
         acc_m = tl.nest.innermost_step("b") * bm
         acc_n = c_step * bn
+        n_con = len(con_specs)
         n_ep = len(ep_specs)
+        n_out = len(outputs)
 
         def body(ind, *refs):
-            a_ref, b_ref = refs[0], refs[1]
-            ep_refs = {s.name: r for s, r in zip(ep_specs, refs[2:2 + n_ep])}
-            o_ref = refs[2 + n_ep]
-            scratch = refs[3 + n_ep:]
-            acc_ref = scratch[0]
+            con_refs = refs[:n_con]
+            ep_refs = {s.name: r
+                       for s, r in zip(ep_specs, refs[n_con:n_con + n_ep])}
+            o_ref = refs[n_con + n_ep]
+            scratch = refs[n_con + n_ep + 1:]
+            acc_refs = {r.name: scratch[i] for i, r in enumerate(roots)}
             ik = ind["a"]
             jc = ind["c"]
 
@@ -217,7 +245,7 @@ def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
             use_stats = reducing is not None and reducing.op in (
                 "layernorm", "rmsnorm")
             if reducing is not None:
-                panel_ref, stats_ref = scratch[1], scratch[2]
+                panel_ref, stats_ref = scratch[len(roots)], scratch[len(roots) + 1]
 
             if use_stats:
                 @pl.when(jnp.logical_and(jc == 0, ik == 0))
@@ -226,18 +254,25 @@ def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
 
             @pl.when(ik == 0)
             def _():
-                acc_ref[...] = tpp.zero(acc_ref.shape, acc_ref.dtype)
+                for acc_ref in acc_refs.values():
+                    acc_ref[...] = tpp.zero(acc_ref.shape, acc_ref.dtype)
 
-            acc_ref[...] += jax.lax.dot_general(
-                a_ref[...], b_ref[...],
-                dimension_numbers=(((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32,
-            )
+            # one MXU issue per root; a shared lhs tile is read from its
+            # (single) VMEM ref once per root, fetched from HBM once
+            for root in roots:
+                acc_refs[root.name][...] += jax.lax.dot_general(
+                    con_refs[con_pos[root.lhs]][...],
+                    con_refs[con_pos[root.rhs]][...],
+                    dimension_numbers=(((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32,
+                )
 
-            # last K visit: run the epilogue DAG on the VMEM-resident tile
+            # last K visit: run the epilogue DAG on the VMEM-resident tiles
             @pl.when(ik == kb - k_step)
             def _():
-                env = {"acc": acc_ref[...]}
+                env = {r.name: acc_refs[r.name][...] for r in roots}
+                if len(roots) == 1:
+                    env["acc"] = env[roots[0].name]
 
                 def value(ref, full_row=False):
                     if ref in env:
@@ -254,15 +289,19 @@ def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
                     op = EPILOGUE_OPS[nd.op]
                     env[nd.name] = op.apply(
                         *(value(r) for r in nd.inputs), **nd.attr_dict())
-                tail = env[pre_nodes[-1].name] if pre_nodes else env["acc"]
 
                 if reducing is None:
-                    o_ref[...] = tail.astype(o_ref.dtype)
+                    if n_out > 1:
+                        o_ref[...] = jnp.stack(
+                            [env[o] for o in outputs]).astype(o_ref.dtype)
+                    else:
+                        o_ref[...] = env[outputs[0]].astype(o_ref.dtype)
                     return
 
                 # row-panel statistics trick: stage the pre-norm tile, close
                 # the (sum, sum-sq) strip, normalize the panel on the last
                 # N visit (kernels.fused_output, generalized)
+                tail = value(reducing.inputs[0])
                 panel_ref[:, pl.ds(jc * bn, acc_n)] = tail
                 if use_stats:
                     stats_ref[:, 0] += jnp.sum(tail, axis=1)
@@ -290,32 +329,61 @@ def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
                         y = op.apply(panel, *params, **attrs)
                     o_ref[...] = y.astype(o_ref.dtype)
 
-        scratch_shapes = [pltpu.VMEM((acc_m, acc_n), jnp.float32)]
+        scratch_shapes = [pltpu.VMEM((acc_m, acc_n), jnp.float32)
+                          for _ in roots]
         if reducing is not None:
             scratch_shapes += [
                 pltpu.VMEM((acc_m, n), jnp.float32),   # pre-norm row panel
                 pltpu.VMEM((acc_m, 2), jnp.float32),   # (sum, sum-sq) strip
             ]
 
-        db = jnp.dtype(x.dtype).itemsize
+        db = jnp.dtype(x_dtype).itemsize
         ep_elems = sum(
             (m * n if s.kind in ("tile", "mask") else n) for s in ep_specs)
-        call = make_pallas_fn(
+        con_elems = sum(
+            (m * k if s.kind == "lhs" else k * n) for s in con_specs)
+        out_shape = (n_out, m, n) if n_out > 1 else (m, n)
+        return make_pallas_fn(
             plan,
             body,
-            jax.ShapeDtypeStruct((m, n), odt),
+            jax.ShapeDtypeStruct(out_shape, odt),
             scratch_shapes=scratch_shapes,
             interpret=interpret,
             mesh=mesh,
             vmem_limit_bytes=vmem_limit_bytes,
             cost_estimate=pl.CostEstimate(
-                flops=2 * m * n * k + int(
+                flops=2 * m * n * k * len(roots) + int(
                     graph.epilogue_flops_per_elem() * m * n),
-                bytes_accessed=(m * k + k * n + ep_elems) * db
-                + m * n * jnp.dtype(odt).itemsize,
+                bytes_accessed=(con_elems + ep_elems) * db
+                + n_out * m * n * jnp.dtype(odt).itemsize,
                 transcendentals=0,
             ),
         )
+
+    def fn(**operands):
+        packed = _pack_operands(graph, operands, ignore)
+        x = packed[0]   # contraction_operands lead with roots[0].lhs
+        m, k = x.shape
+        for spec, v in zip(con_specs, packed):
+            if spec.kind == "lhs" and v.shape != (m, k):
+                raise FusionLegalityError(
+                    f"graph {graph.name!r}: lhs operand {spec.name!r} has "
+                    f"shape {v.shape}, expected ({m}, {k}) — multi-root "
+                    "graphs share one (M, K, N) problem shape")
+        n = next(v.shape[1] for spec, v in zip(con_specs, packed)
+                 if spec.kind == "rhs")
+        for spec, v in zip(con_specs, packed):
+            if spec.kind == "rhs" and v.shape != (k, n):
+                raise FusionLegalityError(
+                    f"graph {graph.name!r}: rhs operand {spec.name!r} has "
+                    f"shape {v.shape}, expected ({k}, {n}) — multi-root "
+                    "graphs share one (M, K, N) problem shape")
+        odt = out_dtype or x.dtype
+        key = tuple((v.shape, jnp.dtype(v.dtype).name) for v in packed)
+        call = plan_cache.get(key)
+        if call is None:
+            call = build_call(m, k, n, x.dtype, odt)
+            plan_cache[key] = call
         return call(*packed)
 
     return fn
@@ -325,34 +393,63 @@ def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
 # Public entry points
 # ---------------------------------------------------------------------------
 
-def compile(graph: TppGraph, *, path: str = "pallas", **kw):
-    """Lower ``graph`` to a callable ``fn(**operands) -> (M, N) array``.
+def compile(graph: TppGraph, *, path: str = "pallas", simplify: bool = True,
+            **kw):
+    """Lower ``graph`` to a callable ``fn(**operands) -> (M, N) array``
+    (``(R, M, N)`` for an R-output graph).
 
-    ``path="pallas"`` (default) emits one fused Pallas kernel; ``path="xla"``
-    emits the composed-TPP reference.  Keyword options for the Pallas path:
+    The graph is first run through :func:`simplify_graph` (identity / rate-0
+    dropout elimination + dead-operand removal); operands the simplification
+    dropped remain accepted — and ignored — at call time.  ``path="pallas"``
+    (default) emits one fused Pallas kernel; ``path="xla"`` emits the
+    composed-TPP reference.  Keyword options for the Pallas path:
     ``spec_string``, ``tiles``, ``block_steps``, ``out_dtype``, ``interpret``,
     ``mesh``, ``vmem_limit_bytes``; the XLA path takes ``out_dtype`` only.
     """
+    lowered = simplify_graph(graph) if simplify else graph
+    ignore = frozenset(graph.operand_names) - frozenset(lowered.operand_names)
     if path == "xla":
         allowed = {"out_dtype"}
         bad = set(kw) - allowed
         if bad:
             raise TypeError(f"xla path does not accept {sorted(bad)}")
-        return _compile_xla(graph, **kw)
+        return _compile_xla(lowered, ignore=ignore, **kw)
     if path == "pallas":
-        return _compile_pallas(graph, **kw)
+        return _compile_pallas(lowered, ignore=ignore, **kw)
     raise ValueError(f"unknown lowering path {path!r}; use 'pallas' or 'xla'")
+
+
+_COMPILE_CACHE: dict = {}
 
 
 def compile_for_backend(graph: TppGraph, backend: Optional[str] = None, **kw):
     """Pick the lowering path from the active ``kernels.ops`` backend — the
-    hook ``models.blocks`` uses behind the ``use_fusion`` config flag."""
+    hook ``models.blocks`` uses behind the ``use_fusion`` config flag.
+
+    Compiled callables are memoized on ``(graph, backend, kwargs)`` — the
+    library ``fused_*_apply`` helpers call this per layer invocation, and
+    rebuilding the closure (plus re-planning the nest inside it) per eager
+    call is pure waste.  The returned callable itself caches one pallas plan
+    per distinct operand-shape/dtype tuple."""
     from repro.kernels import ops
     backend = backend or ops.current_backend()
     if backend == "xla":
         kw.pop("tiles", None)
         kw.pop("spec_string", None)
         kw.pop("block_steps", None)
-        return compile(graph, path="xla", **kw)
-    return compile(graph, path="pallas",
-                   interpret=(backend == "pallas_interpret"), **kw)
+    try:
+        key = (graph, backend,
+               tuple(sorted((k, _freeze_kw(v)) for k, v in kw.items())))
+        hit = _COMPILE_CACHE.get(key)
+    except TypeError:   # unhashable kwarg (e.g. a live mesh object)
+        key, hit = None, None
+    if hit is not None:
+        return hit
+    if backend == "xla":
+        fn = compile(graph, path="xla", **kw)
+    else:
+        fn = compile(graph, path="pallas",
+                     interpret=(backend == "pallas_interpret"), **kw)
+    if key is not None:
+        _COMPILE_CACHE[key] = fn
+    return fn

@@ -174,7 +174,14 @@ def attention_apply(cfg: ModelConfig, p, x, *, kind: str = "attn",
             new_cache = {"k": k, "v": v}
 
     o = o.transpose(0, 2, 1, 3).reshape(b * s, h * hd)
-    out = ops.matmul(o, pw["wo"]).reshape(b, s, d)
+    if cfg.use_fusion:
+        # output projection through the fusion compiler (fused_attn_out_graph
+        # also carries optional +residual/+norm tails for callers that fuse
+        # the whole post-attention epilogue)
+        from repro.fusion import fused_attn_out_apply
+        out = fused_attn_out_apply(o, pw["wo"]).reshape(b, s, d)
+    else:
+        out = ops.matmul(o, pw["wo"]).reshape(b, s, d)
     return out, new_cache
 
 
@@ -296,15 +303,20 @@ def mlp_apply(cfg: ModelConfig, p, x2d):
     """x2d (T, d) → (T, d).  BRGEMM + fused activation epilogue (paper
     §III-A MLP).
 
-    With ``cfg.use_fusion`` the non-gated up-projection is built through the
-    TPP-chain fusion compiler (``repro.fusion``): the GEMM → bias →
-    activation chain is declared as a ``TppGraph`` and lowered to one fused
-    Pallas kernel (or the composed-TPP reference on the XLA backend) instead
-    of the hand-parameterized ``ops.matmul`` epilogue."""
+    With ``cfg.use_fusion`` the up-projection is built through the TPP-chain
+    fusion compiler (``repro.fusion``): the non-gated GEMM → bias →
+    activation chain is a single-root ``TppGraph``, and the gated path's
+    ``act(x@wg) * (x@wu)`` runs as ONE two-root graph — both GEMMs share the
+    activation lhs inside one nest instead of re-reading it — lowered to one
+    fused Pallas kernel (or the composed-TPP reference on the XLA backend)."""
     dt = compute_dtype(cfg)
     pw = _cast(p, dt)
     act = cfg.mlp_activation
     if cfg.gated_mlp:
+        if cfg.use_fusion:
+            from repro.fusion import fused_gated_mlp_apply
+            h = fused_gated_mlp_apply(x2d, pw["wg"], pw["wu"], activation=act)
+            return ops.matmul(h, pw["wd"])
         g = ops.matmul(x2d, pw["wg"], activation=act)
         u = ops.matmul(x2d, pw["wu"])
         return ops.matmul(tpp.mul(g, u), pw["wd"])
@@ -331,7 +343,21 @@ def init_moe(cfg: ModelConfig, key):
 
 
 def _expert_ffn(cfg, wg, wu, wd, xe):
-    """xe (E_loc, C, d) → (E_loc, C, d): batched gated FFN over local experts."""
+    """xe (E_loc, C, d) → (E_loc, C, d): batched gated FFN over local experts.
+
+    With ``cfg.use_fusion`` each expert's gated up-projection runs through the
+    two-root ``fused_gated_mlp_graph`` (per-expert 2D GEMMs; E_loc is a small
+    static count, so the unrolled loop stays cheap and every expert reuses
+    the same memoized compiled graph)."""
+    if cfg.use_fusion:
+        from repro.fusion import fused_gated_mlp_apply
+        h = jnp.stack([
+            fused_gated_mlp_apply(xe[e], wg[e], wu[e],
+                                  activation=cfg.mlp_activation)
+            for e in range(xe.shape[0])
+        ]).astype(xe.dtype)
+        return jnp.einsum("ecf,efd->ecd", h, wd,
+                          preferred_element_type=jnp.float32).astype(xe.dtype)
     act = tpp.UNARY_TPPS[cfg.mlp_activation]
     g = jnp.einsum("ecd,edf->ecf", xe, wg, preferred_element_type=jnp.float32)
     u = jnp.einsum("ecd,edf->ecf", xe, wu, preferred_element_type=jnp.float32)

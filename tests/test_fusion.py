@@ -1,7 +1,9 @@
 """TPP-chain fusion compiler: graph-vs-reference parity for every registered
 epilogue TPP (fp32 + bf16), legality of norm epilogues vs. the nest's
-innermost band, and parity of the TppGraph fused-output reimplementation
-against the hand-written kernel's oracle."""
+innermost band, parity of the TppGraph fused-output reimplementation against
+the hand-written kernel's oracle, multi-root graphs (gated MLP / fused QKV /
+attn-out) vs their unfused ``ops.matmul`` compositions, the graph
+simplification pass, and the compile/tune caches."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -156,8 +158,352 @@ def test_mlp_block_use_fusion_flag_matches_unfused():
 
 
 # ---------------------------------------------------------------------------
+# Multi-root graphs: gated MLP, fused QKV, attention output projection
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("path", ["xla", "pallas"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("act", ["silu", "gelu"])
+def test_fused_gated_mlp_parity(path, dtype, act):
+    """act(x@wg) * (x@wu) as ONE two-root nest vs the unfused ops.matmul
+    composition, both lowering paths, both dtypes."""
+    from repro.kernels import ops as kops
+    g = fusion.fused_gated_mlp_graph(act)
+    opd = _operands_for(g, dtype, m=32, k=64, n=128)
+    kw = dict(tiles=TILES, interpret=True) if path == "pallas" else {}
+    out = fusion.compile(g, path=path, out_dtype=jnp.float32, **kw)(**opd)
+    a = kops.matmul(opd["x"], opd["wg"], activation=act,
+                    out_dtype=jnp.float32, backend="xla")
+    u = kops.matmul(opd["x"], opd["wu"], out_dtype=jnp.float32, backend="xla")
+    want = a * u
+    tol = (dict(rtol=1e-5, atol=1e-4) if dtype == jnp.float32
+           else _tol(dtype))   # fp32: blocking-order noise through the act
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), **tol)
+
+
+@pytest.mark.parametrize("path", ["xla", "pallas"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_qkv_parity(path, dtype):
+    """One lhs, three rhs, stacked (3, M, N) output vs three ops.matmul."""
+    from repro.kernels import ops as kops
+    g = fusion.fused_qkv_graph()
+    opd = _operands_for(g, dtype, m=32, k=64, n=128)
+    kw = dict(tiles=TILES, interpret=True) if path == "pallas" else {}
+    out = fusion.compile(g, path=path, out_dtype=jnp.float32, **kw)(**opd)
+    assert out.shape == (3, 32, 128)
+    want = jnp.stack([
+        kops.matmul(opd["x"], opd[w], out_dtype=jnp.float32, backend="xla")
+        for w in ("wq", "wk", "wv")
+    ])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               **_tol(dtype))
+
+
+@pytest.mark.parametrize("norm", ["", "layernorm", "rmsnorm"])
+def test_fused_attn_out_graph_parity(norm):
+    """Output projection + residual (+ norm): multi-operand single-root tail,
+    Pallas vs the composed reference."""
+    g = fusion.fused_attn_out_graph(True, norm)
+    opd = _operands_for(g, jnp.float32)
+    ref = fusion.compile(g, path="xla")(**opd)
+    pal = fusion.compile(g, path="pallas", tiles=TILES, interpret=True)(**opd)
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("spec", ["bca", "bcca", "bbca", "bcaa", "cba"])
+def test_gated_mlp_spec_sweep(spec):
+    """Multi-root graphs have no reducing epilogue here, so blocked and even
+    N-outer schedules are legal — and all agree."""
+    bs = {"c": (2,)} if "cc" in spec else ({"b": (2,)} if "bb" in spec
+                                           else ({"a": (2,)} if "aa" in spec else {}))
+    g = fusion.fused_gated_mlp_graph("silu")
+    opd = _operands_for(g, jnp.float32)
+    ref = fusion.compile(g, path="xla")(**opd)
+    pal = fusion.compile(g, path="pallas", tiles=TILES, spec_string=spec,
+                         block_steps=bs, interpret=True)(**opd)
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_multi_root_shared_lhs_mapped_once():
+    """The shared activation operand appears once in the packed operand order
+    and once in the nest's TensorMaps (one HBM fetch stream, R MXU issues)."""
+    g = fusion.fused_qkv_graph()
+    assert [o.name for o in g.contraction_operands] == ["x", "wq", "wk", "wv"]
+    loops, in_maps, out_map = fusion.lowering.build_nest_inputs(
+        g, M, K, N, TILES)
+    assert len(in_maps) == 4                      # x mapped once, not thrice
+    assert out_map.letters == (None, "b", "c")    # stacked (3, M, N) output
+    assert out_map.tile[0] == 3
+
+
+def test_mlp_block_gated_use_fusion_flag_matches_unfused():
+    """models.blocks.mlp_apply gated path routed through the two-root graph
+    (config flag) equals the direct ops.matmul composition."""
+    import dataclasses
+    from repro.configs.base import get_config
+    from repro.models import blocks
+
+    cfg = get_config("llama2_13b").reduced()
+    assert cfg.gated_mlp
+    key = __import__("jax").random.PRNGKey(0)
+    p = blocks.init_mlp(cfg, key)
+    x2d = jnp.asarray(RNG.normal(size=(16, cfg.d_model)).astype(np.float32))
+    y0 = blocks.mlp_apply(cfg, p, x2d)
+    y1 = blocks.mlp_apply(dataclasses.replace(cfg, use_fusion=True), p, x2d)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y0, np.float32),
+                               rtol=2e-2, atol=2e-1)
+
+
+def test_attention_use_fusion_flag_matches_unfused():
+    """attention_apply's output projection through fused_attn_out_graph."""
+    import dataclasses
+    from repro.configs.base import get_config
+    from repro.models import blocks
+
+    cfg = get_config("llama2_13b").reduced()
+    key = __import__("jax").random.PRNGKey(1)
+    p = blocks.init_attention(cfg, key)
+    x = jnp.asarray(RNG.normal(
+        size=(2, 8, cfg.d_model)).astype(np.float32))
+    y0, _ = blocks.attention_apply(cfg, p, x)
+    y1, _ = blocks.attention_apply(
+        dataclasses.replace(cfg, use_fusion=True), p, x)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y0, np.float32),
+                               rtol=2e-2, atol=2e-1)
+
+
+def test_expert_ffn_use_fusion_matches_unfused():
+    """_expert_ffn per-expert fused gated path equals the batched einsums."""
+    import dataclasses
+    from repro.configs.base import get_config
+    from repro.models import blocks
+
+    cfg = get_config("qwen3_moe_235b").reduced()
+    e, c, d, ff = 4, 8, cfg.d_model, cfg.moe_d_ff
+    xe = jnp.asarray(RNG.normal(size=(e, c, d)).astype(np.float32))
+    wg = jnp.asarray(RNG.normal(size=(e, d, ff)).astype(np.float32) * 0.1)
+    wu = jnp.asarray(RNG.normal(size=(e, d, ff)).astype(np.float32) * 0.1)
+    wd = jnp.asarray(RNG.normal(size=(e, ff, d)).astype(np.float32) * 0.1)
+    y0 = blocks._expert_ffn(cfg, wg, wu, wd, xe)
+    y1 = blocks._expert_ffn(
+        dataclasses.replace(cfg, use_fusion=True), wg, wu, wd, xe)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y0, np.float32),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Graph simplification pass
+# ---------------------------------------------------------------------------
+
+def test_simplify_drops_identity_and_rate0_dropout():
+    g = fusion.TppGraph.chain(
+        "simp",
+        [("identity", (), {}),
+         ("dropout", ("keep_mask",), {"rate": 0.0}),
+         ("bias_add", ("bias",), {})],
+        [("x", "lhs"), ("w", "rhs"), ("keep_mask", "mask"),
+         ("bias", "rowvec")],
+    )
+    s = fusion.simplify_graph(g)
+    assert [nd.op for nd in s.nodes] == ["bias_add"]
+    assert "keep_mask" not in s.operand_names
+    assert s.nodes[0].inputs[0] == "acc"      # rewired through dropped nodes
+
+
+def test_simplify_is_identity_on_clean_graphs():
+    g = fusion.fused_output_graph(0.5)
+    assert fusion.simplify_graph(g) is g
+    g2 = fusion.fused_gated_mlp_graph("silu")
+    assert fusion.simplify_graph(g2) is g2
+
+
+@pytest.mark.parametrize("path", ["xla", "pallas"])
+def test_simplification_invariance(path):
+    """compile(simplified) == compile(original) — and the original call
+    signature (incl. the dropped mask) keeps working."""
+    g = fusion.fused_output_graph(0.0)
+    opd = _operands_for(g, jnp.float32)        # includes a keep_mask
+    kw = dict(tiles=TILES, interpret=True) if path == "pallas" else {}
+    out = fusion.compile(g, path=path, **kw)(**opd)
+    raw = fusion.compile(g, path=path, simplify=False, **kw)(**opd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(raw),
+                               rtol=1e-6, atol=1e-6)
+    # same result without the mask operand at all
+    opd2 = {k: v for k, v in opd.items() if k != "keep_mask"}
+    out2 = fusion.compile(g, path=path, **kw)(**opd2)
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(out),
+                               rtol=0, atol=0)
+
+
+def test_rate0_fused_output_has_no_mask_tensormap():
+    """Acceptance: rate-0 fused_output lowers with no mask operand in its
+    TensorMaps (no all-ones (M, N) bool streamed through the kernel)."""
+    g = fusion.simplify_graph(fusion.fused_output_graph(0.0))
+    assert "keep_mask" not in g.operand_names
+    loops, in_maps, out_map = fusion.lowering.build_nest_inputs(
+        g, M, K, N, TILES)
+    # x, w, bias, residual, gamma, beta — and nothing (M, N)-boolean
+    assert len(in_maps) == 6
+    g1 = fusion.simplify_graph(fusion.fused_output_graph(0.1))
+    assert "keep_mask" in g1.operand_names
+
+
+def test_fused_attn_out_apply_validates_norm_params():
+    o = jnp.ones((16, 16), jnp.float32)
+    wo = jnp.ones((16, 16), jnp.float32)
+    gamma = jnp.ones((16,), jnp.float32)
+    with pytest.raises(ValueError):            # norm without its params
+        fusion.fused_attn_out_apply(o, wo, norm="rmsnorm", backend="xla")
+    with pytest.raises(ValueError):            # params without a norm
+        fusion.fused_attn_out_apply(o, wo, gamma=gamma, backend="xla")
+    out = fusion.fused_attn_out_apply(o, wo, norm="rmsnorm", gamma=gamma,
+                                      backend="xla")
+    assert out.shape == (16, 16)
+
+
+def test_fused_output_apply_requires_mask_only_when_dropping():
+    x = jnp.asarray(RNG.normal(size=(M, K)).astype(np.float32))
+    w = jnp.asarray(RNG.normal(size=(K, N)).astype(np.float32))
+    bias, gamma, beta = (jnp.asarray(RNG.normal(size=(N,)).astype(np.float32))
+                         for _ in range(3))
+    res = jnp.asarray(RNG.normal(size=(M, N)).astype(np.float32))
+    out = fusion.fused_output_apply(x, w, bias, res, gamma, beta,
+                                    dropout_rate=0.0, backend="xla")
+    assert out.shape == (M, N)
+    with pytest.raises(ValueError):
+        fusion.fused_output_apply(x, w, bias, res, gamma, beta,
+                                  dropout_rate=0.5, backend="xla")
+
+
+# ---------------------------------------------------------------------------
+# Compile memoization
+# ---------------------------------------------------------------------------
+
+def test_compile_for_backend_memoizes():
+    g = fusion.fused_gated_mlp_graph("silu")
+    f1 = fusion.compile_for_backend(g, "xla")
+    f2 = fusion.compile_for_backend(g, "xla")
+    assert f1 is f2
+    f3 = fusion.compile_for_backend(g, "pallas_interpret", tiles=TILES)
+    f4 = fusion.compile_for_backend(g, "pallas_interpret", tiles=TILES)
+    assert f3 is f4 and f3 is not f1
+    # dict-valued kwargs are frozen into the key, not a TypeError
+    f5 = fusion.compile_for_backend(
+        g, "pallas_interpret", tiles=TILES, block_steps={"b": (2,)})
+    assert f5 is fusion.compile_for_backend(
+        g, "pallas_interpret", tiles=TILES, block_steps={"b": (2,)})
+
+
+# ---------------------------------------------------------------------------
 # Legality
 # ---------------------------------------------------------------------------
+
+def test_multi_root_validation_errors():
+    x, wq, wk = (fusion.OperandSpec("x", "lhs"), fusion.OperandSpec("wq", "rhs"),
+                 fusion.OperandSpec("wk", "rhs"))
+    with pytest.raises(fusion.FusionLegalityError):
+        # duplicate root names
+        fusion.TppGraph("bad_dup", (x, wq, wk),
+                        roots=(fusion.ContractionRoot("q", "x", "wq"),
+                               fusion.ContractionRoot("q", "x", "wk")))
+    with pytest.raises(fusion.FusionLegalityError):
+        # epilogue references an unknown root ("acc" is single-root-only)
+        fusion.TppGraph("bad_acc", (x, wq, wk),
+                        roots=(fusion.ContractionRoot("q", "x", "wq"),
+                               fusion.ContractionRoot("k", "x", "wk")),
+                        nodes=(fusion.Node("n0", "relu", ("acc",)),))
+    with pytest.raises(fusion.FusionLegalityError):
+        # reducing node with multi-root (stacked) output
+        fusion.TppGraph("bad_norm", (x, wq, wk),
+                        roots=(fusion.ContractionRoot("q", "x", "wq"),
+                               fusion.ContractionRoot("k", "x", "wk")),
+                        nodes=(fusion.Node("n0", "softmax", ("q",)),),
+                        outputs=("n0", "k"))
+    with pytest.raises(fusion.FusionLegalityError):
+        # root wired to an operand of the wrong kind
+        fusion.TppGraph("bad_kind", (x, wq, wk),
+                        roots=(fusion.ContractionRoot("q", "wq", "x"),))
+    with pytest.raises(fusion.FusionLegalityError):
+        # rhs operand not referenced by any root
+        fusion.TppGraph("bad_orphan", (x, wq, wk),
+                        roots=(fusion.ContractionRoot("q", "x", "wq"),))
+    with pytest.raises(fusion.FusionLegalityError):
+        # unknown output name
+        fusion.TppGraph("bad_out", (x, wq),
+                        roots=(fusion.ContractionRoot("q", "x", "wq"),),
+                        outputs=("nope",))
+
+
+def test_multi_root_rejects_mismatched_shapes():
+    g = fusion.fused_gated_mlp_graph("silu")
+    x = jnp.zeros((32, 64), jnp.float32)
+    wg = jnp.zeros((64, 128), jnp.float32)
+    wu = jnp.zeros((64, 256), jnp.float32)   # different N
+    with pytest.raises(fusion.FusionLegalityError):
+        fusion.compile(g, path="pallas", tiles=TILES,
+                       interpret=True)(x=x, wg=wg, wu=wu)
+    # distinct lhs operands with mismatched K must be rejected too, not
+    # silently read out of bounds
+    g2 = fusion.TppGraph(
+        "two_lhs",
+        (fusion.OperandSpec("x1", "lhs"), fusion.OperandSpec("x2", "lhs"),
+         fusion.OperandSpec("w", "rhs")),
+        roots=(fusion.ContractionRoot("a1", "x1", "w"),
+               fusion.ContractionRoot("a2", "x2", "w")),
+        nodes=(fusion.Node("n0", "add", ("a1", "a2")),),
+    )
+    with pytest.raises(fusion.FusionLegalityError):
+        fusion.compile(g2, path="pallas", tiles=TILES, interpret=True)(
+            x1=jnp.zeros((32, 64), jnp.float32),
+            x2=jnp.zeros((32, 32), jnp.float32),   # wrong K
+            w=jnp.zeros((64, 128), jnp.float32))
+
+
+def test_outputs_must_name_computed_values():
+    x, w, r = (fusion.OperandSpec("x", "lhs"), fusion.OperandSpec("w", "rhs"),
+               fusion.OperandSpec("r", "tile"))
+    with pytest.raises(fusion.FusionLegalityError):
+        fusion.TppGraph("bad_operand_out", (x, w, r),
+                        nodes=(fusion.Node("n0", "residual_add", ("acc", "r")),),
+                        outputs=("n0", "r"))
+    # a no-op node forwarding an operand INTO an output is kept by the
+    # simplifier (dropping it would leave an operand-named output)
+    g = fusion.TppGraph(
+        "id_out", (x, w, r),
+        nodes=(fusion.Node("n0", "identity", ("r",)),
+               fusion.Node("n1", "add", ("acc", "n0"))),
+        outputs=("n1", "n0"))
+    s = fusion.simplify_graph(g)
+    assert "n0" in [nd.name for nd in s.nodes]
+    opd = {"x": jnp.ones((16, 16), jnp.float32),
+           "w": jnp.ones((16, 16), jnp.float32),
+           "r": jnp.full((16, 16), 2.0, jnp.float32)}
+    out = fusion.compile(g, path="pallas", tiles=(16, 16, 16),
+                         interpret=True)(**opd)
+    ref = fusion.compile(g, path="xla")(**opd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=0, atol=0)
+    np.testing.assert_allclose(np.asarray(out[1]), 2.0)
+    # a no-op aliasing another OUTPUT is kept too (dropping it would rewrite
+    # outputs to a duplicate pair and fail validation on rebuild)
+    ga = fusion.TppGraph(
+        "alias_out", (x, w),
+        nodes=(fusion.Node("n0", "relu", ("acc",)),
+               fusion.Node("n1", "identity", ("n0",))),
+        outputs=("n0", "n1"))
+    sa = fusion.simplify_graph(ga)
+    assert sa.outputs == ("n0", "n1")
+    opd2 = {"x": opd["x"], "w": opd["w"]}
+    outa = fusion.compile(ga, path="pallas", tiles=(16, 16, 16),
+                          interpret=True)(**opd2)
+    np.testing.assert_allclose(np.asarray(outa[0]), np.asarray(outa[1]))
+    # and the cost path accepts it (it simplifies unconditionally)
+    fusion.graph_cost(ga, 16, 16, 16, tiles=(16, 16, 16), dtype=np.float32)
+
 
 def test_norm_epilogue_rejects_n_outside_innermost_band():
     g = fusion.fused_output_graph(0.0)
@@ -254,7 +600,7 @@ def test_graph_validation_errors():
 # ---------------------------------------------------------------------------
 
 def test_graph_cost_counts_epilogue_traffic_and_flops():
-    g = fusion.fused_output_graph(0.0)
+    g = fusion.fused_output_graph(0.1)
     plain = fusion.fused_mlp_graph("relu")
     m, k, n = 256, 256, 256
     rep_full = fusion.graph_cost(g, m, k, n, tiles=(32, 64, 64),
@@ -265,6 +611,10 @@ def test_graph_cost_counts_epilogue_traffic_and_flops():
     assert rep_full.hbm_bytes > rep_plain.hbm_bytes
     assert rep_full.compute_time > rep_plain.compute_time
     assert len(rep_full.fetches) == len(g.operands) + 1  # + output
+    # rate-0 dropout: graph_cost prices the SIMPLIFIED graph — no mask map
+    rep0 = fusion.graph_cost(fusion.fused_output_graph(0.0), m, k, n,
+                             tiles=(32, 64, 64), dtype=np.float32)
+    assert len(rep0.fetches) == len(rep_full.fetches) - 1
 
 
 def test_autotune_graph_returns_legal_ranked_schedules():
@@ -281,6 +631,63 @@ def test_autotune_graph_returns_legal_ranked_schedules():
             interpret=True, **fusion.schedule_kwargs(r.candidate),
         )(**_operands_for(g, jnp.float32, 128, 128, 256))
         assert out.shape == (128, 256)
+
+
+def test_autotune_graph_multi_root_ranks_and_caches():
+    """End-to-end tuning of a two-root graph: legal ranked schedules that all
+    lower+run, and a tune-cache hit on the second identical-signature call."""
+    import tempfile
+    g = fusion.fused_gated_mlp_graph("silu")
+    with tempfile.TemporaryDirectory() as cd:
+        results, stats = fusion.autotune_graph(
+            g, 128, 128, 256, tiles=(16, 32, 64), max_candidates=60,
+            cache_dir=cd, return_stats=True)
+        assert results and not stats.cache_hit
+        scores = [r.score for r in results]
+        assert scores == sorted(scores, reverse=True)
+        out = fusion.compile(
+            g, path="pallas", tiles=(16, 32, 64), interpret=True,
+            **fusion.schedule_kwargs(results[0].candidate),
+        )(**_operands_for(g, jnp.float32, 128, 128, 256))
+        assert out.shape == (128, 256)
+        # identical signature → persistent-cache hit, same ranking
+        again, stats2 = fusion.autotune_graph(
+            g, 128, 128, 256, tiles=(16, 32, 64), max_candidates=60,
+            cache_dir=cd, return_stats=True)
+        assert stats2.cache_hit and stats2.candidates_generated == 0
+        assert [r.candidate.spec_string for r in again[:5]] == \
+            [r.candidate.spec_string for r in results[:5]]
+        # a different root structure over the same operand kinds is a
+        # different signature → miss
+        g1 = fusion.fused_qkv_graph()
+        _res3, stats3 = fusion.autotune_graph(
+            g1, 128, 128, 256, tiles=(16, 32, 64), max_candidates=60,
+            cache_dir=cd, return_stats=True)
+        assert not stats3.cache_hit
+
+
+def test_graph_signature_distinguishes_roots_and_outputs():
+    g2 = fusion.fused_gated_mlp_graph("silu")
+    g3 = fusion.fused_qkv_graph()
+    g1 = fusion.fused_mlp_graph("gelu")
+    sigs = {fusion.graph_signature(g) for g in (g1, g2, g3)}
+    assert len(sigs) == 3
+
+
+def test_multi_root_graph_cost_scales_flops_and_shares_lhs():
+    """Two roots double the MXU work but the shared lhs is fetched once: the
+    fused two-root nest moves fewer bytes than 2x the single-GEMM nest."""
+    g2 = fusion.fused_gated_mlp_graph("silu")
+    g1 = fusion.fused_attn_out_graph()          # bare single GEMM
+    m = k = n = 256
+    rep2 = fusion.graph_cost(g2, m, k, n, tiles=(32, 64, 64), dtype=np.float32)
+    rep1 = fusion.graph_cost(g1, m, k, n, tiles=(32, 64, 64), dtype=np.float32)
+    ep = g2.epilogue_flops_per_elem() * m * n
+    assert rep2.flops == pytest.approx(2 * (rep1.flops) + ep)
+    assert rep2.hbm_bytes < 2 * rep1.hbm_bytes
+    unf = fusion.estimate_unfused(g2, m, k, n, dtype=np.float32,
+                                  tiles=(32, 64, 64))
+    assert rep2.hbm_bytes < unf.hbm_bytes
 
 
 def test_estimate_unfused_charges_roundtrips():
