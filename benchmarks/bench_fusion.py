@@ -142,6 +142,81 @@ def run(smoke: bool = False):
                          f"max_err_vs_handwritten={err:.2e}"))
 
     rows.extend(_gated_mlp_rows(rng, smoke))
+    rows.extend(_backward_rows(rng, smoke))
+    return rows
+
+
+def _backward_rows(rng, smoke):
+    """Fused-vs-unfused *backward*: wall (one jitted value_and_grad through
+    ``compile_with_vjp``'s derived backward graphs vs XLA differentiating
+    the composed reference), model (summed ``graph_cost`` of the derived
+    backward TppGraphs vs their op-by-op estimates), and (smoke) cotangent
+    parity of the interpret-mode Pallas backward against ``jax.grad`` of the
+    XLA reference."""
+    rows = []
+    m, k, n = (256, 512, 512) if smoke else (4096, 4096, 1024)
+    graph = fusion.fused_gated_mlp_graph("silu")
+    dt = np.float32
+    ops = {
+        "x": jnp.asarray(rng.normal(size=(m, k)).astype(dt)),
+        "wg": jnp.asarray(rng.normal(size=(k, n)).astype(dt)),
+        "wu": jnp.asarray(rng.normal(size=(k, n)).astype(dt)),
+    }
+    probe = jnp.asarray(rng.normal(size=(m, n)).astype(dt))
+
+    vjp_fn = fusion.compile_with_vjp(graph, "xla")
+    ref_fn = fusion.compile(graph, path="xla")
+
+    def loss(fn):
+        return lambda o: jnp.sum(fn(**o).astype(jnp.float32) * probe)
+
+    fused_step = jax.jit(jax.value_and_grad(loss(vjp_fn)))
+    xla_step = jax.jit(jax.value_and_grad(loss(ref_fn)))
+    iters = 5 if smoke else 10
+    t_fused = _bench(lambda: fused_step(ops), iters=iters)
+    t_xla = _bench(lambda: xla_step(ops), iters=iters)
+
+    # model: every derived backward graph priced by the fused perf model vs
+    # its own op-by-op chain (each gets its own graph_signature → its own
+    # tune-cache entries); problem shapes come from the plan itself
+    plan = fusion.derive_vjp(graph)
+    bgraphs = plan.fused_graphs()
+    t_model_fused = t_model_unf = 0.0
+    for name, bg in bgraphs.items():
+        bm_, bk_, bn_ = plan.problem_shape(name, m, k, n)
+        tiles = pick_tiles(bm_, bk_, bn_, jnp.float32)
+        rep = fusion.graph_cost(bg, bm_, bk_, bn_, tiles=tiles, dtype=dt)
+        unf = fusion.estimate_unfused(bg, bm_, bk_, bn_, dtype=dt, tiles=tiles)
+        t_model_fused += rep.total_time
+        t_model_unf += unf.total_time
+    rows.append((
+        f"fusion_bwd_gated_mlp_{m}x{k}x{n}",
+        t_fused * 1e6,
+        f"wall_fwdbwd_fused_vs_xlagrad={t_xla / t_fused:.2f}"
+        f";model_bwd_fused_vs_unfused={t_model_unf / t_model_fused:.2f}"
+        f";bwd_graphs={len(bgraphs)}",
+    ))
+
+    if smoke:
+        # cotangent parity: interpret-mode Pallas backward kernels vs
+        # jax.grad of the composed-TPP XLA reference
+        sm, sk, sn = 64, 128, 256
+        sops = {"x": ops["x"][:sm, :sk], "wg": ops["wg"][:sk, :sn],
+                "wu": ops["wu"][:sk, :sn]}
+        sprobe = probe[:sm, :sn]
+        pal_fn = fusion.compile_with_vjp(graph, "pallas_interpret")
+
+        def sloss(fn):
+            return lambda o: jnp.sum(fn(**o).astype(jnp.float32) * sprobe)
+
+        g_ref = jax.grad(sloss(ref_fn))(sops)
+        g_pal = jax.grad(sloss(pal_fn))(sops)
+        err = max(float(np.max(np.abs(np.asarray(g_ref[kk]) -
+                                      np.asarray(g_pal[kk]))))
+                  for kk in sops)
+        assert err < 1e-3, f"fused Pallas backward vs jax.grad oracle: {err}"
+        rows.append((f"fusion_bwd_parity_{sm}x{sk}x{sn}", 0.0,
+                     f"max_cotangent_err_vs_jaxgrad={err:.2e}"))
     return rows
 
 

@@ -4,8 +4,13 @@ the synthetic corpus, with checkpoint/restart and the production train step
 
 Run:  PYTHONPATH=src python examples/train_lm.py --steps 300
       PYTHONPATH=src python examples/train_lm.py --arch qwen3_moe_235b --steps 50
+      PYTHONPATH=src python examples/train_lm.py --use-fusion --steps 100
 (named archs run their reduced config on CPU; the default is a ~100M dense
-model with the minicpm recipe)."""
+model with the minicpm recipe).  ``--use-fusion`` builds the MLP / gated-MLP
+/ attention-output (+block residual) / MoE-expert projections through the
+TPP-chain fusion compiler with ``compile_with_vjp``: both the forward layers
+AND their backward passes run as derived TppGraphs (fused kernels on the
+Pallas backends) instead of XLA differentiating the composition."""
 import argparse
 import dataclasses
 
@@ -21,6 +26,9 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--use-fusion", action="store_true",
+                    help="build layers as TppGraphs with fused fwd+bwd "
+                         "(fusion.compile_with_vjp)")
     args = ap.parse_args()
 
     if args.arch:
@@ -32,7 +40,10 @@ def main():
             name="minicpm-100m", num_layers=8, d_model=512,
             num_heads=8, num_kv_heads=8, head_dim=64, d_ff=1536,
             vocab_size=32768, dtype="float32")
-    print(f"arch={cfg.name}  params≈{cfg.param_count()/1e6:.1f}M")
+    if args.use_fusion:
+        cfg = dataclasses.replace(cfg, use_fusion=True)
+    print(f"arch={cfg.name}  params≈{cfg.param_count()/1e6:.1f}M"
+          f"  use_fusion={cfg.use_fusion}")
 
     dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                       global_batch=args.batch, seed=0)

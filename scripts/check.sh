@@ -22,3 +22,10 @@ elif [ "${rc}" -ne 0 ]; then
 fi
 python benchmarks/bench_fusion.py --smoke
 REPRO_TUNE_CACHE=0 python benchmarks/bench_autotune.py --smoke
+# grad-parity smoke: derived backward TppGraphs (fusion.autodiff) vs
+# jax.grad of the composed-TPP reference, plus the fused-training step.
+# The no-arg run above already executed the full autodiff suite — only
+# re-assert it when "$@" filtered the first pytest invocation.
+if [ "$#" -gt 0 ]; then
+    python -m pytest tests/test_fusion_autodiff.py -q -x -k "not bf16"
+fi

@@ -9,6 +9,8 @@ from repro.fusion.lowering import (DEFAULT_SPEC, compile, compile_for_backend,
 from repro.fusion.cost import (autotune_graph, estimate_unfused, graph_cost,
                                graph_signature, schedule_kwargs,
                                UnfusedEstimate)
+from repro.fusion.autodiff import (BackwardPlan, backward_graphs,
+                                   compile_with_vjp, derive_vjp)
 from repro.fusion.library import (fused_attn_out_apply, fused_attn_out_graph,
                                   fused_gated_mlp_apply, fused_gated_mlp_graph,
                                   fused_mlp_apply, fused_mlp_graph,
@@ -20,6 +22,7 @@ __all__ = [
     "EPILOGUE_OPS", "register_epilogue", "FusionLegalityError",
     "simplify_graph",
     "compile", "compile_for_backend", "validate_epilogue_band", "DEFAULT_SPEC",
+    "derive_vjp", "BackwardPlan", "backward_graphs", "compile_with_vjp",
     "graph_cost", "autotune_graph", "estimate_unfused", "UnfusedEstimate",
     "schedule_kwargs", "graph_signature",
     "fused_output_graph", "fused_mlp_graph", "fused_gated_mlp_graph",

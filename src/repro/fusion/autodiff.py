@@ -1,0 +1,692 @@
+"""Fusion autodiff — derived backward TppGraphs + ``jax.custom_vjp``.
+
+The paper's end-to-end claim covers *training*, and the TPP papers
+(arXiv:2104.05755 §V, arXiv:1906.06440) make the observation this module
+operationalizes: backward passes decompose into the **same** primitive set as
+forward ones.  For any forward graph
+
+    y = epilogue( lhs_r @ rhs_r  for each root r )
+
+the backward pass is three families of TppGraphs that ride the existing
+lowering, cost model, autotuner, and persistent tune cache unchanged:
+
+  * **dz graphs** (`@bwd_dz*`) — the epilogue backward.  The forward
+    contraction is *recomputed* (same roots, shared-lhs mapping and all) and
+    the epilogue DAG is replaced by derivative TPPs walking the forward DAG
+    in reverse: ``relu_grad``/``silu_grad``/``gelu_grad``/``dropout_grad``
+    run pointwise, ``layernorm_grad``/``rmsnorm_grad``/``softmax_grad`` are
+    row-panel epilogues whose mean/rstd come from the same (sum, sum-sq)
+    statistics strip the forward norms use.  Outputs: the per-root
+    accumulator cotangents dz_r, tile-operand cotangents, and the (M, N)
+    integrands of row-vector parameter cotangents (their (N,) column sums
+    run outside the fused region — an (M,N)→(N,) reduction has no home in a
+    GEMM-shaped nest).
+  * **dlhs graphs** (`@bwd_dlhs[p]`) — dX = Σ_r dz_r @ rhs_rᵀ over the roots
+    consuming lhs operand ``p``: one multi-root nest over problem (M, N, K)
+    whose rhs operands are the *forward weights read through a transposed
+    load* (``OperandSpec(trans=True)``), combined by an ``add`` epilogue.
+  * **drhs graph** (`@bwd_drhs`) — dW_r = lhsᵀ @ dz_r for every root, one
+    multi-root nest over problem (K, M, N): all roots that shared a forward
+    lhs share its transposed load here too, outputs stacked (R, K, N).
+
+``compile_with_vjp(graph, backend=...)`` wraps the forward lowering and the
+derived backward graphs in ``jax.custom_vjp`` so ``jax.grad`` through any
+fused layer runs fused kernels in both directions.  The ``residuals`` knob
+picks the memory/compute trade:
+
+  * ``"recompute"`` (default) — save only the call operands; dz graphs
+    recompute the forward contraction inside the backward kernel (the remat
+    -friendly choice: residual memory = the inputs you already had).
+  * ``"saved"``     — additionally save the per-root fp32 accumulators from
+    the forward pass (a forward-graph variant with the root values appended
+    to its outputs); the epilogue backward then runs as composed derivative
+    TPPs on the saved accumulators (XLA path) instead of a recompute kernel.
+    Reducing forward graphs force ``"recompute"`` (their accumulators are
+    not addressable as outputs — only post-reduce values are).
+
+Cotangent values are derived per *forward-node grad rule*
+(``EpilogueOp.grad``): a string names a registered derivative op (dv
+substituted for, or prepended to, the primal inputs — arity checked by
+``register_epilogue``), a callable emits arbitrary backward nodes.  Groups
+whose derivation cannot be expressed as a legal TppGraph (no contraction
+root referenced, or two reducing derivative nodes colliding) fall back to a
+composed-TPP evaluation of the same node list — semantics identical, just
+not fused.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tpp
+from repro.fusion.graph import (EPILOGUE_OPS, ContractionRoot,
+                                FusionLegalityError, Node, OperandSpec,
+                                TppGraph, _check_grad_arity, simplify_graph)
+from repro.fusion.lowering import (compile_for_backend,
+                                   contraction_operand_values)
+
+__all__ = ["derive_vjp", "BackwardPlan", "backward_graphs",
+           "compile_with_vjp"]
+
+
+# ---------------------------------------------------------------------------
+# Reverse-mode sweep over the epilogue DAG
+# ---------------------------------------------------------------------------
+
+class _Sweep:
+    """Shared node pool for one derivation: the replayed forward nodes
+    followed by the emitted derivative nodes (pool order is topological).
+    Grad rules receive this object and call :meth:`emit`."""
+
+    def __init__(self, graph: TppGraph):
+        self.graph = graph
+        self.pool: list[Node] = list(graph.nodes)   # replayed forward nodes
+        self._taken = (set(graph.operand_names) | set(graph.root_names)
+                       | {"acc"} | {nd.name for nd in graph.nodes})
+        self._n = 0
+
+    def emit(self, op: str, inputs, attrs: Optional[dict] = None) -> str:
+        name = f"b{self._n}_{op}"
+        self._n += 1
+        assert name not in self._taken
+        self._taken.add(name)
+        self.pool.append(Node(name, op, tuple(inputs),
+                              tuple(sorted((attrs or {}).items()))))
+        return name
+
+    def fresh_name(self, base: str) -> str:
+        while base in self._taken:
+            base = base + "_"
+        self._taken.add(base)
+        return base
+
+
+def _named_grad(sweep: _Sweep, node: Node, dv: str) -> list:
+    """Apply a string grad rule: the derivative op substitutes dv for the
+    primal value input (same arity) or takes dv prepended (+1 arity); either
+    way it yields the cotangent of the node's *first* value input."""
+    op = EPILOGUE_OPS[node.op]
+    gop = EPILOGUE_OPS.get(op.grad)
+    if gop is None:
+        raise FusionLegalityError(
+            f"epilogue op {node.op!r}: grad op {op.grad!r} is not registered")
+    _check_grad_arity(op, gop)
+    if gop.value_arity == op.value_arity:
+        inputs = (dv, *node.inputs[1:])
+    else:
+        inputs = (dv, *node.inputs)
+    return [(node.inputs[0], sweep.emit(op.grad, inputs, node.attr_dict()))]
+
+
+def _sum_values(sweep: _Sweep, vals: list) -> str:
+    out = vals[0]
+    for v in vals[1:]:
+        out = sweep.emit("add", (out, v))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The backward plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Stage1Group:
+    """One epilogue-backward evaluation unit: either a fused TppGraph
+    (``graph`` set) or a composed-TPP fallback over the same node list."""
+
+    nodes: tuple[Node, ...]
+    roots: tuple[ContractionRoot, ...]    # forward roots it recomputes/reads
+    operand_names: tuple[str, ...]        # forward operands it reads
+    dy_names: tuple[str, ...]             # cotangent operands it reads
+    outputs: tuple[str, ...]              # value refs it produces
+    graph: Optional[TppGraph] = None
+    single_fwd_root: bool = False         # forward graph had one root ("acc")
+
+
+@dataclasses.dataclass
+class BackwardPlan:
+    """Everything needed to run the backward pass of one forward graph."""
+
+    forward: TppGraph                         # simplified forward graph
+    policy: str                               # "recompute" | "saved"
+    dy_names: tuple[str, ...]                 # per forward output
+    stage1: tuple[_Stage1Group, ...]
+    value_loc: dict                           # value ref -> ("dy", i) | ("g", gi, oi)
+    dacc: dict                                # root name -> value ref | None
+    dlhs: dict                                # lhs operand -> (graph, root names) | None
+    drhs: Optional[tuple]                     # (graph, {rhs operand -> out idx})
+    cotangents: dict                          # operand -> tagged recipe
+    aug_forward: Optional[TppGraph] = None    # "saved": forward + acc outputs
+    aug_index: Optional[dict] = None          # value -> aug output index
+
+    def fused_graphs(self) -> dict:
+        """All derived backward TppGraphs by name — the set that rides
+        ``graph_cost`` / ``autotune_graph`` / the persistent tune cache."""
+        out = {}
+        for grp in self.stage1:
+            if grp.graph is not None:
+                out[grp.graph.name] = grp.graph
+        for entry in self.dlhs.values():
+            if entry is not None:
+                out[entry[0].name] = entry[0]
+        if self.drhs is not None:
+            out[self.drhs[0].name] = self.drhs[0]
+        return out
+
+    def graph_role(self, name: str) -> str:
+        """``"dz"`` | ``"dlhs"`` | ``"drhs"`` for a derived graph name."""
+        for grp in self.stage1:
+            if grp.graph is not None and grp.graph.name == name:
+                return "dz"
+        for entry in self.dlhs.values():
+            if entry is not None and entry[0].name == name:
+                return "dlhs"
+        if self.drhs is not None and self.drhs[0].name == name:
+            return "drhs"
+        raise KeyError(name)
+
+    def problem_shape(self, name: str, m: int, k: int, n: int):
+        """(M', K', N') of a derived backward graph given the *forward*
+        problem (M, K, N): dz graphs recompute the forward problem, dlhs
+        contracts over N, drhs over M."""
+        return {"dz": (m, k, n), "dlhs": (m, n, k),
+                "drhs": (k, m, n)}[self.graph_role(name)]
+
+
+def _closure(pool: list[Node], seeds) -> list[Node]:
+    by_name = {nd.name: nd for nd in pool}
+    needed: set[str] = set()
+    stack = [s for s in seeds if s in by_name]
+    while stack:
+        nd = by_name[stack.pop()]
+        if nd.name in needed:
+            continue
+        needed.add(nd.name)
+        stack.extend(r for r in nd.inputs if r in by_name)
+    return [nd for nd in pool if nd.name in needed]   # pool order = topo
+
+
+def _group_refs(graph: TppGraph, nodes: list[Node], dy_names) -> tuple:
+    """(root names, operand names, dy names) referenced by ``nodes``."""
+    refs = {r for nd in nodes for r in nd.inputs}
+    roots = tuple(r for r in graph.roots
+                  if r.name in refs or ("acc" in refs and len(graph.roots) == 1))
+    opnames = [o.name for o in graph.operands if o.name in refs]
+    # contraction operands of the kept roots ride along (recompute inputs)
+    for r in roots:
+        for nm in (r.lhs, r.rhs):
+            if nm not in opnames:
+                opnames.append(nm)
+    dys = tuple(d for d in dy_names if d in refs)
+    return roots, tuple(opnames), dys
+
+
+def derive_vjp(graph: TppGraph, *, policy: str = "recompute") -> BackwardPlan:
+    """Derive the backward pass of ``graph`` as new TppGraphs (see module
+    docstring).  ``graph`` is simplified first, so rate-0 dropout masks and
+    identity nodes never appear in the backward derivation either."""
+    if policy not in ("recompute", "saved"):
+        raise ValueError(f"unknown residual policy {policy!r}; "
+                         "use 'recompute' or 'saved'")
+    graph = simplify_graph(graph)
+    for o in graph.operands:
+        if o.trans:
+            raise FusionLegalityError(
+                f"graph {graph.name!r}: deriving a VJP through transposed "
+                f"operand {o.name!r} (a backward graph) is not supported")
+    if graph.reducing_node() is not None:
+        policy = "recompute"   # accumulators precede the reduction: not
+        #                        addressable as outputs of a reducing graph
+
+    sweep = _Sweep(graph)
+    n_out = len(graph.outputs)
+    dy_names = tuple(
+        sweep.fresh_name("dy" if n_out == 1 else f"dy{i}")
+        for i in range(n_out))
+
+    # -- reverse sweep: collect cotangent contributions per value ----------
+    contribs: dict[str, list[str]] = {}
+
+    def add_contrib(ref: str, val: str):
+        contribs.setdefault(graph.resolve_acc(ref), []).append(val)
+
+    for out, dy in zip(graph.outputs, dy_names):
+        add_contrib(out, dy)
+
+    for nd in reversed(graph.nodes):
+        clist = contribs.pop(nd.name, [])
+        if not clist:
+            continue
+        dv = clist[0] if len(clist) == 1 else _sum_values(sweep, clist)
+        op = EPILOGUE_OPS[nd.op]
+        if op.grad is None:
+            raise FusionLegalityError(
+                f"graph {graph.name!r}: epilogue op {nd.op!r} (node "
+                f"{nd.name!r}) has no grad rule — register one via the "
+                "EpilogueOp.grad field to differentiate through it")
+        if isinstance(op.grad, str):
+            if op.grad == "identity":
+                pairs = [(nd.inputs[0], dv)]
+            else:
+                pairs = _named_grad(sweep, nd, dv)
+        else:
+            pairs = op.grad(sweep, nd, dv)
+        for ref, val in pairs:
+            if val is not None:
+                add_contrib(ref, val)
+
+    # -- per-root accumulator cotangents and per-operand targets ----------
+    def settle(ref: str) -> Optional[str]:
+        clist = contribs.get(ref, [])
+        if not clist:
+            return None
+        return clist[0] if len(clist) == 1 else _sum_values(sweep, clist)
+
+    dacc = {r.name: settle(r.name) for r in graph.roots}
+    # every differentiable operand kind collects epilogue contributions —
+    # including lhs/rhs operands referenced as epilogue *values* (legal when
+    # the shapes coincide, e.g. M == K); their epilogue term adds to the
+    # contraction-backward term below
+    op_targets: dict[str, Optional[str]] = {}
+    for o in graph.operands:
+        if o.kind != "mask":
+            op_targets[o.name] = settle(o.name)
+
+    # -- group stage-1 targets into graphs --------------------------------
+    pool = sweep.pool
+    by_name = {nd.name: nd for nd in pool}
+    needed = sorted({v for v in (*dacc.values(), *op_targets.values())
+                     if v is not None and v in by_name})
+
+    def reducer_of(ref: str) -> tuple:
+        reds = tuple(nd.name for nd in _closure(pool, [ref])
+                     if EPILOGUE_OPS[nd.op].reduces is not None)
+        return reds
+
+    groups_by_key: dict[Any, list[str]] = {}
+    for ref in needed:
+        reds = reducer_of(ref)
+        if len(reds) > 1:
+            key = ("fallback", ref)       # two reducers: composed-TPP path
+        elif len(reds) == 1:
+            key = ("red", reds[0])
+        else:
+            key = ("plain",)
+        groups_by_key.setdefault(key, []).append(ref)
+
+    stage1: list[_Stage1Group] = []
+    value_loc: dict[str, tuple] = {d: ("dy", i)
+                                   for i, d in enumerate(dy_names)}
+    single_fwd_root = len(graph.roots) == 1
+
+    for gi, (key, refs) in enumerate(sorted(groups_by_key.items(),
+                                            key=lambda kv: str(kv[0]))):
+        outputs = tuple(dict.fromkeys(refs))
+        nodes = _closure(pool, outputs)
+        roots, opnames, dys = _group_refs(graph, nodes, dy_names)
+        grp = _Stage1Group(
+            nodes=tuple(nodes), roots=roots, operand_names=opnames,
+            dy_names=dys, outputs=outputs, single_fwd_root=single_fwd_root)
+        if key[0] != "fallback" and roots and policy == "recompute":
+            specs = tuple(
+                [graph.operand(nm) for nm in opnames]
+                + [OperandSpec(d, "tile") for d in dys])
+            try:
+                g = TppGraph(
+                    name=f"{graph.name}@bwd_dz{gi}",
+                    operands=specs, nodes=tuple(nodes), roots=roots,
+                    outputs=outputs)
+                # grad rules may reference a contraction operand as a value
+                # (e.g. mul(dy, w)) — legal as a graph but not lowerable to
+                # one Pallas kernel; keep those on the composed path
+                grp.graph = g if not contraction_operand_values(g) else None
+            except FusionLegalityError:
+                grp.graph = None          # composed-TPP fallback
+        stage1.append(grp)
+        for oi, ref in enumerate(outputs):
+            value_loc[ref] = ("g", gi, oi)
+
+    plan_stage1 = tuple(stage1)
+
+    # -- stage 2: contraction cotangents -----------------------------------
+    live_roots = [r for r in graph.roots if dacc[r.name] is not None]
+
+    def dz_opname(root: ContractionRoot) -> str:
+        return f"dz_{root.name}"
+
+    dlhs: dict[str, Optional[tuple]] = {}
+    for o in graph.operands:
+        if o.kind != "lhs":
+            continue
+        roots_p = [r for r in live_roots if r.lhs == o.name]
+        if not roots_p:
+            dlhs[o.name] = None
+            continue
+        # dX = Σ_r dz_r @ rhs_rᵀ over problem (M, N, K); forward weights are
+        # read through transposed loads, the per-root terms combined by
+        # ``add`` nodes on the VMEM-resident accumulators
+        specs = {}
+        for r in roots_p:
+            specs[dz_opname(r)] = OperandSpec(dz_opname(r), "lhs")
+            if r.rhs not in specs:
+                specs[r.rhs] = OperandSpec(r.rhs, "rhs", trans=True)
+        broots = tuple(ContractionRoot(f"t_{r.name}", dz_opname(r), r.rhs)
+                       for r in roots_p)
+        nodes, prev = [], broots[0].name
+        for i, br in enumerate(broots[1:]):
+            nd = Node(f"s{i}_add", "add", (prev, br.name))
+            nodes.append(nd)
+            prev = nd.name
+        g = TppGraph(name=f"{graph.name}@bwd_dlhs[{o.name}]",
+                     operands=tuple(specs.values()), nodes=tuple(nodes),
+                     roots=broots, outputs=(prev,))
+        dlhs[o.name] = (g, tuple(r.name for r in roots_p))
+
+    drhs = None
+    rhs_specs = [o for o in graph.operands if o.kind == "rhs"]
+    if live_roots and rhs_specs:
+        # dW_r = lhsᵀ @ dz_r for every live root in ONE multi-root nest over
+        # problem (K, M, N): forward-shared lhs operands stay shared (one
+        # transposed fetch per (K, M) visit feeds all their roots)
+        specs = {}
+        broots = []
+        for r in live_roots:
+            if r.lhs not in specs:
+                specs[r.lhs] = OperandSpec(r.lhs, "lhs", trans=True)
+            specs[dz_opname(r)] = OperandSpec(dz_opname(r), "rhs")
+            broots.append(ContractionRoot(f"w_{r.name}", r.lhs, dz_opname(r)))
+        # roots grouped by forward rhs operand (summed when one weight feeds
+        # several roots); outputs stacked (Q, K, N)
+        nodes = []
+        out_for: dict[str, str] = {}
+        for o in rhs_specs:
+            rs = [br for br, r in zip(broots, live_roots) if r.rhs == o.name]
+            if not rs:
+                continue
+            prev = rs[0].name
+            for i, br in enumerate(rs[1:]):
+                nd = Node(f"s{o.name}{i}_add", "add", (prev, br.name))
+                nodes.append(nd)
+                prev = nd.name
+            out_for[o.name] = prev
+        outputs = tuple(dict.fromkeys(out_for.values()))
+        g = TppGraph(name=f"{graph.name}@bwd_drhs", operands=tuple(specs.values()),
+                     nodes=tuple(nodes), roots=tuple(broots), outputs=outputs)
+        drhs = (g, {nm: outputs.index(v) for nm, v in out_for.items()})
+
+    # -- final cotangent recipes ------------------------------------------
+    cot: dict[str, tuple] = {}
+    for o in graph.operands:
+        t = op_targets.get(o.name)
+        if o.kind == "mask":
+            cot[o.name] = ("none",)
+        elif o.kind == "lhs":
+            # contraction term (dlhs nest) + any epilogue-value term
+            cot[o.name] = (("dlhs", o.name, t) if dlhs.get(o.name)
+                           else (("value", t) if t is not None
+                                 else ("zero",)))
+        elif o.kind == "rhs":
+            cot[o.name] = (("drhs", o.name, t)
+                           if drhs is not None and o.name in drhs[1]
+                           else (("value", t) if t is not None
+                                 else ("zero",)))
+        elif o.kind == "tile":
+            cot[o.name] = ("value", t) if t is not None else ("zero",)
+        else:  # rowvec: (N,) = column sum of the (M, N) integrand
+            cot[o.name] = ("colsum", t) if t is not None else ("zero",)
+
+    # -- "saved" policy: forward variant exposing the root accumulators ----
+    aug_forward = aug_index = None
+    if policy == "saved":
+        aug_outputs = tuple(dict.fromkeys((*graph.outputs, *graph.root_names)))
+        if aug_outputs != graph.outputs:
+            aug_forward = TppGraph(
+                name=f"{graph.name}@fwd_acc", operands=graph.operands,
+                nodes=graph.nodes, roots=graph.roots, outputs=aug_outputs)
+        aug_index = {v: i for i, v in enumerate(aug_outputs)}
+
+    return BackwardPlan(
+        forward=graph, policy=policy, dy_names=dy_names, stage1=plan_stage1,
+        value_loc=value_loc, dacc=dacc, dlhs=dlhs, drhs=drhs,
+        cotangents=cot, aug_forward=aug_forward, aug_index=aug_index)
+
+
+def backward_graphs(graph: TppGraph, *, policy: str = "recompute") -> dict:
+    """Convenience view: every fused backward TppGraph derived for
+    ``graph``, by name — feed them to ``graph_cost`` / ``autotune_graph``
+    (each gets its own ``graph_signature`` and tune-cache entries)."""
+    return derive_vjp(graph, policy=policy).fused_graphs()
+
+
+# ---------------------------------------------------------------------------
+# Runtime evaluation
+# ---------------------------------------------------------------------------
+
+def _eval_composed(graph: TppGraph, grp: _Stage1Group, ops_env: dict,
+                   acc_env: dict) -> list:
+    """Composed-TPP evaluation of one stage-1 group (the XLA reference
+    semantics applied to the derived node list)."""
+    env = dict(acc_env)
+    if grp.single_fwd_root and graph.roots and graph.roots[0].name in env:
+        env.setdefault("acc", env[graph.roots[0].name])
+
+    def val(ref):
+        if ref in env:
+            return env[ref]
+        v = ops_env[ref]
+        spec = None
+        try:
+            spec = graph.operand(ref)
+        except KeyError:
+            pass
+        if spec is not None and spec.kind == "mask":
+            return v
+        return v.astype(jnp.float32)
+
+    for nd in grp.nodes:
+        op = EPILOGUE_OPS[nd.op]
+        env[nd.name] = op.apply(*(val(r) for r in nd.inputs),
+                                **nd.attr_dict())
+    return [env[o] for o in grp.outputs]
+
+
+def _run_backward(plan: BackwardPlan, backend: Optional[str], ops_env: dict,
+                  accs: Optional[dict], dy):
+    """Evaluate the backward plan: stage-1 dz values, stage-2 contraction
+    cotangents, rowvec column sums.  Returns {operand name: fp32 cotangent}
+    (``None`` for masks)."""
+    graph = plan.forward
+    n_out = len(graph.outputs)
+    dy_vals = {d: (dy[i] if n_out > 1 else dy)
+               for i, d in enumerate(plan.dy_names)}
+
+    group_res: list[Optional[list]] = [None] * len(plan.stage1)
+
+    def eval_group(gi: int) -> list:
+        if group_res[gi] is not None:
+            return group_res[gi]
+        grp = plan.stage1[gi]
+        feed = {nm: ops_env[nm] for nm in grp.operand_names}
+        feed.update({d: dy_vals[d] for d in grp.dy_names})
+        if grp.graph is not None:
+            fn = compile_for_backend(grp.graph, backend,
+                                     out_dtype=jnp.float32)
+            out = fn(**feed)
+            res = ([out[i] for i in range(len(grp.outputs))]
+                   if len(grp.outputs) > 1 else [out])
+        else:
+            if accs is not None:
+                acc_env = {r.name: accs[r.name] for r in grp.roots}
+            else:
+                acc_env = {r.name: tpp.gemm(ops_env[r.lhs], ops_env[r.rhs],
+                                            beta=0.0, out_dtype=jnp.float32)
+                           for r in grp.roots}
+            feed.update(dy_vals)
+            res = _eval_composed(graph, grp, feed, acc_env)
+        group_res[gi] = res
+        return res
+
+    def value_of(ref: Optional[str]):
+        if ref is None:
+            return None
+        loc = plan.value_loc[ref]
+        if loc[0] == "dy":
+            return dy_vals[plan.dy_names[loc[1]]].astype(jnp.float32)
+        return eval_group(loc[1])[loc[2]].astype(jnp.float32)
+
+    dz = {r: value_of(ref) for r, ref in plan.dacc.items()
+          if ref is not None}
+
+    out: dict[str, Optional[jax.Array]] = {}
+    drhs_out = None
+    for o in graph.operands:
+        recipe = plan.cotangents[o.name]
+        if recipe[0] == "none":
+            out[o.name] = None
+        elif recipe[0] == "zero":
+            out[o.name] = jnp.zeros(ops_env[o.name].shape, jnp.float32)
+        elif recipe[0] == "value":
+            out[o.name] = value_of(recipe[1])
+        elif recipe[0] == "colsum":
+            out[o.name] = jnp.sum(value_of(recipe[1]), axis=0)
+        elif recipe[0] == "dlhs":
+            g, root_names = plan.dlhs[o.name]
+            feed = {f"dz_{r}": dz[r] for r in root_names}
+            feed.update({s.name: ops_env[s.name] for s in g.operands
+                         if s.name not in feed})
+            fn = compile_for_backend(g, backend, out_dtype=jnp.float32)
+            c = fn(**feed)
+            if recipe[2] is not None:   # epilogue-value term (shapes match)
+                c = c + value_of(recipe[2])
+            out[o.name] = c
+        else:  # drhs
+            g, index = plan.drhs
+            if drhs_out is None:
+                feed = {f"dz_{r.name}": dz[r.name]
+                        for r in graph.roots if r.name in dz}
+                feed.update({s.name: ops_env[s.name] for s in g.operands
+                             if s.name not in feed})
+                fn = compile_for_backend(g, backend, out_dtype=jnp.float32)
+                drhs_out = fn(**feed)
+            oi = index[o.name]
+            c = drhs_out[oi] if len(g.outputs) > 1 else drhs_out
+            if recipe[2] is not None:   # epilogue-value term (shapes match)
+                c = c + value_of(recipe[2])
+            out[o.name] = c
+    return out
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wrapper
+# ---------------------------------------------------------------------------
+
+_VJP_CACHE: dict = {}
+
+
+def _float0_zero(x):
+    return np.zeros(np.shape(x), dtype=jax.dtypes.float0)
+
+
+def compile_with_vjp(graph: TppGraph, backend: Optional[str] = None, *,
+                     residuals: str = "recompute", out_dtype=None, **kw):
+    """Compile ``graph`` for ``backend`` with a derived fused backward pass.
+
+    Returns ``fn(**operands)`` whose forward equals
+    ``compile_for_backend(graph, backend, ...)`` and whose VJP (under
+    ``jax.grad`` / ``jax.vjp``) runs the backward TppGraphs derived by
+    :func:`derive_vjp` — the same lowering (one fused Pallas kernel per
+    backward graph on the Pallas backends), memoized alongside
+    ``compile_for_backend``.  ``residuals`` picks the recompute-vs-saved-
+    accumulator policy (see the module docstring).  Schedule kwargs (tiles /
+    spec_string / block_steps) apply to the *forward* kernel; backward
+    graphs have their own problem shapes and pick their own tiles.
+    """
+    from repro.kernels import ops as kops
+    from repro.core.autotune import _freeze as _freeze_kw
+    backend = backend or kops.current_backend()
+    try:
+        key = (graph, backend, residuals, jnp.dtype(out_dtype).name
+               if out_dtype is not None else None,
+               tuple(sorted((k, _freeze_kw(v)) for k, v in kw.items())))
+        hit = _VJP_CACHE.get(key)
+    except TypeError:
+        key, hit = None, None
+    if hit is not None:
+        return hit
+
+    lowered = simplify_graph(graph)
+    plan = derive_vjp(lowered, policy=residuals)
+    names = tuple(s.name for s in (lowered.contraction_operands
+                                   + lowered.epilogue_operands))
+    fwd_fn = compile_for_backend(graph, backend, out_dtype=out_dtype, **kw)
+    aug_fn = None
+    if plan.aug_forward is not None:
+        aug_fn = compile_for_backend(plan.aug_forward, backend,
+                                     out_dtype=jnp.float32)
+
+    n_out = len(lowered.outputs)
+
+    @jax.custom_vjp
+    def f(*args):
+        return fwd_fn(**dict(zip(names, args)))
+
+    def f_fwd(*args):
+        env = dict(zip(names, args))
+        if aug_fn is not None:
+            aug = aug_fn(**env)
+            idx = plan.aug_index
+            if n_out > 1:
+                y = jnp.stack([aug[idx[o]] for o in lowered.outputs])
+            else:
+                y = aug[idx[lowered.outputs[0]]]
+            y = y.astype(args[0].dtype if out_dtype is None else out_dtype)
+            accs = tuple(aug[idx[r]] for r in lowered.root_names)
+            return y, (args, accs)
+        y = fwd_fn(**env)
+        if plan.policy == "saved":
+            # outputs already cover every root (e.g. fused QKV): the primal
+            # IS the accumulator stack
+            idx = plan.aug_index
+            ys = y if n_out > 1 else (y,)
+            accs = tuple(ys[idx[r]].astype(jnp.float32)
+                         for r in lowered.root_names)
+            return y, (args, accs)
+        return y, (args, None)
+
+    def f_bwd(res, dy):
+        args, accs = res
+        ops_env = dict(zip(names, args))
+        acc_env = (dict(zip(lowered.root_names, accs))
+                   if accs is not None else None)
+        cots = _run_backward(plan, backend, ops_env, acc_env, dy)
+        out = []
+        for nm, x in zip(names, args):
+            c = cots.get(nm)
+            if c is None or not jnp.issubdtype(x.dtype, jnp.floating):
+                out.append(_float0_zero(x))
+            else:
+                out.append(c.astype(x.dtype))
+        return tuple(out)
+
+    f.defvjp(f_fwd, f_bwd)
+
+    accepted = frozenset(graph.operand_names)
+
+    def apply(**operands):
+        extra = set(operands) - accepted
+        if extra:
+            raise TypeError(
+                f"graph {graph.name!r}: unexpected operands {sorted(extra)}")
+        missing = [nm for nm in names if nm not in operands]
+        if missing:
+            raise TypeError(
+                f"graph {graph.name!r}: missing operands {missing}")
+        return f(*[operands[nm] for nm in names])
+
+    if key is not None:
+        _VJP_CACHE[key] = apply
+    return apply

@@ -55,7 +55,8 @@ def graph_signature(graph: TppGraph) -> str:
     the identity: a two-root gated-MLP nest costs differently from a
     single-GEMM nest over the same operand kinds."""
     parts = [graph.name]
-    parts += [f"{o.name}:{o.kind}" for o in graph.operands]
+    parts += [f"{o.name}:{o.kind}" + ("^T" if o.trans else "")
+              for o in graph.operands]
     parts += [f"{r.name}<-{r.lhs}@{r.rhs}" for r in graph.roots]
     parts += [
         f"{nd.name}={nd.op}({','.join(nd.inputs)};{sorted(nd.attrs)})"
@@ -71,14 +72,15 @@ def _epilogue_flops(graph: TppGraph, m: int, n: int) -> float:
 
 def _scratch_bytes(graph: TppGraph, nest, tiles, n: int) -> int:
     """VMEM scratch the fused kernel allocates: one fp32 accumulator tile per
-    contraction root plus, for normalizing epilogues, the full-row panel and
-    stats strip (mirrors ``lowering._compile_pallas``)."""
+    contraction root plus, for normalizing epilogues, one full-row panel per
+    staged value and the stats strip (mirrors ``lowering._compile_pallas``)."""
     bm, bk, bn = tiles
     acc_m = nest.innermost_step("b") * bm
     acc_n = nest.innermost_step("c") * bn
     sb = len(graph.roots) * acc_m * acc_n * 4
     if graph.reducing_node() is not None:
-        sb += acc_m * n * 4 + acc_m * 2 * 4
+        sb += max(1, len(graph.staged_values())) * acc_m * n * 4
+        sb += acc_m * 2 * 4
     return sb
 
 
@@ -92,7 +94,8 @@ def _scratch_bytes_static(graph: TppGraph, loops, tiles, n: int) -> int:
     acc_n = loops[2].step * bn
     sb = len(graph.roots) * acc_m * acc_n * 4
     if graph.reducing_node() is not None:
-        sb += acc_m * n * 4 + acc_m * 2 * 4
+        sb += max(1, len(graph.staged_values())) * acc_m * n * 4
+        sb += acc_m * 2 * 4
     return sb
 
 

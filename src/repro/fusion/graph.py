@@ -19,6 +19,13 @@ The IR is deliberately tiny:
       - ``tile``   (M, N)   elementwise epilogue operand (residual, …)
       - ``mask``   (M, N)   boolean epilogue operand (dropout keep-mask)
       - ``rowvec`` (N,)     row-broadcast vector (bias, gamma, beta)
+    ``lhs``/``rhs`` operands may set ``trans=True``: the array is *stored*
+    transposed relative to its contraction role (a trans lhs has array shape
+    (K, M), a trans rhs (N, K)) and the lowering reads it with a transposed
+    tile layout — no materialized transpose.  This is what lets backward
+    graphs (``fusion.autodiff``) reuse the forward operands in place:
+    dLHS = dY @ rhsᵀ and dRHS = lhsᵀ @ dY consume the forward rhs/lhs arrays
+    through transposed loads.
   * ``ContractionRoot`` — one named GEMM ``root = lhs @ rhs``; the root name
     is a value visible to every epilogue node.  All roots of a graph share
     the problem shape (M, K, N) — that is what lets one loop nest carry them
@@ -75,12 +82,17 @@ class FusionLegalityError(LegalityError):
 class OperandSpec:
     name: str
     kind: str
+    trans: bool = False     # lhs/rhs only: array stored transposed
 
     def __post_init__(self):
         if self.kind not in OPERAND_KINDS:
             raise FusionLegalityError(
                 f"operand {self.name!r}: unknown kind {self.kind!r}; "
                 f"expected one of {OPERAND_KINDS}")
+        if self.trans and self.kind not in ("lhs", "rhs"):
+            raise FusionLegalityError(
+                f"operand {self.name!r}: trans=True only applies to "
+                f"contraction operands (lhs/rhs), not {self.kind!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,7 +139,26 @@ class EpilogueOp:
                           needs the full row resident;
     ``apply``           — fp32 tile semantics, shared by every lowering path;
     ``flops_per_elem``  — rough VPU flop count per output element, consumed
-                          by the perf model's fused-epilogue term.
+                          by the perf model's fused-epilogue term;
+    ``grad``            — reverse-mode rule consumed by ``fusion.autodiff``:
+                          ``None`` (non-differentiable — deriving a VJP
+                          through the op raises), the *name* of a registered
+                          derivative op (see the arity contract below), or a
+                          callable ``rule(sweep, node, dv) -> {input: value}``
+                          that emits cotangent nodes through the sweep;
+    ``stats_input``     — for reducing ops, the index of the value input
+                          whose per-row (sum, sum-of-squares) strip the
+                          Pallas lowering accumulates tile-by-tile (the
+                          row-panel statistics trick); ``None`` → the op is
+                          applied to the finished full-row panel directly.
+
+    A *named* grad op must agree with its forward op: identical
+    ``operand_kinds``, and a ``value_arity`` of either the forward arity (the
+    cotangent dv substitutes for the primal value input — e.g. dropout, whose
+    grad is the same masked scaling applied to dv) or forward arity + 1 (dv
+    is prepended and the primal value inputs are re-supplied — e.g.
+    ``relu_grad(dv, x)``).  ``register_epilogue`` enforces this as soon as
+    both sides are registered.
     """
 
     name: str
@@ -136,12 +167,44 @@ class EpilogueOp:
     apply: Callable
     reduces: Optional[str] = None
     flops_per_elem: float = 1.0
+    grad: Any = None
+    stats_input: Optional[int] = None
 
 
 EPILOGUE_OPS: dict[str, EpilogueOp] = {}
 
 
-def register_epilogue(op: EpilogueOp):
+def _check_grad_arity(fwd: EpilogueOp, gop: EpilogueOp):
+    """A named grad op must take the same trailing operands and either
+    substitute dv for the primal (same value arity) or prepend it (+1)."""
+    ok_arity = gop.value_arity in (fwd.value_arity, fwd.value_arity + 1)
+    if not ok_arity or gop.operand_kinds != fwd.operand_kinds:
+        raise FusionLegalityError(
+            f"epilogue op {fwd.name!r}: grad op {gop.name!r} disagrees with "
+            f"its forward op — expected value_arity {fwd.value_arity} "
+            f"(dv substitution) or {fwd.value_arity + 1} (dv prepended) with "
+            f"operand_kinds {fwd.operand_kinds}, got value_arity "
+            f"{gop.value_arity} / operand_kinds {gop.operand_kinds}")
+
+
+def register_epilogue(op: EpilogueOp, *, override: bool = False):
+    """Register ``op`` under its name.  Re-registering an existing name is an
+    error unless ``override=True`` — a silent overwrite would retroactively
+    change the semantics of every graph already built against the name (and
+    of every schedule the tune cache persisted for it)."""
+    if op.name in EPILOGUE_OPS and not override:
+        raise FusionLegalityError(
+            f"epilogue op {op.name!r} is already registered; pass "
+            "override=True to replace it deliberately")
+    # all checks run BEFORE the registry is touched — a failed registration
+    # must not leave a half-registered op behind
+    if isinstance(op.grad, str) and op.grad in EPILOGUE_OPS:
+        _check_grad_arity(op, EPILOGUE_OPS[op.grad])
+    # ops may be registered before their grad op exists — check the reverse
+    # direction too, so the pair is validated whichever side lands second
+    for other in EPILOGUE_OPS.values():
+        if isinstance(other.grad, str) and other.grad == op.name:
+            _check_grad_arity(other, op)
     EPILOGUE_OPS[op.name] = op
     return op
 
@@ -174,42 +237,192 @@ def _softmax_apply(v):
     return e / jnp.sum(e, axis=-1, keepdims=True)
 
 
+# --- derivative TPP semantics (fp32, full-row for the reducing ones) -------
+
+def _relu_grad_apply(dv, x):
+    return dv * (x > 0.0)
+
+
+def _silu_grad_apply(dv, x):
+    s = jax.nn.sigmoid(x)
+    return dv * s * (1.0 + x * (1.0 - s))
+
+
+def _sigmoid_grad_apply(dv, x):
+    s = jax.nn.sigmoid(x)
+    return dv * s * (1.0 - s)
+
+
+def _layernorm_grad_apply(dv, z, gamma, *, eps: float = 1e-5):
+    """dz of ``layernorm(z) * gamma + beta`` given dy=dv — the mean/rstd are
+    *recomputed* from z (the Pallas lowering recovers them from the row-panel
+    (sum, sum-sq) strip instead of re-reducing the panel)."""
+    mu = jnp.mean(z, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(z - mu), axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)
+    xhat = (z - mu) * rstd
+    g = dv * _f32(gamma)
+    return rstd * (g - jnp.mean(g, axis=-1, keepdims=True)
+                   - xhat * jnp.mean(g * xhat, axis=-1, keepdims=True))
+
+
+def _layernorm_gamma_grad_apply(dv, z, *, eps: float = 1e-5):
+    """Per-element dgamma integrand ``dv * xhat(z)`` — the (N,) parameter
+    cotangent is its column sum (done outside the fused region)."""
+    mu = jnp.mean(z, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(z - mu), axis=-1, keepdims=True)
+    return dv * (z - mu) * jax.lax.rsqrt(var + eps)
+
+
+def _rmsnorm_grad_apply(dv, z, gamma, *, eps: float = 1e-6):
+    ms = jnp.mean(jnp.square(z), axis=-1, keepdims=True)
+    r = jax.lax.rsqrt(ms + eps)
+    g = dv * _f32(gamma)
+    n = z.shape[-1]
+    return r * g - (r ** 3) * z * (
+        jnp.sum(g * z, axis=-1, keepdims=True) / n)
+
+
+def _rmsnorm_gamma_grad_apply(dv, z, *, eps: float = 1e-6):
+    ms = jnp.mean(jnp.square(z), axis=-1, keepdims=True)
+    return dv * z * jax.lax.rsqrt(ms + eps)
+
+
+def _softmax_grad_apply(dv, z):
+    p = _softmax_apply(z)
+    return p * (dv - jnp.sum(dv * p, axis=-1, keepdims=True))
+
+
+# --- callable grad rules (binary ops, norms — emit nodes via the sweep) ----
+# A rule returns [(input_ref, cotangent_value_name_or_None), ...]; the sweep
+# object exposes ``emit(op, inputs, attrs) -> name`` for new backward nodes.
+
+def _grad_add(sweep, node, dv):
+    return [(node.inputs[0], dv), (node.inputs[1], dv)]
+
+
+def _grad_sub(sweep, node, dv):
+    neg = sweep.emit("scale", (dv,), {"s": -1.0})
+    return [(node.inputs[0], dv), (node.inputs[1], neg)]
+
+
+def _grad_mul(sweep, node, dv):
+    a, b = node.inputs
+    return [(a, sweep.emit("mul", (dv, b))),
+            (b, sweep.emit("mul", (dv, a)))]
+
+
+def _grad_residual_add(sweep, node, dv):
+    return [(node.inputs[0], dv), (node.inputs[1], dv)]
+
+
+def _grad_bias_add(sweep, node, dv):
+    return [(node.inputs[0], dv), (node.inputs[1], dv)]
+
+
+def _grad_scale_rowvec(sweep, node, dv):
+    v, s = node.inputs
+    return [(v, sweep.emit("scale_rowvec", (dv, s))),
+            (s, sweep.emit("mul", (dv, v)))]
+
+
+def _grad_layernorm(sweep, node, dv):
+    v, gamma, beta = node.inputs
+    attrs = node.attr_dict()
+    dz = sweep.emit("layernorm_grad", (dv, v, gamma), attrs)
+    dgamma = sweep.emit("layernorm_gamma_grad", (dv, v), attrs)
+    return [(v, dz), (gamma, dgamma), (beta, dv)]
+
+
+def _grad_rmsnorm(sweep, node, dv):
+    v, gamma = node.inputs
+    attrs = node.attr_dict()
+    return [(v, sweep.emit("rmsnorm_grad", (dv, v, gamma), attrs)),
+            (gamma, sweep.emit("rmsnorm_gamma_grad", (dv, v), attrs))]
+
+
+def _grad_softmax(sweep, node, dv):
+    v = node.inputs[0]
+    return [(v, sweep.emit("softmax_grad", (dv, v)))]
+
+
 # Pointwise unary TPPs (fp32-in, fp32-out inside the fused region).
-register_epilogue(EpilogueOp("identity", 1, (), lambda v: v, flops_per_elem=0.0))
-register_epilogue(EpilogueOp("relu", 1, (), lambda v: jnp.maximum(v, 0.0)))
-register_epilogue(EpilogueOp("gelu", 1, (), tpp.gelu, flops_per_elem=10.0))
-register_epilogue(EpilogueOp("silu", 1, (), tpp.silu, flops_per_elem=5.0))
+register_epilogue(EpilogueOp("identity", 1, (), lambda v: v,
+                             flops_per_elem=0.0, grad="identity"))
+register_epilogue(EpilogueOp("relu", 1, (), lambda v: jnp.maximum(v, 0.0),
+                             grad="relu_grad"))
+register_epilogue(EpilogueOp("gelu", 1, (), tpp.gelu, flops_per_elem=10.0,
+                             grad="gelu_grad"))
+register_epilogue(EpilogueOp("silu", 1, (), tpp.silu, flops_per_elem=5.0,
+                             grad="silu_grad"))
 register_epilogue(EpilogueOp(
-    "sigmoid", 1, (), lambda v: jax.nn.sigmoid(v), flops_per_elem=4.0))
+    "sigmoid", 1, (), lambda v: jax.nn.sigmoid(v), flops_per_elem=4.0,
+    grad="sigmoid_grad"))
 register_epilogue(EpilogueOp(
-    "scale", 1, (), lambda v, *, s: v * s, flops_per_elem=1.0))
+    "scale", 1, (), lambda v, *, s: v * s, flops_per_elem=1.0, grad="scale"))
 
 # Binary TPPs over two (M, N) values.
-register_epilogue(EpilogueOp("add", 2, (), lambda a, b: a + b))
-register_epilogue(EpilogueOp("sub", 2, (), lambda a, b: a - b))
-register_epilogue(EpilogueOp("mul", 2, (), lambda a, b: a * b))
+register_epilogue(EpilogueOp("add", 2, (), lambda a, b: a + b, grad=_grad_add))
+register_epilogue(EpilogueOp("sub", 2, (), lambda a, b: a - b, grad=_grad_sub))
+register_epilogue(EpilogueOp("mul", 2, (), lambda a, b: a * b, grad=_grad_mul))
 register_epilogue(EpilogueOp(
-    "residual_add", 1, ("tile",), lambda v, r: v + _f32(r)))
+    "residual_add", 1, ("tile",), lambda v, r: v + _f32(r),
+    grad=_grad_residual_add))
 
 # Row-broadcast vector TPPs.
 register_epilogue(EpilogueOp(
-    "bias_add", 1, ("rowvec",), lambda v, b: v + _f32(b)))
+    "bias_add", 1, ("rowvec",), lambda v, b: v + _f32(b), grad=_grad_bias_add))
 register_epilogue(EpilogueOp(
-    "scale_rowvec", 1, ("rowvec",), lambda v, s: v * _f32(s)))
+    "scale_rowvec", 1, ("rowvec",), lambda v, s: v * _f32(s),
+    grad=_grad_scale_rowvec))
 
 # Masked dropout (pre-generated keep-mask, counter-based bits upstream).
+# Dropout is self-adjoint: its grad is the *same* masked scaling applied to
+# the cotangent — a named grad op with the dv-substitution arity.
 register_epilogue(EpilogueOp(
-    "dropout", 1, ("mask",), _dropout_apply, flops_per_elem=2.0))
+    "dropout", 1, ("mask",), _dropout_apply, flops_per_elem=2.0,
+    grad="dropout_grad"))
 
 # Normalizations over the feature axis — row-panel epilogues.
 register_epilogue(EpilogueOp(
     "layernorm", 1, ("rowvec", "rowvec"), _layernorm_apply,
-    reduces="n", flops_per_elem=6.0))
+    reduces="n", flops_per_elem=6.0, grad=_grad_layernorm, stats_input=0))
 register_epilogue(EpilogueOp(
     "rmsnorm", 1, ("rowvec",), _rmsnorm_apply, reduces="n",
-    flops_per_elem=4.0))
+    flops_per_elem=4.0, grad=_grad_rmsnorm, stats_input=0))
 register_epilogue(EpilogueOp(
-    "softmax", 1, (), _softmax_apply, reduces="n", flops_per_elem=7.0))
+    "softmax", 1, (), _softmax_apply, reduces="n", flops_per_elem=7.0,
+    grad=_grad_softmax))
+
+# Derivative TPPs (fusion.autodiff's backward epilogue DAGs).  The pointwise
+# ones take (dv, primal-input); the reducing ones recompute the row
+# statistics of their primal input via the same row-panel strip the forward
+# norms use (``stats_input=1``: the staged z panel feeds (sum, sum-sq)).
+register_epilogue(EpilogueOp("relu_grad", 2, (), _relu_grad_apply,
+                             flops_per_elem=2.0))
+register_epilogue(EpilogueOp("gelu_grad", 2, (), tpp.gelu_grad,
+                             flops_per_elem=14.0))
+register_epilogue(EpilogueOp("silu_grad", 2, (), _silu_grad_apply,
+                             flops_per_elem=8.0))
+register_epilogue(EpilogueOp("sigmoid_grad", 2, (), _sigmoid_grad_apply,
+                             flops_per_elem=6.0))
+register_epilogue(EpilogueOp("dropout_grad", 1, ("mask",), _dropout_apply,
+                             flops_per_elem=2.0))
+register_epilogue(EpilogueOp(
+    "layernorm_grad", 2, ("rowvec",), _layernorm_grad_apply, reduces="n",
+    flops_per_elem=12.0, stats_input=1))
+register_epilogue(EpilogueOp(
+    "layernorm_gamma_grad", 2, (), _layernorm_gamma_grad_apply, reduces="n",
+    flops_per_elem=8.0, stats_input=1))
+register_epilogue(EpilogueOp(
+    "rmsnorm_grad", 2, ("rowvec",), _rmsnorm_grad_apply, reduces="n",
+    flops_per_elem=10.0, stats_input=1))
+register_epilogue(EpilogueOp(
+    "rmsnorm_gamma_grad", 2, (), _rmsnorm_gamma_grad_apply, reduces="n",
+    flops_per_elem=6.0, stats_input=1))
+register_epilogue(EpilogueOp(
+    "softmax_grad", 2, (), _softmax_grad_apply, reduces="n",
+    flops_per_elem=10.0))
 
 
 # ---------------------------------------------------------------------------
@@ -300,6 +513,53 @@ class TppGraph:
                 return nd
         return None
 
+    def post_reduce_nodes(self) -> tuple[Node, ...]:
+        """Pointwise nodes *after* the reducing node — they execute on the
+        finished full-row panel in the last-N-visit branch (empty when the
+        graph has no reducing node)."""
+        red = self.reducing_node()
+        if red is None:
+            return ()
+        idx = self.nodes.index(red)
+        return self.nodes[idx + 1:]
+
+    def staged_values(self) -> tuple[str, ...]:
+        """Computed value inputs of the reducing node (root accumulators or
+        pre-reduce node outputs) — each is staged as a VMEM row panel by the
+        Pallas lowering so the reduction sees full rows."""
+        red = self.reducing_node()
+        if red is None:
+            return ()
+        return self.staged_values_of(red, self.nodes.index(red))
+
+    def staged_values_of(self, red: Node, idx: int) -> tuple[str, ...]:
+        op = EPILOGUE_OPS[red.op]
+        computed = set(self.root_names) | {nd.name for nd in self.nodes[:idx]}
+        if len(self.roots) == 1:
+            computed.add("acc")
+        return tuple(dict.fromkeys(
+            r for r in red.inputs[:op.value_arity] if r in computed))
+
+    def row_resident_operands(self) -> frozenset[str]:
+        """tile/mask operands consumed as *values* by the reducing node or a
+        post-reduce node: they must be mapped as full-row (bm, N) blocks so
+        the close branch sees complete rows (pre-reduce consumers slice the
+        current N tile out of the row block)."""
+        red = self.reducing_node()
+        if red is None:
+            return frozenset()
+        names = set()
+        idx = self.nodes.index(red)
+        for nd in self.nodes[idx:]:
+            for ref in nd.inputs:   # value AND operand positions
+                try:
+                    spec = self.operand(ref)
+                except KeyError:
+                    continue
+                if spec.kind in ("tile", "mask"):
+                    names.add(ref)
+        return frozenset(names)
+
     @property
     def operand_names(self) -> tuple[str, ...]:
         return tuple(o.name for o in self.operands)
@@ -357,6 +617,8 @@ class TppGraph:
         visible = set(names) | set(root_names)
         if len(self.roots) == 1:
             visible.add("acc")
+        reduce_node: Optional[Node] = None
+        post_visible: set[str] = set()   # values a post-reduce node may read
         for i, nd in enumerate(self.nodes):
             op = EPILOGUE_OPS.get(nd.op)
             if op is None:
@@ -387,11 +649,31 @@ class TppGraph:
                     raise FusionLegalityError(
                         f"graph {self.name!r}: node {nd.name!r} ({nd.op}) "
                         f"expects a {kind!r} operand, {ref!r} is {spec.kind!r}")
-            if op.reduces is not None and i != len(self.nodes) - 1:
-                raise FusionLegalityError(
-                    f"graph {self.name!r}: reducing node {nd.name!r} "
-                    f"({nd.op}) must be the last epilogue node — its output "
-                    "needs the full row resident (row-panel epilogue)")
+            if reduce_node is not None:
+                # post-reduce band: pointwise nodes on the finished full-row
+                # panel.  They may read operands (mapped full-row), the
+                # reducing value, the reducer's staged inputs (VMEM-resident
+                # panels), and later post-reduce values — but NOT other
+                # pre-reduce computed values or root accumulators, which
+                # only ever hold the current N tile.
+                if op.reduces is not None:
+                    raise FusionLegalityError(
+                        f"graph {self.name!r}: node {nd.name!r} ({nd.op}) — "
+                        "at most one reducing epilogue per graph (one row "
+                        "panel + statistics strip)")
+                for ref in nd.inputs[:op.value_arity]:
+                    if ref not in post_visible and ref not in names:
+                        raise FusionLegalityError(
+                            f"graph {self.name!r}: post-reduce node "
+                            f"{nd.name!r} ({nd.op}) references {ref!r}, "
+                            "which is not full-row resident after the "
+                            f"reducing node ({reduce_node.op}) closes — only "
+                            "operands, the reducing value, its staged "
+                            "inputs, and later post-reduce values are")
+                post_visible.add(nd.name)
+            elif op.reduces is not None:
+                reduce_node = nd
+                post_visible = {nd.name, *self.staged_values_of(nd, i)}
             if nd.name in visible:
                 raise FusionLegalityError(
                     f"graph {self.name!r}: node name {nd.name!r} shadows an "
@@ -399,8 +681,9 @@ class TppGraph:
             visible.add(nd.name)
 
         # outputs: computed values only (roots/nodes, not plain operands —
-        # the lowering's output write has no operand fallback), and stacking
-        # and row-panel norms don't mix
+        # the lowering's output write has no operand fallback); in a reducing
+        # graph every output is written in the close branch, so it must be
+        # the reducing value or a post-reduce value
         if len(set(self.outputs)) != len(self.outputs):
             raise FusionLegalityError(
                 f"graph {self.name!r}: duplicate outputs {self.outputs}")
@@ -410,11 +693,12 @@ class TppGraph:
                 raise FusionLegalityError(
                     f"graph {self.name!r}: output {ref!r} names no root, "
                     "node, or the 'acc' alias")
-        if self.reducing_node() is not None and len(self.outputs) != 1:
-            raise FusionLegalityError(
-                f"graph {self.name!r}: a reducing epilogue "
-                f"({self.reducing_node().op}) requires a single output — "
-                "the row-panel trick produces one (M, N) value, not a stack")
+            if reduce_node is not None and ref not in post_visible:
+                raise FusionLegalityError(
+                    f"graph {self.name!r}: output {ref!r} is not full-row "
+                    f"resident when the reducing epilogue "
+                    f"({reduce_node.op}) closes — outputs of a reducing "
+                    "graph must be the reducing value or post-reduce values")
 
     # -- convenience builder --------------------------------------------
     @classmethod
@@ -442,7 +726,9 @@ class TppGraph:
     def describe(self) -> str:
         out = [f"TppGraph {self.name!r}:"]
         for r in self.roots:
-            out.append(f"  {r.name} = gemm({r.lhs}, {r.rhs})")
+            def t(nm):
+                return nm + "^T" if self.operand(nm).trans else nm
+            out.append(f"  {r.name} = gemm({t(r.lhs)}, {t(r.rhs)})")
         for nd in self.nodes:
             attrs = ", ".join(f"{k}={v}" for k, v in nd.attrs)
             out.append(

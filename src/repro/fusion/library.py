@@ -20,16 +20,26 @@ Multi-root graphs (the paper's multi-GEMM fused blocks):
 
 Graphs are cached by their static parameters so repeated layer construction
 (inside jit traces) reuses the same graph object; the ``fused_*_apply``
-helpers go through ``compile_for_backend``, which additionally memoizes the
-compiled callable per (graph, backend, options) — an eager call neither
-rebuilds the closure nor re-plans the nest.
+helpers go through ``compile_with_vjp`` by default — forward behaviour is
+identical to ``compile_for_backend`` (same memoization), but ``jax.grad``
+through the helper runs the *derived backward TppGraphs* of
+``fusion.autodiff`` as fused kernels instead of differentiating through the
+XLA composition.  Pass ``vjp=False`` to get the plain forward compilation
+(e.g. to compare against XLA's own autodiff).
 """
 from __future__ import annotations
 
 import functools
 
+from repro.fusion.autodiff import compile_with_vjp
 from repro.fusion.graph import ContractionRoot, Node, OperandSpec, TppGraph
 from repro.fusion.lowering import compile_for_backend
+
+
+def _dispatch(graph, backend, vjp, kw):
+    if vjp:
+        return compile_with_vjp(graph, backend, **kw)
+    return compile_for_backend(graph, backend, **kw)
 
 __all__ = [
     "fused_output_graph", "fused_mlp_graph", "fused_gated_mlp_graph",
@@ -128,12 +138,12 @@ def fused_attn_out_graph(residual: bool = False, norm: str = "",
 
 def fused_output_apply(x, w, bias, residual, gamma, beta, *, keep_mask=None,
                        dropout_rate: float = 0.0, eps: float = 1e-5,
-                       backend=None, **kw):
+                       backend=None, vjp: bool = True, **kw):
     """Backend-dispatched fused-output layer through the fusion compiler —
     drop-in for ``kernels.fused_output.fused_output_pallas``.  At rate 0 no
     keep-mask is built or passed: the simplified graph has no mask operand."""
     g = fused_output_graph(dropout_rate, eps)
-    fn = compile_for_backend(g, backend, **kw)
+    fn = _dispatch(g, backend, vjp, kw)
     operands = dict(x=x, w=w, bias=bias, residual=residual,
                     gamma=gamma, beta=beta)
     if dropout_rate > 0.0:
@@ -146,33 +156,33 @@ def fused_output_apply(x, w, bias, residual, gamma, beta, *, keep_mask=None,
 
 
 def fused_mlp_apply(x, w, bias, *, activation: str = "gelu", backend=None,
-                    **kw):
+                    vjp: bool = True, **kw):
     """Backend-dispatched fused up-projection: act(x @ w + bias)."""
     g = fused_mlp_graph(activation)
-    fn = compile_for_backend(g, backend, **kw)
+    fn = _dispatch(g, backend, vjp, kw)
     return fn(x=x, w=w, bias=bias)
 
 
 def fused_gated_mlp_apply(x, wg, wu, *, activation: str = "silu",
-                          backend=None, **kw):
+                          backend=None, vjp: bool = True, **kw):
     """Backend-dispatched fused gated up-projection: act(x@wg) * (x@wu) in
     one two-root nest."""
     g = fused_gated_mlp_graph(activation)
-    fn = compile_for_backend(g, backend, **kw)
+    fn = _dispatch(g, backend, vjp, kw)
     return fn(x=x, wg=wg, wu=wu)
 
 
-def fused_qkv_apply(x, wq, wk, wv, *, backend=None, **kw):
+def fused_qkv_apply(x, wq, wk, wv, *, backend=None, vjp: bool = True, **kw):
     """Backend-dispatched fused QKV projection.  Returns the (3, M, N) stack;
     unpack with ``q, k, v = fused_qkv_apply(...)``."""
     g = fused_qkv_graph()
-    fn = compile_for_backend(g, backend, **kw)
+    fn = _dispatch(g, backend, vjp, kw)
     return fn(x=x, wq=wq, wk=wk, wv=wv)
 
 
 def fused_attn_out_apply(o, wo, *, residual=None, gamma=None, beta=None,
                          norm: str = "", eps: float = 1e-5, backend=None,
-                         **kw):
+                         vjp: bool = True, **kw):
     """Backend-dispatched attention output projection (+residual, +norm)."""
     need = {"layernorm": ("gamma", "beta"), "rmsnorm": ("gamma",)}.get(norm, ())
     given = {"gamma": gamma, "beta": beta}
@@ -183,7 +193,7 @@ def fused_attn_out_apply(o, wo, *, residual=None, gamma=None, beta=None,
             f"fused_attn_out_apply: norm={norm!r} takes parameters "
             f"{list(need)}; missing {missing}, unused {stray}")
     g = fused_attn_out_graph(residual is not None, norm, eps)
-    fn = compile_for_backend(g, backend, **kw)
+    fn = _dispatch(g, backend, vjp, kw)
     operands = dict(o=o, wo=wo)
     if residual is not None:
         operands["residual"] = residual

@@ -100,9 +100,14 @@ def build_nest_inputs(graph: TppGraph, m: int, k: int, n: int,
     (M, K, N) with base tiles (bm, bk, bn).  Operand order is
     ``[*contraction_operands, *epilogue_operands]`` (shared lhs operands
     mapped — and fetched — once); row vectors are fully VMEM-resident
-    ``(1, n)`` blocks, (M, N) operands are tiled with the output.  A
-    multi-output graph's out map carries a leading unindexed stacking axis
-    of extent R (array shape ``(R, M, N)``)."""
+    ``(1, n)`` blocks, (M, N) operands are tiled with the output — except
+    operands consumed by the reducing node or a post-reduce node, which get
+    full-row ``(bm, n)`` blocks (the close branch needs complete rows).
+    Contraction operands with ``trans=True`` are mapped with their stored
+    (transposed) layout — lhs (K, M), rhs (N, K) — and the kernel issues the
+    MXU op with swapped contraction dims instead of materializing a
+    transpose.  A multi-output graph's out map carries a leading unindexed
+    stacking axis of extent R (array shape ``(R, M, N)``)."""
     bm, bk, bn = tiles
     if m % bm or k % bk or n % bn:
         raise FusionLegalityError(
@@ -115,20 +120,30 @@ def build_nest_inputs(graph: TppGraph, m: int, k: int, n: int,
         LoopSpec(0, mb, 1, block_steps=tuple(block_steps.get("b", ())), name="M"),
         LoopSpec(0, nb, 1, block_steps=tuple(block_steps.get("c", ())), name="N"),
     ]
+    row_res = graph.row_resident_operands()
     in_maps = []
     for spec in graph.contraction_operands:
         if spec.kind == "lhs":
-            in_maps.append(TensorMap(("b", "a"), (bm, bk), layout="flat"))
+            in_maps.append(TensorMap(("a", "b"), (bk, bm), layout="flat")
+                           if spec.trans
+                           else TensorMap(("b", "a"), (bm, bk), layout="flat"))
         else:
-            in_maps.append(TensorMap(("a", "c"), (bk, bn), layout="flat"))
+            in_maps.append(TensorMap(("c", "a"), (bn, bk), layout="flat")
+                           if spec.trans
+                           else TensorMap(("a", "c"), (bk, bn), layout="flat"))
     for spec in graph.epilogue_operands:
         if spec.kind in ("tile", "mask"):
-            in_maps.append(TensorMap(("b", "c"), (bm, bn), layout="flat"))
+            in_maps.append(
+                TensorMap(("b", None), (bm, n), layout="flat")
+                if spec.name in row_res
+                else TensorMap(("b", "c"), (bm, bn), layout="flat"))
         else:  # rowvec — whole vector visible every call (norms need full N)
             in_maps.append(TensorMap((None, None), (1, n), layout="flat"))
     n_out = len(graph.outputs)
     if graph.reducing_node() is not None:
-        out_map = TensorMap(("b", None), (bm, n), layout="flat")
+        out_map = (TensorMap((None, "b", None), (n_out, bm, n), layout="flat")
+                   if n_out > 1
+                   else TensorMap(("b", None), (bm, n), layout="flat"))
     elif n_out > 1:
         out_map = TensorMap((None, "b", "c"), (n_out, bm, bn), layout="flat")
     else:
@@ -168,9 +183,12 @@ def _compile_xla(graph: TppGraph, *, out_dtype=None, ignore=frozenset()):
         x = operands[graph.roots[0].lhs]
         env = {}
         for root in graph.roots:
-            env[root.name] = tpp.gemm(
-                operands[root.lhs], operands[root.rhs],
-                beta=0.0, out_dtype=jnp.float32)
+            a, b = operands[root.lhs], operands[root.rhs]
+            if graph.operand(root.lhs).trans:
+                a = a.T
+            if graph.operand(root.rhs).trans:
+                b = b.T
+            env[root.name] = tpp.gemm(a, b, beta=0.0, out_dtype=jnp.float32)
         if len(graph.roots) == 1:
             env["acc"] = env[graph.roots[0].name]
 
@@ -197,17 +215,109 @@ def _compile_xla(graph: TppGraph, *, out_dtype=None, ignore=frozenset()):
 # Path 2: one fused Pallas kernel
 # ---------------------------------------------------------------------------
 
+# Reducing ops whose close-branch formula recovers the row statistics from
+# the (sum, sum-of-squares) strip accumulated tile-by-tile over the staged
+# stats panel, instead of re-reducing the finished panel.  ``vals`` are the
+# op's full-row value inputs, ``params`` its full-row (1, n) operand inputs.
+
+def _ln_close(vals, params, stats, n, attrs):
+    (z,) = vals
+    gamma, beta = params
+    mu = stats[:, 0:1] / n
+    var = jnp.maximum(stats[:, 1:2] / n - mu * mu, 0.0)
+    y = (z - mu) * jax.lax.rsqrt(var + attrs.get("eps", 1e-5))
+    return y * gamma + beta
+
+
+def _rms_close(vals, params, stats, n, attrs):
+    (z,) = vals
+    ms = stats[:, 1:2] / n
+    return z * jax.lax.rsqrt(ms + attrs.get("eps", 1e-6)) * params[0]
+
+
+def _ln_grad_close(vals, params, stats, n, attrs):
+    dv, z = vals
+    mu = stats[:, 0:1] / n
+    var = jnp.maximum(stats[:, 1:2] / n - mu * mu, 0.0)
+    rstd = jax.lax.rsqrt(var + attrs.get("eps", 1e-5))
+    xhat = (z - mu) * rstd
+    g = dv * params[0]
+    return rstd * (g - jnp.mean(g, axis=1, keepdims=True)
+                   - xhat * jnp.mean(g * xhat, axis=1, keepdims=True))
+
+
+def _ln_gamma_close(vals, params, stats, n, attrs):
+    dv, z = vals
+    mu = stats[:, 0:1] / n
+    var = jnp.maximum(stats[:, 1:2] / n - mu * mu, 0.0)
+    return dv * (z - mu) * jax.lax.rsqrt(var + attrs.get("eps", 1e-5))
+
+
+def _rms_grad_close(vals, params, stats, n, attrs):
+    dv, z = vals
+    ms = stats[:, 1:2] / n
+    r = jax.lax.rsqrt(ms + attrs.get("eps", 1e-6))
+    g = dv * params[0]
+    return r * g - (r ** 3) * z * (jnp.sum(g * z, axis=1, keepdims=True) / n)
+
+
+def _rms_gamma_close(vals, params, stats, n, attrs):
+    dv, z = vals
+    ms = stats[:, 1:2] / n
+    return dv * z * jax.lax.rsqrt(ms + attrs.get("eps", 1e-6))
+
+
+_STATS_CLOSE = {
+    "layernorm": _ln_close,
+    "rmsnorm": _rms_close,
+    "layernorm_grad": _ln_grad_close,
+    "layernorm_gamma_grad": _ln_gamma_close,
+    "rmsnorm_grad": _rms_grad_close,
+    "rmsnorm_gamma_grad": _rms_gamma_close,
+}
+
+
+def contraction_operand_values(graph: TppGraph) -> frozenset[str]:
+    """Contraction (lhs/rhs) operands referenced as epilogue *values*.  The
+    XLA path supports them (full arrays); the Pallas kernel cannot — at
+    epilogue time the VMEM-resident lhs/rhs tile is the last (K-indexed)
+    fetch, not an (M, N)-shaped value."""
+    con = {o.name for o in graph.operands if o.kind in ("lhs", "rhs")}
+    return frozenset(r for nd in graph.nodes for r in nd.inputs if r in con)
+
+
 def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
                     block_steps=None, out_dtype=None, interpret=False,
                     mesh=None, vmem_limit_bytes=None, ignore=frozenset()):
+    bad = contraction_operand_values(graph)
+    if bad:
+        raise FusionLegalityError(
+            f"graph {graph.name!r}: contraction operand(s) {sorted(bad)} are "
+            "referenced as epilogue values — the fused Pallas kernel only "
+            "sees their K-indexed tiles at epilogue time; use the XLA path "
+            "for this graph")
     reducing = graph.reducing_node()
-    pre_nodes = tuple(nd for nd in graph.nodes if nd is not reducing)
+    red_idx = graph.nodes.index(reducing) if reducing is not None else None
+    pre_nodes = graph.nodes if reducing is None else graph.nodes[:red_idx]
+    post_nodes = graph.post_reduce_nodes()
+    staged = graph.staged_values()
+    row_res = graph.row_resident_operands()
     con_specs = graph.contraction_operands
     ep_specs = graph.epilogue_operands
     roots = graph.roots
     outputs = graph.outputs
     # position of each contraction operand in the packed/ref order
     con_pos = {s.name: i for i, s in enumerate(con_specs)}
+    con_trans = {s.name: s.trans for s in con_specs}
+    red_op = EPILOGUE_OPS[reducing.op] if reducing is not None else None
+    # the stats strip accumulates (sum, sum-sq) of the op's declared stats
+    # input tile-by-tile — only possible when that input is a staged panel
+    # (a computed value); ops without a stats formula run a full-row apply
+    use_stats = (
+        reducing is not None and red_op.stats_input is not None
+        and reducing.op in _STATS_CLOSE
+        and reducing.inputs[red_op.stats_input] in staged)
+    stats_name = (reducing.inputs[red_op.stats_input] if use_stats else None)
     plan_cache: dict = {}  # (operand shapes/dtypes) -> pallas call
 
     def build_call(m, k, n, x_dtype, odt):
@@ -237,15 +347,12 @@ def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
             o_ref = refs[n_con + n_ep]
             scratch = refs[n_con + n_ep + 1:]
             acc_refs = {r.name: scratch[i] for i, r in enumerate(roots)}
+            panel_refs = {nm: scratch[len(roots) + i]
+                          for i, nm in enumerate(staged)}
+            stats_ref = (scratch[len(roots) + len(staged)]
+                         if use_stats else None)
             ik = ind["a"]
             jc = ind["c"]
-
-            # only the strip-statistics norms consume the stats scratch;
-            # softmax-style reducers work off the staged panel alone
-            use_stats = reducing is not None and reducing.op in (
-                "layernorm", "rmsnorm")
-            if reducing is not None:
-                panel_ref, stats_ref = scratch[len(roots)], scratch[len(roots) + 1]
 
             if use_stats:
                 @pl.when(jnp.logical_and(jc == 0, ik == 0))
@@ -258,12 +365,17 @@ def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
                     acc_ref[...] = tpp.zero(acc_ref.shape, acc_ref.dtype)
 
             # one MXU issue per root; a shared lhs tile is read from its
-            # (single) VMEM ref once per root, fetched from HBM once
+            # (single) VMEM ref once per root, fetched from HBM once.  A
+            # trans operand's tile arrives in stored (transposed) layout —
+            # the dot_general contracts over the matching dim instead of
+            # materializing a transpose.
             for root in roots:
+                lc = 0 if con_trans[root.lhs] else 1
+                rc = 1 if con_trans[root.rhs] else 0
                 acc_refs[root.name][...] += jax.lax.dot_general(
                     con_refs[con_pos[root.lhs]][...],
                     con_refs[con_pos[root.rhs]][...],
-                    dimension_numbers=(((1,), (0,)), ((), ())),
+                    dimension_numbers=(((lc,), (rc,)), ((), ())),
                     preferred_element_type=jnp.float32,
                 )
 
@@ -282,7 +394,12 @@ def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
                     if spec.kind == "rowvec":
                         v = r[...] if full_row else r[:, pl.ds(jc * bn, acc_n)]
                         return v.astype(jnp.float32)
-                    v = r[...]
+                    if spec.name in row_res and not full_row:
+                        # full-row block; pre-reduce consumers slice their
+                        # current N tile out of it
+                        v = r[:, pl.ds(jc * bn, acc_n)]
+                    else:
+                        v = r[...]
                     return v if spec.kind == "mask" else v.astype(jnp.float32)
 
                 for nd in pre_nodes:
@@ -298,44 +415,59 @@ def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
                         o_ref[...] = env[outputs[0]].astype(o_ref.dtype)
                     return
 
-                # row-panel statistics trick: stage the pre-norm tile, close
-                # the (sum, sum-sq) strip, normalize the panel on the last
-                # N visit (kernels.fused_output, generalized)
-                tail = value(reducing.inputs[0])
-                panel_ref[:, pl.ds(jc * bn, acc_n)] = tail
+                # row-panel statistics trick (kernels.fused_output,
+                # generalized): stage each computed value the reducing op
+                # consumes, close the (sum, sum-sq) strip over its stats
+                # input, and run the reduction — plus any post-reduce
+                # pointwise nodes — on the finished panels at the last N
+                # visit
+                for nm in staged:
+                    panel_refs[nm][:, pl.ds(jc * bn, acc_n)] = env[nm]
                 if use_stats:
-                    stats_ref[:, 0] += jnp.sum(tail, axis=1)
-                    stats_ref[:, 1] += jnp.sum(tail * tail, axis=1)
+                    zt = env[stats_name]
+                    stats_ref[:, 0] += jnp.sum(zt, axis=1)
+                    stats_ref[:, 1] += jnp.sum(zt * zt, axis=1)
 
                 @pl.when(jc == nb - c_step)
                 def _():
                     attrs = reducing.attr_dict()
-                    op = EPILOGUE_OPS[reducing.op]
-                    panel = panel_ref[...]
-                    params = [value(r, full_row=True)
-                              for r in reducing.inputs[op.value_arity:]]
-                    if reducing.op == "layernorm":
-                        mu = stats_ref[:, 0:1] / n
-                        var = jnp.maximum(
-                            stats_ref[:, 1:2] / n - mu * mu, 0.0)
-                        y = (panel - mu) * jax.lax.rsqrt(
-                            var + attrs.get("eps", 1e-5))
-                        y = y * params[0] + params[1]
-                    elif reducing.op == "rmsnorm":
-                        ms = stats_ref[:, 1:2] / n
-                        y = panel * jax.lax.rsqrt(
-                            ms + attrs.get("eps", 1e-6)) * params[0]
+                    fullenv = {nm: panel_refs[nm][...] for nm in staged}
+
+                    def fval(ref):
+                        if ref in fullenv:
+                            return fullenv[ref]
+                        return value(ref, full_row=True)
+
+                    vals = [fval(r)
+                            for r in reducing.inputs[:red_op.value_arity]]
+                    params = [fval(r)
+                              for r in reducing.inputs[red_op.value_arity:]]
+                    if use_stats:
+                        y = _STATS_CLOSE[reducing.op](
+                            vals, params, stats_ref[...], n, attrs)
                     else:  # softmax & any panel-wide reducer: full-row apply
-                        y = op.apply(panel, *params, **attrs)
-                    o_ref[...] = y.astype(o_ref.dtype)
+                        y = red_op.apply(*vals, *params, **attrs)
+                    fullenv[reducing.name] = y
+
+                    for nd in post_nodes:
+                        op = EPILOGUE_OPS[nd.op]
+                        fullenv[nd.name] = op.apply(
+                            *(fval(r) for r in nd.inputs), **nd.attr_dict())
+
+                    if n_out > 1:
+                        o_ref[...] = jnp.stack(
+                            [fullenv[o] for o in outputs]).astype(o_ref.dtype)
+                    else:
+                        o_ref[...] = fullenv[outputs[0]].astype(o_ref.dtype)
 
         scratch_shapes = [pltpu.VMEM((acc_m, acc_n), jnp.float32)
                           for _ in roots]
         if reducing is not None:
-            scratch_shapes += [
-                pltpu.VMEM((acc_m, n), jnp.float32),   # pre-norm row panel
-                pltpu.VMEM((acc_m, 2), jnp.float32),   # (sum, sum-sq) strip
-            ]
+            scratch_shapes += [pltpu.VMEM((acc_m, n), jnp.float32)
+                               for _ in staged]       # staged row panels
+            if use_stats:
+                scratch_shapes.append(
+                    pltpu.VMEM((acc_m, 2), jnp.float32))  # (sum, sum-sq)
 
         db = jnp.dtype(x_dtype).itemsize
         ep_elems = sum(
@@ -363,21 +495,28 @@ def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
     def fn(**operands):
         packed = _pack_operands(graph, operands, ignore)
         x = packed[0]   # contraction_operands lead with roots[0].lhs
-        m, k = x.shape
+        if con_specs[0].trans:
+            k, m = x.shape
+        else:
+            m, k = x.shape
         for spec, v in zip(con_specs, packed):
-            if spec.kind == "lhs" and v.shape != (m, k):
-                raise FusionLegalityError(
-                    f"graph {graph.name!r}: lhs operand {spec.name!r} has "
-                    f"shape {v.shape}, expected ({m}, {k}) — multi-root "
-                    "graphs share one (M, K, N) problem shape")
-        n = next(v.shape[1] for spec, v in zip(con_specs, packed)
-                 if spec.kind == "rhs")
+            if spec.kind == "lhs":
+                want = (k, m) if spec.trans else (m, k)
+                if v.shape != want:
+                    raise FusionLegalityError(
+                        f"graph {graph.name!r}: lhs operand {spec.name!r} "
+                        f"has shape {v.shape}, expected {want} — multi-root "
+                        "graphs share one (M, K, N) problem shape")
+        n = next(v.shape[0] if spec.trans else v.shape[1]
+                 for spec, v in zip(con_specs, packed) if spec.kind == "rhs")
         for spec, v in zip(con_specs, packed):
-            if spec.kind == "rhs" and v.shape != (k, n):
-                raise FusionLegalityError(
-                    f"graph {graph.name!r}: rhs operand {spec.name!r} has "
-                    f"shape {v.shape}, expected ({k}, {n}) — multi-root "
-                    "graphs share one (M, K, N) problem shape")
+            if spec.kind == "rhs":
+                want = (n, k) if spec.trans else (k, n)
+                if v.shape != want:
+                    raise FusionLegalityError(
+                        f"graph {graph.name!r}: rhs operand {spec.name!r} "
+                        f"has shape {v.shape}, expected {want} — multi-root "
+                        "graphs share one (M, K, N) problem shape")
         odt = out_dtype or x.dtype
         key = tuple((v.shape, jnp.dtype(v.dtype).name) for v in packed)
         call = plan_cache.get(key)

@@ -98,12 +98,16 @@ def init_attention(cfg: ModelConfig, key):
 
 def attention_apply(cfg: ModelConfig, p, x, *, kind: str = "attn",
                     positions=None, cache=None, cache_pos=None,
-                    xattn_kv=None):
+                    xattn_kv=None, residual=None):
     """x (B, S, d).  kind ∈ {attn, local, global, bidir, cross}.
 
     Training/prefill: cache None.  Decode: S == 1, ``cache`` = dict(k, v)
     ring buffers (B, Hk, S_max, hd), ``cache_pos`` scalar write index.
-    Returns (out, new_cache)."""
+    ``residual`` (B, S, d): when given, the block residual is folded into
+    the output projection — with ``cfg.use_fusion`` it rides the
+    ``fused_attn_out_graph`` ``+residual`` tail inside the same kernel as
+    the GEMM, so the caller must NOT add it again.  Returns
+    (out, new_cache)."""
     dt = compute_dtype(cfg)
     b, s, d = x.shape
     h, hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -175,13 +179,16 @@ def attention_apply(cfg: ModelConfig, p, x, *, kind: str = "attn",
 
     o = o.transpose(0, 2, 1, 3).reshape(b * s, h * hd)
     if cfg.use_fusion:
-        # output projection through the fusion compiler (fused_attn_out_graph
-        # also carries optional +residual/+norm tails for callers that fuse
-        # the whole post-attention epilogue)
+        # output projection through the fusion compiler; the block residual
+        # (lm.block_apply) rides the graph's +residual tail — GEMM and
+        # residual add in ONE kernel, fused backward via compile_with_vjp
         from repro.fusion import fused_attn_out_apply
-        out = fused_attn_out_apply(o, pw["wo"]).reshape(b, s, d)
+        res2d = residual.reshape(b * s, d) if residual is not None else None
+        out = fused_attn_out_apply(o, pw["wo"], residual=res2d).reshape(b, s, d)
     else:
         out = ops.matmul(o, pw["wo"]).reshape(b, s, d)
+        if residual is not None:
+            out = residual + out
     return out, new_cache
 
 

@@ -89,6 +89,7 @@ def block_apply(cfg: ModelConfig, p, x, *, kind: str, moe: bool,
     aux = jnp.zeros((), jnp.float32)
     h = B._norm(cfg, p["norm1"], x)
     new_cache = dict(cache) if cache is not None else None
+    res_folded = False
     if kind == "mamba":
         out, c = B.mamba_apply(cfg, p["mamba"], h,
                                cache=cache.get("mamba") if cache else None)
@@ -101,13 +102,19 @@ def block_apply(cfg: ModelConfig, p, x, *, kind: str, moe: bool,
         if new_cache is not None:
             new_cache["mla"] = c
     else:
+        # with use_fusion the block residual is threaded into the fused
+        # attention output projection (+residual tail — one kernel for
+        # GEMM + add, forward and backward); attention_apply returns the
+        # post-residual value, so skip the add below
+        res_folded = cfg.use_fusion
         out, c = B.attention_apply(cfg, p["attn"], h, kind=kind,
                                    positions=positions,
                                    cache=cache.get("attn") if cache else None,
-                                   cache_pos=cache_pos)
+                                   cache_pos=cache_pos,
+                                   residual=x if res_folded else None)
         if new_cache is not None:
             new_cache["attn"] = c
-    x = x + out
+    x = out if res_folded else x + out
     x = constrain(x, ("batch", "seq", "embed"))
 
     if "xattn" in p:

@@ -51,22 +51,20 @@ def _single_op_graph(op_name):
         nm = f"p{i}"
         operands.append((nm, kind))
         extra.append(nm)
-    attrs = {"rate": 0.3} if op_name == "dropout" else (
+    attrs = {"rate": 0.3} if op_name in ("dropout", "dropout_grad") else (
         {"s": 0.5} if op_name == "scale" else {})
-    chain = []
-    if op.value_arity == 2:
-        # binary over two (M, N) values: acc ∘ tile operand
-        operands.append(("y", "tile"))
-        chain.append((op_name, tuple(extra) + ("y",), attrs))
-        # NB value inputs come first: build the node manually below
-        return fusion.TppGraph(
-            name=f"g_{op_name}",
-            operands=tuple(fusion.OperandSpec(n, k) for n, k in operands),
-            nodes=(fusion.Node(f"n_{op_name}", op_name, ("acc", "y"),
-                               tuple(sorted(attrs.items()))),),
-        )
-    chain.append((op_name, tuple(extra), attrs))
-    return fusion.TppGraph.chain(f"g_{op_name}", chain, operands)
+    # value inputs beyond the accumulator become (M, N) tile operands
+    # ("acc", "y0", "y1", ...) — covers binary TPPs and the derivative ops
+    values = ["acc"]
+    for i in range(op.value_arity - 1):
+        operands.append((f"y{i}", "tile"))
+        values.append(f"y{i}")
+    return fusion.TppGraph(
+        name=f"g_{op_name}",
+        operands=tuple(fusion.OperandSpec(n, k) for n, k in operands),
+        nodes=(fusion.Node(f"n_{op_name}", op_name, (*values, *extra),
+                           tuple(sorted(attrs.items()))),),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -567,14 +565,34 @@ def test_reduction_not_innermost_still_rejected():
 
 
 def test_graph_validation_errors():
+    # pointwise nodes AFTER the reducing node are legal (post-reduce band:
+    # they run on the finished full-row panel) …
+    fusion.TppGraph(
+        name="ok_postreduce",
+        operands=(fusion.OperandSpec("x", "lhs"),
+                  fusion.OperandSpec("w", "rhs")),
+        nodes=(fusion.Node("n0", "softmax", ("acc",)),
+               fusion.Node("n1", "relu", ("n0",))),
+    )
     with pytest.raises(fusion.FusionLegalityError):
-        # reducing node not last
+        # … but two reducing nodes in one graph are not
         fusion.TppGraph(
-            name="bad",
+            name="bad0",
             operands=(fusion.OperandSpec("x", "lhs"),
                       fusion.OperandSpec("w", "rhs")),
             nodes=(fusion.Node("n0", "softmax", ("acc",)),
-                   fusion.Node("n1", "relu", ("n0",))),
+                   fusion.Node("n1", "softmax", ("n0",))),
+        )
+    with pytest.raises(fusion.FusionLegalityError):
+        # … nor a post-reduce node reading a pre-reduce computed value that
+        # is not staged (only the reducer's inputs stay panel-resident)
+        fusion.TppGraph(
+            name="bad0b",
+            operands=(fusion.OperandSpec("x", "lhs"),
+                      fusion.OperandSpec("w", "rhs")),
+            nodes=(fusion.Node("n0", "relu", ("acc",)),
+                   fusion.Node("n1", "softmax", ("acc",)),
+                   fusion.Node("n2", "mul", ("n1", "n0"))),
         )
     with pytest.raises(fusion.FusionLegalityError):
         # rowvec op pointed at a tile operand

@@ -1,0 +1,412 @@
+"""Fusion autodiff: grad parity of ``compile_with_vjp`` (derived backward
+TppGraphs) against ``jax.grad`` of the composed-TPP XLA reference — for every
+library graph, fp32 + bf16, single- and multi-root, on both the XLA and
+interpret-mode Pallas backends; per-op derivative rules; the
+``register_epilogue`` overwrite/arity guards; backward graphs in the tune
+cache; the residual-policy knob; and the fused training step
+(``make_train_step(use_fusion=True)``) against the unfused step."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import fusion
+from repro.fusion import autodiff
+from repro.fusion.graph import EPILOGUE_OPS, EpilogueOp, register_epilogue
+
+RNG = np.random.default_rng(11)
+M, K, N = 32, 64, 128
+
+# fp32: the acceptance bar (contraction blocking order + one fp32 reduction
+# re-association are the only differences); bf16: inputs are bf16 but every
+# accumulation/epilogue runs fp32 — documented tier, relative to grad scale
+TOL = {jnp.float32: 1e-5, jnp.bfloat16: 2e-2}
+
+
+def _operands_for(graph, dtype, m=M, k=K, n=N):
+    ops = {}
+    for spec in graph.operands:
+        if spec.kind == "lhs":
+            v = jnp.asarray(RNG.normal(size=(m, k)).astype(np.float32), dtype)
+        elif spec.kind == "rhs":
+            v = jnp.asarray(RNG.normal(size=(k, n)).astype(np.float32), dtype)
+        elif spec.kind == "tile":
+            v = jnp.asarray(RNG.normal(size=(m, n)).astype(np.float32), dtype)
+        elif spec.kind == "mask":
+            v = jnp.asarray(RNG.random((m, n)) > 0.4)
+        else:  # rowvec — fp32 like the model's norm/bias params
+            v = jnp.asarray(RNG.normal(size=(n,)).astype(np.float32))
+        ops[spec.name] = v
+    return ops
+
+
+def _assert_grad_parity(graph, dtype, backend, tol=None, policy="recompute",
+                        m=M, k=K, n=N):
+    operands = _operands_for(graph, dtype, m=m, k=k, n=n)
+    ref_fn = fusion.compile(graph, path="xla")
+    vjp_fn = autodiff.compile_with_vjp(graph, backend, residuals=policy)
+    out_shape = np.asarray(ref_fn(**operands)).shape
+    probe = jnp.asarray(RNG.normal(size=out_shape).astype(np.float32))
+    float_keys = [k_ for k_, v in operands.items()
+                  if jnp.issubdtype(v.dtype, jnp.floating)]
+
+    def loss_of(fn):
+        def go(fl):
+            full = dict(operands)
+            full.update(fl)
+            return jnp.sum(fn(**full).astype(jnp.float32) * probe)
+        return go
+
+    fl = {k_: operands[k_] for k_ in float_keys}
+    g_ref = jax.grad(loss_of(ref_fn))(fl)
+    g_fused = jax.grad(loss_of(vjp_fn))(fl)
+    tol = tol or TOL[dtype]
+    for k_ in float_keys:
+        a, b = np.asarray(g_ref[k_], np.float32), np.asarray(g_fused[k_],
+                                                             np.float32)
+        scale = np.max(np.abs(a)) + 1e-9
+        err = np.max(np.abs(a - b)) / scale
+        assert err < tol, (graph.name, k_, backend, dtype, float(err))
+
+
+LIBRARY_GRAPHS = {
+    "fused_output_r0": lambda: fusion.fused_output_graph(0.0),
+    "fused_output_r05": lambda: fusion.fused_output_graph(0.5),
+    "fused_mlp_gelu": lambda: fusion.fused_mlp_graph("gelu"),
+    "fused_mlp_relu": lambda: fusion.fused_mlp_graph("relu"),
+    "fused_gated_mlp_silu": lambda: fusion.fused_gated_mlp_graph("silu"),
+    "fused_qkv": lambda: fusion.fused_qkv_graph(),
+    "fused_attn_out": lambda: fusion.fused_attn_out_graph(),
+    "fused_attn_out_res_ln": lambda: fusion.fused_attn_out_graph(
+        True, "layernorm"),
+    "fused_attn_out_res_rms": lambda: fusion.fused_attn_out_graph(
+        True, "rmsnorm"),
+}
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("gname", sorted(LIBRARY_GRAPHS))
+def test_library_grad_parity(gname, dtype, backend):
+    _assert_grad_parity(LIBRARY_GRAPHS[gname](), dtype, backend)
+
+
+# ---------------------------------------------------------------------------
+# Per-op derivative rules (single-op graphs)
+# ---------------------------------------------------------------------------
+
+def _single_op_graph(op_name):
+    op = EPILOGUE_OPS[op_name]
+    operands = [("x", "lhs"), ("w", "rhs")]
+    extra = []
+    for i, kind in enumerate(op.operand_kinds):
+        operands.append((f"p{i}", kind))
+        extra.append(f"p{i}")
+    attrs = {"rate": 0.3} if op_name == "dropout" else (
+        {"s": 0.5} if op_name == "scale" else {})
+    values = ["acc"]
+    for i in range(op.value_arity - 1):
+        operands.append((f"y{i}", "tile"))
+        values.append(f"y{i}")
+    return fusion.TppGraph(
+        name=f"ad_{op_name}",
+        operands=tuple(fusion.OperandSpec(n_, k_) for n_, k_ in operands),
+        nodes=(fusion.Node(f"n_{op_name}", op_name, (*values, *extra),
+                           tuple(sorted(attrs.items()))),),
+    )
+
+
+DIFFERENTIABLE_OPS = sorted(
+    nm for nm, op in EPILOGUE_OPS.items() if op.grad is not None)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+@pytest.mark.parametrize("op_name", DIFFERENTIABLE_OPS)
+def test_per_op_grad_parity(op_name, backend):
+    _assert_grad_parity(_single_op_graph(op_name), jnp.float32, backend)
+
+
+def test_contraction_operand_used_as_epilogue_value():
+    """A contraction operand referenced as an epilogue *value* (legal when
+    the shapes coincide, here M == K == N) gets BOTH cotangent terms: the
+    contraction-backward nest plus the epilogue contribution — a silently
+    dropped epilogue term was a review finding.  Such graphs run on the XLA
+    path only; the Pallas lowering refuses them with a clear error (at
+    epilogue time it holds the operand's K-indexed tile, not an (M, N)
+    value), and the backward derivation keeps their dz stage composed."""
+    g = fusion.TppGraph(
+        name="ad_acc_mul_w",
+        operands=(fusion.OperandSpec("x", "lhs"),
+                  fusion.OperandSpec("w", "rhs")),
+        nodes=(fusion.Node("n0", "mul", ("acc", "w")),),
+    )
+    _assert_grad_parity(g, jnp.float32, "xla", m=M, k=M, n=M)
+    with pytest.raises(fusion.FusionLegalityError, match="epilogue value"):
+        fusion.compile(g, path="pallas", interpret=True)
+    plan = autodiff.derive_vjp(g)
+    assert all(grp.graph is None for grp in plan.stage1)   # composed dz
+
+
+def test_backward_plan_problem_shapes():
+    g = fusion.fused_gated_mlp_graph("silu")
+    plan = autodiff.derive_vjp(g)
+    shapes = {plan.graph_role(nm): plan.problem_shape(nm, M, K, N)
+              for nm in plan.fused_graphs()}
+    assert shapes == {"dz": (M, K, N), "dlhs": (M, N, K), "drhs": (K, M, N)}
+
+
+def test_underivable_op_raises():
+    g = _single_op_graph("relu_grad")   # relu_grad itself has no grad rule
+    with pytest.raises(fusion.FusionLegalityError, match="no grad rule"):
+        autodiff.derive_vjp(g)
+
+
+def test_second_order_through_trans_operand_raises():
+    bwd = autodiff.backward_graphs(fusion.fused_mlp_graph("gelu"))
+    drhs = next(g for nm, g in bwd.items() if "@bwd_drhs" in nm)
+    with pytest.raises(fusion.FusionLegalityError, match="transposed"):
+        autodiff.derive_vjp(drhs)
+
+
+# ---------------------------------------------------------------------------
+# Derived structure: dz / dlhs / drhs graphs, transposed loads
+# ---------------------------------------------------------------------------
+
+def test_derived_backward_structure_gated_mlp():
+    g = fusion.fused_gated_mlp_graph("silu")
+    plan = autodiff.derive_vjp(g)
+    graphs = plan.fused_graphs()
+    assert {f"{g.name}@bwd_dz0", f"{g.name}@bwd_dlhs[x]",
+            f"{g.name}@bwd_drhs"} == set(graphs)
+    dlhs = graphs[f"{g.name}@bwd_dlhs[x]"]
+    # forward weights are read through transposed loads
+    assert dlhs.operand("wg").trans and dlhs.operand("wu").trans
+    assert len(dlhs.roots) == 2 and dlhs.nodes[-1].op == "add"
+    drhs = graphs[f"{g.name}@bwd_drhs"]
+    # the shared forward lhs stays shared (one transposed fetch, two roots)
+    assert drhs.operand("x").trans
+    assert len(drhs.roots) == 2 and len(drhs.outputs) == 2
+
+
+def test_qkv_backward_skips_dz_stage():
+    """No epilogue → the accumulator cotangents ARE the dy slices: only the
+    two contraction-backward graphs are derived."""
+    plan = autodiff.derive_vjp(fusion.fused_qkv_graph())
+    assert not plan.stage1
+    assert all(ref is not None and plan.value_loc[ref][0] == "dy"
+               for ref in plan.dacc.values())
+    assert set(plan.fused_graphs()) == {
+        "fused_qkv@bwd_dlhs[x]", "fused_qkv@bwd_drhs"}
+
+
+@pytest.mark.parametrize("spec,bs", [("bca", {}), ("bbca", {"b": (2,)}),
+                                     ("bcaa", {"a": (2,)}),
+                                     ("bcca", {"c": (2,)})])
+def test_backward_dz_graph_blocked_schedule_sweep(spec, bs):
+    """Blocked/multi-level schedules all agree on the multi-output reducing
+    backward graph (staged panels + stats strip + post-reduce band survive
+    N/M/K blocking)."""
+    plan = autodiff.derive_vjp(fusion.fused_output_graph(0.5))
+    dz = next(grp.graph for grp in plan.stage1
+              if grp.graph is not None
+              and "layernorm_grad" in {nd.op for nd in grp.graph.nodes})
+    ops = _operands_for(dz, jnp.float32)
+    ref = fusion.compile(dz, path="xla", out_dtype=jnp.float32)(**ops)
+    pal = fusion.compile(dz, path="pallas", tiles=(8, 32, 32),
+                         spec_string=spec, block_steps=bs, interpret=True,
+                         out_dtype=jnp.float32)(**ops)
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_reducing_backward_uses_post_reduce_band():
+    """fused_output backward: dropout_grad runs *after* layernorm_grad in
+    the same fused graph (post-reduce band), multi-output stacked."""
+    plan = autodiff.derive_vjp(fusion.fused_output_graph(0.5))
+    dz = [grp for grp in plan.stage1 if grp.graph is not None
+          and "layernorm_grad" in {nd.op for nd in grp.graph.nodes}]
+    assert len(dz) == 1
+    graph = dz[0].graph
+    red = graph.reducing_node()
+    assert red.op == "layernorm_grad"
+    assert [nd.op for nd in graph.post_reduce_nodes()] == ["dropout_grad"]
+    assert len(graph.outputs) == 2   # (d_residual, d_acc) in one kernel
+
+
+# ---------------------------------------------------------------------------
+# register_epilogue guards (satellite)
+# ---------------------------------------------------------------------------
+
+def test_register_epilogue_refuses_silent_overwrite():
+    with pytest.raises(fusion.FusionLegalityError, match="already registered"):
+        register_epilogue(EpilogueOp("relu", 1, (), lambda v: v))
+    # the escape hatch works — and restores the original exactly
+    orig = EPILOGUE_OPS["relu"]
+    register_epilogue(orig, override=True)
+    assert EPILOGUE_OPS["relu"] is orig
+
+
+def test_register_epilogue_checks_grad_arity_both_orders():
+    try:
+        # grad op registered first, forward second: checked at forward time
+        register_epilogue(EpilogueOp("t_bad_grad", 3, (), lambda a, b, c: a))
+        with pytest.raises(fusion.FusionLegalityError, match="disagrees"):
+            register_epilogue(
+                EpilogueOp("t_fwd", 1, (), lambda v: v, grad="t_bad_grad"))
+        # forward first, grad second: checked when the grad op lands
+        register_epilogue(
+            EpilogueOp("t_fwd2", 1, (), lambda v: v, grad="t_fwd2_grad"))
+        with pytest.raises(fusion.FusionLegalityError, match="disagrees"):
+            register_epilogue(
+                EpilogueOp("t_fwd2_grad", 1, ("rowvec",), lambda v, r: v))
+        # matching arity (dv prepended) is accepted
+        register_epilogue(EpilogueOp("t_fwd2_grad", 2, (), lambda d, v: d))
+    finally:
+        for nm in ("t_bad_grad", "t_fwd", "t_fwd2", "t_fwd2_grad"):
+            EPILOGUE_OPS.pop(nm, None)
+
+
+# ---------------------------------------------------------------------------
+# Residual policy knob
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gname", ["fused_gated_mlp_silu", "fused_qkv",
+                                   "fused_mlp_gelu"])
+def test_saved_policy_grad_parity(gname):
+    _assert_grad_parity(LIBRARY_GRAPHS[gname](), jnp.float32, "xla",
+                        policy="saved")
+
+
+def test_saved_policy_forced_to_recompute_for_reducing_graphs():
+    plan = autodiff.derive_vjp(fusion.fused_output_graph(0.0), policy="saved")
+    assert plan.policy == "recompute"
+    plan2 = autodiff.derive_vjp(fusion.fused_gated_mlp_graph("silu"),
+                                policy="saved")
+    assert plan2.policy == "saved"
+    # saved policy: stage-1 runs on the saved accumulators (composed path)
+    assert all(grp.graph is None for grp in plan2.stage1)
+
+
+# ---------------------------------------------------------------------------
+# Backward graphs ride the cost model and the persistent tune cache
+# ---------------------------------------------------------------------------
+
+def test_backward_graph_signatures_distinct():
+    g = fusion.fused_gated_mlp_graph("silu")
+    sigs = {fusion.graph_signature(bg)
+            for bg in autodiff.backward_graphs(g).values()}
+    sigs.add(fusion.graph_signature(g))
+    assert len(sigs) == 4    # fwd, dz, dlhs, drhs all cache independently
+    # trans flags are part of the identity
+    bwd = autodiff.backward_graphs(g)
+    drhs = next(bg for nm, bg in bwd.items() if "@bwd_drhs" in nm)
+    assert "x:lhs^T" in fusion.graph_signature(drhs)
+
+
+def test_backward_graph_hits_tune_cache(tmp_path):
+    g = fusion.fused_gated_mlp_graph("silu")
+    bwd = autodiff.backward_graphs(g)
+    drhs = next(bg for nm, bg in bwd.items() if "@bwd_drhs" in nm)
+    m, k, n = K, M, N    # drhs problem shape
+    r1, s1 = fusion.autotune_graph(drhs, m, k, n, tiles=(16, 16, 64),
+                                   max_candidates=12, cache_dir=tmp_path,
+                                   return_stats=True)
+    r2, s2 = fusion.autotune_graph(drhs, m, k, n, tiles=(16, 16, 64),
+                                   max_candidates=12, cache_dir=tmp_path,
+                                   return_stats=True)
+    assert not s1.cache_hit and s2.cache_hit
+    assert [r.candidate.spec_string for r in r1] == \
+        [r.candidate.spec_string for r in r2]
+
+
+def test_backward_graph_cost_prices_transposed_ops():
+    g = fusion.fused_mlp_graph("gelu")
+    bwd = autodiff.backward_graphs(g)
+    dlhs = next(bg for nm, bg in bwd.items() if "@bwd_dlhs" in nm)
+    rep = fusion.graph_cost(dlhs, M, N, K, tiles=(16, 64, 32),
+                            dtype=np.float32)
+    assert rep.total_time > 0 and rep.hbm_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# Fused layers under jit / remat; model-level residual threading
+# ---------------------------------------------------------------------------
+
+def test_vjp_under_jit_and_checkpoint():
+    g = fusion.fused_gated_mlp_graph("silu")
+    ops = _operands_for(g, jnp.float32)
+    probe = jnp.asarray(RNG.normal(size=(M, N)).astype(np.float32))
+    vjp_fn = autodiff.compile_with_vjp(g, "xla")
+    ref_fn = fusion.compile(g, path="xla")
+
+    def loss(fn):
+        return lambda o: jnp.sum(fn(**o) * probe)
+
+    g_ref = jax.jit(jax.grad(loss(ref_fn)))(ops)
+    g_fus = jax.jit(jax.grad(jax.checkpoint(loss(vjp_fn))))(ops)
+    for k_ in ops:
+        a = np.asarray(g_ref[k_])
+        scale = np.max(np.abs(a)) + 1e-9   # grads are O(100) here
+        np.testing.assert_allclose(a / scale, np.asarray(g_fus[k_]) / scale,
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_attention_residual_threading_parity():
+    """With use_fusion the block residual rides the fused projection's
+    +residual tail; values and grads match the unfused block exactly."""
+    from repro.configs import get_config
+    from repro.models import lm
+    cfg0 = get_config("minicpm_2b").reduced()
+    key = jax.random.PRNGKey(3)
+    p = lm.init_block(cfg0, key, "attn", False)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 8, cfg0.d_model),
+                          jnp.float32)
+
+    outs, grads = {}, {}
+    for fuse in (False, True):
+        cfg = dataclasses.replace(cfg0, use_fusion=fuse)
+
+        def f(params):
+            y, _, _ = lm.block_apply(cfg, params, x, kind="attn", moe=False)
+            return jnp.sum(y * y)
+
+        outs[fuse] = lm.block_apply(cfg, p, x, kind="attn", moe=False)[0]
+        grads[fuse] = jax.grad(f)(p)
+    np.testing.assert_allclose(np.asarray(outs[True]),
+                               np.asarray(outs[False]), rtol=1e-5, atol=1e-5)
+    flat_t, _ = jax.tree.flatten(grads[True])
+    flat_f, _ = jax.tree.flatten(grads[False])
+    for a, b in zip(flat_t, flat_f):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_train_step_fused_descends_and_matches_unfused():
+    """make_train_step(use_fusion=True): fused kernels in both directions,
+    same loss trajectory as the unfused step, and the loss descends."""
+    from repro.configs import get_config
+    from repro.train.steps import TrainConfig, make_train_step, \
+        init_train_state
+    cfg0 = get_config("minicpm_2b").reduced()
+    tcfg = TrainConfig(peak_lr=1e-2, warmup_steps=2, total_steps=10)
+    key = jax.random.PRNGKey(0)
+    batch = {
+        "tokens": jax.random.randint(key, (2, 16), 0, cfg0.vocab_size),
+        "labels": jax.random.randint(key, (2, 16), 0, cfg0.vocab_size),
+        "mask": jnp.ones((2, 16), jnp.int32),
+    }
+    hists = {}
+    for fuse in (False, True):
+        cfg = dataclasses.replace(cfg0, use_fusion=fuse)
+        params, opt = init_train_state(cfg, tcfg, jax.random.PRNGKey(1))
+        step = make_train_step(cfg, tcfg)
+        hist = []
+        for i in range(4):
+            params, opt, metrics = step(params, opt, batch, i)
+            hist.append(float(metrics["loss"]))
+        hists[fuse] = hist
+    a, b = np.asarray(hists[False]), np.asarray(hists[True])
+    assert np.max(np.abs(a - b)) < 1e-3, (hists[False], hists[True])
+    assert hists[True][-1] < hists[True][0], hists[True]
