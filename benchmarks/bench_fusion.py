@@ -13,9 +13,17 @@ Three comparisons on the Bert-Output layer shape (Listing 6):
     hand-written ``kernels.fused_output`` oracle (``--smoke`` only; interpret
     mode is too slow for timing).
 
+A fourth comparison covers training-mode dropout: the legacy pre-generated
+keep-mask graph (an extra (M, N) bool operand streamed through the nest)
+against the in-kernel counter-PRNG graph (``dropout_rng`` — a scalar seed,
+zero mask traffic).  The wall/model/traffic deltas land in
+``BENCH_fusion_dropout.json``.
+
 Row format matches the other benchmarks: ``name,usec,extras``.
 """
 import argparse
+import json
+import os
 import time
 
 import jax
@@ -24,7 +32,13 @@ import numpy as np
 
 from repro import fusion
 from repro.core import perf_model
+from repro.fusion import rng as frng
+from repro.fusion.library import OUTPUT_DROPOUT_SALT
 from repro.kernels.brgemm import pick_tiles
+
+DROPOUT_JSON_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_fusion_dropout.json")
 
 
 def _bench(fn, iters=10):
@@ -57,13 +71,13 @@ def run(smoke: bool = False):
                                               (8192, 1024, 1024)]
     dropout = 0.1
     for (m, k, n) in shapes:
-        graph = fusion.fused_output_graph(dropout)
+        graph = fusion.fused_output_graph(dropout)   # in-kernel PRNG dropout
         dt = np.float32
         ops = {
             "x": jnp.asarray(rng.normal(size=(m, k)).astype(dt)),
             "w": jnp.asarray(rng.normal(size=(k, n)).astype(dt)),
             "bias": jnp.asarray(rng.normal(size=(n,)).astype(dt)),
-            "keep_mask": jnp.asarray(rng.random((m, n)) > dropout),
+            "seed": jnp.asarray(17, jnp.uint32),
             "residual": jnp.asarray(rng.normal(size=(m, n)).astype(dt)),
             "gamma": jnp.asarray(rng.normal(size=(n,)).astype(dt)),
             "beta": jnp.asarray(rng.normal(size=(n,)).astype(dt)),
@@ -120,29 +134,121 @@ def run(smoke: bool = False):
             ))
 
         if smoke:
-            # parity vs the hand-written kernel (interpret mode)
+            # parity vs the hand-written kernel (interpret mode).  The
+            # oracle takes a keep-mask; feed it the exact keep decisions the
+            # in-kernel PRNG regenerates (counter bits depend only on the
+            # element coordinates, so the top-left slice is slice-invariant)
             from repro.kernels.fused_output import fused_output_ref
             sm, sk, sn = 64, 128, 256
             sops = {
                 "x": ops["x"][:sm, :sk], "w": ops["w"][:sk, :sn],
-                "bias": ops["bias"][:sn],
-                "keep_mask": ops["keep_mask"][:sm, :sn],
+                "bias": ops["bias"][:sn], "seed": ops["seed"],
                 "residual": ops["residual"][:sm, :sn],
                 "gamma": ops["gamma"][:sn], "beta": ops["beta"][:sn],
             }
             pal = fusion.compile(graph, path="pallas", tiles=(16, 32, 64),
                                  interpret=True)(**sops)
+            mask = frng.keep_mask(ops["seed"], OUTPUT_DROPOUT_SALT,
+                                  (sm, sn), rate=dropout)
             want = fused_output_ref(
                 sops["x"], sops["w"], sops["bias"], sops["residual"],
-                sops["gamma"], sops["beta"], keep_mask=sops["keep_mask"],
+                sops["gamma"], sops["beta"], keep_mask=mask,
                 dropout_rate=dropout)
             err = float(np.max(np.abs(np.asarray(pal) - np.asarray(want))))
             assert err < 1e-4, f"fused Pallas vs hand-written oracle: {err}"
             rows.append((f"fusion_parity_{sm}x{sk}x{sn}", 0.0,
                          f"max_err_vs_handwritten={err:.2e}"))
 
+    rows.extend(_dropout_rows(rng, smoke))
     rows.extend(_gated_mlp_rows(rng, smoke))
     rows.extend(_backward_rows(rng, smoke))
+    return rows
+
+
+def _dropout_rows(rng, smoke):
+    """Mask-vs-PRNG dropout on the fused-output layer: the legacy graph
+    streams a pre-generated (M, N) bool keep-mask through the nest (the one
+    epilogue operand whose traffic grows with the output); ``dropout_rng``
+    regenerates the bits in-kernel from a scalar seed.  Reports wall (XLA
+    path, mask generation *included* in the mask wall — a real training step
+    pays it every iteration), perf-model time, and the HBM traffic delta;
+    writes ``BENCH_fusion_dropout.json``."""
+    rows = []
+    m, k, n = (256, 512, 512) if smoke else (4096, 4096, 1024)
+    rate = 0.1
+    dt = np.float32
+    ops = {
+        "x": jnp.asarray(rng.normal(size=(m, k)).astype(dt)),
+        "w": jnp.asarray(rng.normal(size=(k, n)).astype(dt)),
+        "bias": jnp.asarray(rng.normal(size=(n,)).astype(dt)),
+        "residual": jnp.asarray(rng.normal(size=(m, n)).astype(dt)),
+        "gamma": jnp.asarray(rng.normal(size=(n,)).astype(dt)),
+        "beta": jnp.asarray(rng.normal(size=(n,)).astype(dt)),
+    }
+    g_mask = fusion.fused_output_graph(rate, rng_dropout=False)
+    g_rng = fusion.fused_output_graph(rate)
+    iters = 5 if smoke else 10
+
+    mask_fn = jax.jit(lambda key, **o: fusion.compile(g_mask, path="xla")(
+        keep_mask=jax.random.bernoulli(key, 1.0 - rate, (m, n)), **o))
+    key = jax.random.PRNGKey(0)
+    t_mask = _bench(lambda: mask_fn(key, **ops), iters=iters)
+
+    rng_fn = jax.jit(lambda seed, **o: fusion.compile(g_rng, path="xla")(
+        seed=seed, **o))
+    seed = jnp.asarray(23, jnp.uint32)
+    t_rng = _bench(lambda: rng_fn(seed, **ops), iters=iters)
+
+    tiles = pick_tiles(m, k, n, jnp.float32)
+    rep_mask = fusion.graph_cost(g_mask, m, k, n, tiles=tiles, dtype=dt)
+    rep_rng = fusion.graph_cost(g_rng, m, k, n, tiles=tiles, dtype=dt)
+    traffic_delta = rep_mask.hbm_bytes - rep_rng.hbm_bytes
+
+    # acceptance: the PRNG graph lowers with NO (M, N) mask operand — its
+    # traffic accounting must drop by at least the mask's footprint
+    assert traffic_delta >= m * n, (rep_mask.hbm_bytes, rep_rng.hbm_bytes)
+    assert all(o.kind != "mask"
+               for o in fusion.simplify_graph(g_rng).operands)
+
+    # parity: the PRNG draw is backend-bit-identical (keep decisions) and
+    # close to the reference everywhere
+    sm, sk, sn = (64, 128, 256)
+    sops = {kk: (v[:sm, :sk] if kk == "x" else
+                 v[:sk, :sn] if kk == "w" else
+                 v[:sm, :sn] if kk == "residual" else v[:sn])
+            for kk, v in ops.items()}
+    ref = fusion.compile(g_rng, path="xla")(seed=seed, **sops)
+    pal = fusion.compile(g_rng, path="pallas", tiles=(16, 32, 64),
+                         interpret=True)(seed=seed, **sops)
+    parity_err = float(np.max(np.abs(np.asarray(ref) - np.asarray(pal))))
+    assert parity_err < 1e-4, f"mask-free PRNG parity: {parity_err}"
+
+    rows.append((
+        f"fusion_dropout_mask_vs_prng_{m}x{k}x{n}",
+        t_rng * 1e6,
+        f"wall_mask_vs_prng={t_mask / t_rng:.2f}"
+        f";model_mask_vs_prng={rep_mask.total_time / rep_rng.total_time:.2f}"
+        f";traffic_delta_mb={traffic_delta / 1e6:.2f}"
+        f";parity_max_err={parity_err:.2e}",
+    ))
+
+    report = {
+        "smoke": smoke,
+        "shape": [m, k, n],
+        "rate": rate,
+        "scheme": frng.SCHEME,
+        "wall_mask_us": t_mask * 1e6,
+        "wall_prng_us": t_rng * 1e6,
+        "wall_mask_vs_prng": t_mask / t_rng,
+        "model_mask_s": rep_mask.total_time,
+        "model_prng_s": rep_rng.total_time,
+        "model_hbm_bytes_mask": rep_mask.hbm_bytes,
+        "model_hbm_bytes_prng": rep_rng.hbm_bytes,
+        "traffic_delta_bytes": traffic_delta,
+        "parity_max_err": parity_err,
+    }
+    with open(DROPOUT_JSON_PATH, "w") as f:
+        json.dump(report, f, indent=1)
     return rows
 
 

@@ -21,6 +21,31 @@ elif [ "${rc}" -ne 0 ]; then
     exit "${rc}"
 fi
 python benchmarks/bench_fusion.py --smoke
+# seeded-dropout determinism smoke: the in-kernel counter PRNG must yield
+# bit-identical outputs across two fresh compilations of the same seed, on
+# both lowering paths (the bench above already asserted the mask-vs-PRNG
+# parity row and wrote BENCH_fusion_dropout.json).
+python - <<'PY'
+import numpy as np, jax.numpy as jnp
+from repro import fusion
+rng = np.random.default_rng(3)
+m, k, n = 64, 128, 256
+args = [jnp.asarray(rng.normal(size=s).astype(np.float32))
+        for s in [(m, k), (k, n), (n,), (m, n), (n,), (n,)]]
+def fresh_run(be):
+    # clear the memoized compilation before EVERY call — each output comes
+    # from a genuinely fresh compile, not a cached callable
+    fusion.lowering._COMPILE_CACHE.clear()
+    return np.asarray(fusion.fused_output_apply(
+        *args, dropout_rate=0.2, dropout_seed=1234, backend=be, vjp=False))
+
+runs = {be: [fresh_run(be) for _ in range(2)]
+        for be in ("xla", "pallas_interpret")}
+assert (runs["xla"][0] == runs["xla"][1]).all(), "seeded dropout not deterministic (xla)"
+assert (runs["pallas_interpret"][0] == runs["pallas_interpret"][1]).all(), \
+    "seeded dropout not deterministic (pallas)"
+print("seeded-dropout determinism smoke: OK")
+PY
 REPRO_TUNE_CACHE=0 python benchmarks/bench_autotune.py --smoke
 # grad-parity smoke: derived backward TppGraphs (fusion.autodiff) vs
 # jax.grad of the composed-TPP reference, plus the fused-training step.

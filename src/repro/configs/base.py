@@ -68,6 +68,11 @@ class ModelConfig:
     # misc
     norm: str = "rmsnorm"           # rmsnorm | layernorm
     use_fusion: bool = False        # build layers via repro.fusion TppGraphs
+    dropout_rate: float = 0.0       # attention-output-projection dropout
+    #                                 (train only; the counter-PRNG draw
+    #                                 needs a dropout_seed threaded from the
+    #                                 train step — MLP sublayers currently
+    #                                 take no dropout)
     gated_mlp: bool = True
     mlp_activation: str = "silu"
     tie_embeddings: bool = False

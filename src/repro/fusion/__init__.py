@@ -1,6 +1,7 @@
 """TPP-chain fusion compiler: declarative epilogue graphs (single- or
 multi-root contractions) lowered to single Pallas kernels.  See README.md in
 this directory for the design."""
+from repro.fusion import rng
 from repro.fusion.graph import (EPILOGUE_OPS, ContractionRoot, EpilogueOp,
                                 FusionLegalityError, Node, OperandSpec,
                                 TppGraph, register_epilogue, simplify_graph)
@@ -20,7 +21,7 @@ from repro.fusion.library import (fused_attn_out_apply, fused_attn_out_graph,
 __all__ = [
     "TppGraph", "ContractionRoot", "Node", "OperandSpec", "EpilogueOp",
     "EPILOGUE_OPS", "register_epilogue", "FusionLegalityError",
-    "simplify_graph",
+    "simplify_graph", "rng",
     "compile", "compile_for_backend", "validate_epilogue_band", "DEFAULT_SPEC",
     "derive_vjp", "BackwardPlan", "backward_graphs", "compile_with_vjp",
     "graph_cost", "autotune_graph", "estimate_unfused", "UnfusedEstimate",

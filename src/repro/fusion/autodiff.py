@@ -16,7 +16,10 @@ lowering, cost model, autotuner, and persistent tune cache unchanged:
     in reverse: ``relu_grad``/``silu_grad``/``gelu_grad``/``dropout_grad``
     run pointwise, ``layernorm_grad``/``rmsnorm_grad``/``softmax_grad`` are
     row-panel epilogues whose mean/rstd come from the same (sum, sum-sq)
-    statistics strip the forward norms use.  Outputs: the per-root
+    statistics strip the forward norms use (``dropout_rng_grad`` carries the
+    forward node's (rate, salt) attrs + seed operand, so the backward kernel
+    *regenerates* the forward keep decisions from the counter PRNG — no
+    saved mask, bit-identical under any schedule).  Outputs: the per-root
     accumulator cotangents dz_r, tile-operand cotangents, and the (M, N)
     integrands of row-vector parameter cotangents (their (N,) column sums
     run outside the fused region — an (M,N)→(N,) reduction has no home in a
@@ -293,7 +296,7 @@ def derive_vjp(graph: TppGraph, *, policy: str = "recompute") -> BackwardPlan:
     # contraction-backward term below
     op_targets: dict[str, Optional[str]] = {}
     for o in graph.operands:
-        if o.kind != "mask":
+        if o.kind not in ("mask", "scalar"):
             op_targets[o.name] = settle(o.name)
 
     # -- group stage-1 targets into graphs --------------------------------
@@ -422,7 +425,7 @@ def derive_vjp(graph: TppGraph, *, policy: str = "recompute") -> BackwardPlan:
     cot: dict[str, tuple] = {}
     for o in graph.operands:
         t = op_targets.get(o.name)
-        if o.kind == "mask":
+        if o.kind in ("mask", "scalar"):   # keep-masks and PRNG seeds
             cot[o.name] = ("none",)
         elif o.kind == "lhs":
             # contraction term (dlhs nest) + any epilogue-value term
@@ -483,7 +486,7 @@ def _eval_composed(graph: TppGraph, grp: _Stage1Group, ops_env: dict,
             spec = graph.operand(ref)
         except KeyError:
             pass
-        if spec is not None and spec.kind == "mask":
+        if spec is not None and spec.kind in ("mask", "scalar"):
             return v
         return v.astype(jnp.float32)
 

@@ -63,6 +63,14 @@ def graph_signature(graph: TppGraph) -> str:
         for nd in graph.nodes
     ]
     parts.append("out:" + ",".join(graph.outputs))
+    # in-kernel PRNG ops: the bit-generation scheme is part of the identity —
+    # a schedule tuned under a different generator (different flops/elem)
+    # must not be served from the cache.  Node attrs already carry the rate
+    # and salt, so rate-0 (simplified-away) vs rate>0 graphs, and the legacy
+    # mask op vs dropout_rng, all key distinct entries.
+    if any(EPILOGUE_OPS[nd.op].wants_offsets for nd in graph.nodes):
+        from repro.fusion import rng
+        parts.append(f"rng:{rng.SCHEME}")
     return "|".join(parts)
 
 
@@ -307,7 +315,8 @@ def estimate_unfused(
                 spec = graph.operand(ref)
             except KeyError:
                 continue  # chained value — already on HBM, counted as read
-            operand_bytes += (m * n if spec.kind in ("tile", "mask") else n) * db
+            operand_bytes += (m * n if spec.kind in ("tile", "mask")
+                              else (1 if spec.kind == "scalar" else n)) * db
         bytes_op = 2 * act_bytes + operand_bytes      # read + write the act
         flops_op = op.flops_per_elem * m * n
         t = max(bytes_op / target.hbm_bw, flops_op / target.vpu_flops)

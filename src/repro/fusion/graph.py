@@ -17,8 +17,9 @@ The IR is deliberately tiny:
       - ``lhs``    (M, K)   contraction A
       - ``rhs``    (K, N)   contraction B
       - ``tile``   (M, N)   elementwise epilogue operand (residual, …)
-      - ``mask``   (M, N)   boolean epilogue operand (dropout keep-mask)
+      - ``mask``   (M, N)   boolean epilogue operand (legacy dropout mask)
       - ``rowvec`` (N,)     row-broadcast vector (bias, gamma, beta)
+      - ``scalar`` ()       traced scalar (the ``dropout_rng`` PRNG seed)
     ``lhs``/``rhs`` operands may set ``trans=True``: the array is *stored*
     transposed relative to its contraction role (a trans lhs has array shape
     (K, M), a trans rhs (N, K)) and the lowering reads it with a transposed
@@ -48,9 +49,10 @@ tiles), which is what makes the two lowerings agree bit-for-bit up to
 contraction blocking order.
 
 ``simplify_graph`` is the graph-level cleanup pass run by ``fusion.compile``:
-``identity`` nodes and rate-0 ``dropout`` nodes forward their value input,
-and operands no longer referenced by any node/root/output are dropped (so a
-rate-0 dropout's keep-mask never becomes a mapped kernel operand).
+``identity`` nodes and rate-0 ``dropout``/``dropout_rng`` nodes forward
+their value input, and operands no longer referenced by any node/root/output
+are dropped (so a rate-0 dropout's keep-mask — or a rate-0 ``dropout_rng``'s
+seed — never becomes a mapped kernel operand).
 """
 from __future__ import annotations
 
@@ -69,7 +71,7 @@ __all__ = [
     "simplify_graph",
 ]
 
-OPERAND_KINDS = ("lhs", "rhs", "tile", "mask", "rowvec")
+OPERAND_KINDS = ("lhs", "rhs", "tile", "mask", "rowvec", "scalar")
 
 
 class FusionLegalityError(LegalityError):
@@ -150,7 +152,13 @@ class EpilogueOp:
                           whose per-row (sum, sum-of-squares) strip the
                           Pallas lowering accumulates tile-by-tile (the
                           row-panel statistics trick); ``None`` → the op is
-                          applied to the finished full-row panel directly.
+                          applied to the finished full-row panel directly;
+    ``wants_offsets``   — the op's ``apply`` takes an ``_offsets=(row0,
+                          col0)`` kwarg: the global element coordinates of
+                          the tile it is applied to (the in-kernel PRNG ops
+                          key their counter-based draw on them).  Lowerings
+                          inject the current tile's offsets; full-array call
+                          sites rely on the ``(0, 0)`` default.
 
     A *named* grad op must agree with its forward op: identical
     ``operand_kinds``, and a ``value_arity`` of either the forward arity (the
@@ -169,6 +177,7 @@ class EpilogueOp:
     flops_per_elem: float = 1.0
     grad: Any = None
     stats_input: Optional[int] = None
+    wants_offsets: bool = False
 
 
 EPILOGUE_OPS: dict[str, EpilogueOp] = {}
@@ -214,9 +223,32 @@ def _f32(x):
 
 
 def _dropout_apply(v, mask, *, rate: float = 0.0):
+    # the 1/(1-rate) rescale runs in fp32 regardless of the value dtype — in
+    # bf16 both the scale constant and the product would round, drifting off
+    # the fp32 accumulator band the rest of the epilogue computes in
     if rate <= 0.0:
         return v
-    return jnp.where(mask, v * (1.0 / (1.0 - rate)), jnp.zeros((), v.dtype))
+    return jnp.where(mask, v.astype(jnp.float32)
+                     * jnp.float32(1.0 / (1.0 - rate)), jnp.float32(0.0))
+
+
+def _dropout_rng_apply(v, seed, *, rate: float = 0.0, salt: int = 0,
+                       _offsets=(0, 0), _impl: str = "counter"):
+    """In-kernel counter-based dropout: keep bits are regenerated from
+    ``(seed, salt, element coordinates)`` — no (M, N) mask operand.  The
+    same function runs on full arrays (XLA reference, offsets (0, 0)) and on
+    VMEM tiles (the Pallas lowering injects the tile's global offsets), so
+    every backend — and every schedule — draws identical bits.  Threshold
+    compare is exact integer; the survivor rescale runs in fp32."""
+    from repro.fusion import rng
+    if rate <= 0.0:
+        return v
+    seed = jnp.asarray(seed).reshape(()).astype(jnp.uint32)
+    bits_fn = rng.hw_tile_bits if _impl == "hw" else rng.tile_bits
+    bits = bits_fn(seed, jnp.uint32(salt), jnp.shape(v), offsets=_offsets)
+    keep = bits < jnp.uint32(rng.keep_threshold(rate))
+    return jnp.where(keep, v.astype(jnp.float32)
+                     * jnp.float32(1.0 / (1.0 - rate)), jnp.float32(0.0))
 
 
 def _layernorm_apply(v, gamma, beta, *, eps: float = 1e-5):
@@ -376,12 +408,22 @@ register_epilogue(EpilogueOp(
     "scale_rowvec", 1, ("rowvec",), lambda v, s: v * _f32(s),
     grad=_grad_scale_rowvec))
 
-# Masked dropout (pre-generated keep-mask, counter-based bits upstream).
-# Dropout is self-adjoint: its grad is the *same* masked scaling applied to
-# the cotangent — a named grad op with the dv-substitution arity.
+# Masked dropout (pre-generated keep-mask — the legacy operand-streaming
+# path, kept registered for backward compat; library graphs use
+# ``dropout_rng``).  Dropout is self-adjoint: its grad is the *same* masked
+# scaling applied to the cotangent — a named grad op with the
+# dv-substitution arity.
 register_epilogue(EpilogueOp(
     "dropout", 1, ("mask",), _dropout_apply, flops_per_elem=2.0,
     grad="dropout_grad"))
+
+# In-kernel counter-based dropout (the TPP-paper primitive): a traced scalar
+# seed operand replaces the (M, N) mask, bits are regenerated from
+# (seed, salt, element coords) wherever the value lives — any tile of any
+# schedule, forward or derived backward graph, draws identical bits.
+register_epilogue(EpilogueOp(
+    "dropout_rng", 1, ("scalar",), _dropout_rng_apply, flops_per_elem=28.0,
+    grad="dropout_rng_grad", wants_offsets=True))
 
 # Normalizations over the feature axis — row-panel epilogues.
 register_epilogue(EpilogueOp(
@@ -408,6 +450,12 @@ register_epilogue(EpilogueOp("sigmoid_grad", 2, (), _sigmoid_grad_apply,
                              flops_per_elem=6.0))
 register_epilogue(EpilogueOp("dropout_grad", 1, ("mask",), _dropout_apply,
                              flops_per_elem=2.0))
+# dropout_rng is self-adjoint too: the backward node carries the same
+# (rate, salt) attrs and seed operand, so it REGENERATES the forward draw —
+# no mask is ever saved between forward and backward.
+register_epilogue(EpilogueOp(
+    "dropout_rng_grad", 1, ("scalar",), _dropout_rng_apply,
+    flops_per_elem=28.0, wants_offsets=True))
 register_epilogue(EpilogueOp(
     "layernorm_grad", 2, ("rowvec",), _layernorm_grad_apply, reduces="n",
     flops_per_elem=12.0, stats_input=1))
@@ -746,18 +794,19 @@ class TppGraph:
 def _node_is_noop(nd: Node) -> bool:
     if nd.op == "identity":
         return True
-    if nd.op == "dropout":
+    if nd.op in ("dropout", "dropout_rng"):
         return float(nd.attr_dict().get("rate", 0.0)) <= 0.0
     return False
 
 
 def simplify_graph(graph: TppGraph) -> TppGraph:
-    """Drop no-op epilogue nodes (``identity``, rate-0 ``dropout``) and any
-    operand no longer referenced by a node, root, or output.  A rate-0
-    fused-output graph therefore lowers with *no* keep-mask operand — no
-    all-ones (M, N) mask streamed through the kernel.  Value semantics are
-    preserved exactly: a dropped node forwards its (rewritten) value input.
-    Returns ``graph`` itself when there is nothing to do."""
+    """Drop no-op epilogue nodes (``identity``, rate-0 ``dropout`` /
+    ``dropout_rng``) and any operand no longer referenced by a node, root,
+    or output.  A rate-0 fused-output graph therefore lowers with *no*
+    keep-mask (or seed) operand — no all-ones (M, N) mask streamed through
+    the kernel.  Value semantics are preserved exactly: a dropped node
+    forwards its (rewritten) value input.  Returns ``graph`` itself when
+    there is nothing to do."""
     repl: dict[str, str] = {}
     kept: list[Node] = []
     for nd in graph.nodes:

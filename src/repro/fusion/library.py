@@ -6,6 +6,9 @@ Single-root graphs:
   * ``fused_output_graph``    — Listing 6, the Bert-Output/Bert-SelfOutput
     layer: GEMM → bias → dropout → residual-add → layernorm.  Replaces the
     hand-written ``kernels.fused_output`` (kept as the parity oracle).
+    Dropout draws in-kernel counter-PRNG bits (``dropout_rng`` + a scalar
+    seed operand — see ``fusion.rng``); the legacy keep-mask form is kept
+    behind ``rng_dropout=False``.
   * ``fused_mlp_graph``       — the Bert-Intermediate / MLP block:
     GEMM → bias → activation (§III-A).
   * ``fused_attn_out_graph``  — the attention output projection:
@@ -31,9 +34,18 @@ from __future__ import annotations
 
 import functools
 
+import jax.numpy as jnp
+
+from repro.fusion import rng
 from repro.fusion.autodiff import compile_with_vjp
 from repro.fusion.graph import ContractionRoot, Node, OperandSpec, TppGraph
 from repro.fusion.lowering import compile_for_backend
+
+# Default per-site PRNG salts: the fused graph node and any unfused
+# reference path that must reproduce its draw derive the same key word from
+# the same stable string (see fusion.rng.derive_salt).
+OUTPUT_DROPOUT_SALT = rng.derive_salt("fused_output/dropout")
+ATTN_OUT_DROPOUT_SALT = rng.derive_salt("fused_attn_out/dropout")
 
 
 def _dispatch(graph, backend, vjp, kw):
@@ -50,23 +62,37 @@ __all__ = [
 
 
 @functools.lru_cache(maxsize=None)
-def fused_output_graph(dropout_rate: float = 0.0, eps: float = 1e-5) -> TppGraph:
-    """x (M,K) @ w (K,N) + bias → dropout(keep_mask) → + residual →
-    layernorm(gamma, beta) — paper Listing 6 as a TppGraph.  With
-    ``dropout_rate=0`` the simplification pass in ``fusion.compile`` removes
-    the dropout node *and* the keep-mask operand, so no mask is ever built or
-    streamed."""
+def fused_output_graph(dropout_rate: float = 0.0, eps: float = 1e-5,
+                       rng_dropout: bool = True,
+                       dropout_salt: int = OUTPUT_DROPOUT_SALT) -> TppGraph:
+    """x (M,K) @ w (K,N) + bias → dropout → + residual →
+    layernorm(gamma, beta) — paper Listing 6 as a TppGraph.
+
+    Dropout draws its bits **in-kernel** from the counter-based PRNG
+    (``dropout_rng``: a traced scalar ``seed`` operand + static ``salt``, no
+    (M, N) mask ever built or streamed).  ``rng_dropout=False`` builds the
+    legacy keep-mask graph (the pre-PR operand-streaming form, kept for
+    backward compat / mask-vs-PRNG benchmarking).  With ``dropout_rate=0``
+    the simplification pass in ``fusion.compile`` removes the dropout node
+    *and* its seed/mask operand."""
+    if rng_dropout:
+        drop = ("dropout_rng", ("seed",),
+                {"rate": dropout_rate, "salt": dropout_salt})
+        drop_operand = ("seed", "scalar")
+    else:
+        drop = ("dropout", ("keep_mask",), {"rate": dropout_rate})
+        drop_operand = ("keep_mask", "mask")
     return TppGraph.chain(
-        "fused_output",
+        "fused_output" if rng_dropout else "fused_output_mask",
         [
             ("bias_add", ("bias",), {}),
-            ("dropout", ("keep_mask",), {"rate": dropout_rate}),
+            drop,
             ("residual_add", ("residual",), {}),
             ("layernorm", ("gamma", "beta"), {"eps": eps}),
         ],
         [
             ("x", "lhs"), ("w", "rhs"), ("bias", "rowvec"),
-            ("keep_mask", "mask"), ("residual", "tile"),
+            drop_operand, ("residual", "tile"),
             ("gamma", "rowvec"), ("beta", "rowvec"),
         ],
     )
@@ -116,10 +142,19 @@ def fused_qkv_graph() -> TppGraph:
 
 @functools.lru_cache(maxsize=None)
 def fused_attn_out_graph(residual: bool = False, norm: str = "",
-                         eps: float = 1e-5) -> TppGraph:
-    """o (M,K) @ wo (K,N) [+ residual] [→ layernorm/rmsnorm] — the attention
-    output projection with its post-attention tail fused in."""
+                         eps: float = 1e-5, dropout_rate: float = 0.0,
+                         dropout_salt: int = ATTN_OUT_DROPOUT_SALT
+                         ) -> TppGraph:
+    """o (M,K) @ wo (K,N) [→ dropout] [+ residual] [→ layernorm/rmsnorm] —
+    the attention output projection with its post-attention tail fused in.
+    Dropout (the transformer's post-sublayer dropout, applied before the
+    residual add) draws in-kernel counter-PRNG bits via ``dropout_rng``: a
+    scalar seed operand, no (M, N) mask."""
     ops, operands = [], [("o", "lhs"), ("wo", "rhs")]
+    if dropout_rate > 0.0:
+        ops.append(("dropout_rng", ("seed",),
+                    {"rate": dropout_rate, "salt": dropout_salt}))
+        operands.append(("seed", "scalar"))
     if residual:
         ops.append(("residual_add", ("residual",), {}))
         operands.append(("residual", "tile"))
@@ -131,27 +166,43 @@ def fused_attn_out_graph(residual: bool = False, norm: str = "",
         operands.append(("gamma", "rowvec"))
     elif norm:
         raise ValueError(f"unknown norm {norm!r}; use 'layernorm'/'rmsnorm'")
-    name = "fused_attn_out" + ("_res" if residual else "") + \
-        (f"_{norm}" if norm else "")
+    name = "fused_attn_out" + ("_do" if dropout_rate > 0.0 else "") + \
+        ("_res" if residual else "") + (f"_{norm}" if norm else "")
     return TppGraph.chain(name, ops, operands)
 
 
 def fused_output_apply(x, w, bias, residual, gamma, beta, *, keep_mask=None,
-                       dropout_rate: float = 0.0, eps: float = 1e-5,
+                       dropout_rate: float = 0.0, dropout_seed=None,
+                       dropout_salt: int = OUTPUT_DROPOUT_SALT,
+                       deterministic: bool = False, eps: float = 1e-5,
                        backend=None, vjp: bool = True, **kw):
     """Backend-dispatched fused-output layer through the fusion compiler —
-    drop-in for ``kernels.fused_output.fused_output_pallas``.  At rate 0 no
-    keep-mask is built or passed: the simplified graph has no mask operand."""
-    g = fused_output_graph(dropout_rate, eps)
-    fn = _dispatch(g, backend, vjp, kw)
+    drop-in for ``kernels.fused_output.fused_output_pallas``.
+
+    Dropout bits are generated *in-kernel* by the counter-based PRNG: pass a
+    scalar ``dropout_seed`` (int or traced uint32) and no mask ever exists.
+    ``deterministic=True`` is the inference escape — the dropout node is
+    simplified away regardless of ``dropout_rate``, no seed (or mask)
+    required.  Passing a ``keep_mask`` routes through the legacy
+    mask-operand graph for backward compat.  At rate 0 the simplified graph
+    has neither a mask nor a seed operand."""
+    rate = 0.0 if deterministic else dropout_rate
     operands = dict(x=x, w=w, bias=bias, residual=residual,
                     gamma=gamma, beta=beta)
-    if dropout_rate > 0.0:
-        if keep_mask is None:
-            raise ValueError(
-                f"fused_output_apply: dropout_rate={dropout_rate} needs a "
-                "keep_mask (in-kernel PRNG is a roadmap item)")
+    if rate > 0.0 and keep_mask is not None:
+        g = fused_output_graph(rate, eps, rng_dropout=False)
         operands["keep_mask"] = keep_mask
+    else:
+        g = fused_output_graph(rate, eps, dropout_salt=dropout_salt)
+        if rate > 0.0:
+            if dropout_seed is None:
+                raise ValueError(
+                    f"fused_output_apply: dropout_rate={dropout_rate} needs "
+                    "a dropout_seed for the in-kernel PRNG (or "
+                    "deterministic=True to disable dropout, e.g. for "
+                    "inference; a legacy keep_mask is also accepted)")
+            operands["seed"] = jnp.asarray(dropout_seed, jnp.uint32)
+    fn = _dispatch(g, backend, vjp, kw)
     return fn(**operands)
 
 
@@ -181,9 +232,15 @@ def fused_qkv_apply(x, wq, wk, wv, *, backend=None, vjp: bool = True, **kw):
 
 
 def fused_attn_out_apply(o, wo, *, residual=None, gamma=None, beta=None,
-                         norm: str = "", eps: float = 1e-5, backend=None,
+                         norm: str = "", eps: float = 1e-5,
+                         dropout_rate: float = 0.0, dropout_seed=None,
+                         dropout_salt: int = ATTN_OUT_DROPOUT_SALT,
+                         deterministic: bool = False, backend=None,
                          vjp: bool = True, **kw):
-    """Backend-dispatched attention output projection (+residual, +norm)."""
+    """Backend-dispatched attention output projection ([+dropout],
+    +residual, +norm).  Dropout takes a scalar ``dropout_seed`` for the
+    in-kernel counter PRNG; ``deterministic=True`` (or a ``None`` seed at
+    rate 0) disables it."""
     need = {"layernorm": ("gamma", "beta"), "rmsnorm": ("gamma",)}.get(norm, ())
     given = {"gamma": gamma, "beta": beta}
     missing = [p for p in need if given[p] is None]
@@ -192,9 +249,17 @@ def fused_attn_out_apply(o, wo, *, residual=None, gamma=None, beta=None,
         raise ValueError(
             f"fused_attn_out_apply: norm={norm!r} takes parameters "
             f"{list(need)}; missing {missing}, unused {stray}")
-    g = fused_attn_out_graph(residual is not None, norm, eps)
+    rate = 0.0 if deterministic else dropout_rate
+    if rate > 0.0 and dropout_seed is None:
+        raise ValueError(
+            f"fused_attn_out_apply: dropout_rate={dropout_rate} needs a "
+            "dropout_seed for the in-kernel PRNG (or deterministic=True)")
+    g = fused_attn_out_graph(residual is not None, norm, eps, rate,
+                             dropout_salt)
     fn = _dispatch(g, backend, vjp, kw)
     operands = dict(o=o, wo=wo)
+    if rate > 0.0:
+        operands["seed"] = jnp.asarray(dropout_seed, jnp.uint32)
     if residual is not None:
         operands["residual"] = residual
     operands.update({p: given[p] for p in need})

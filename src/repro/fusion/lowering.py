@@ -137,6 +137,8 @@ def build_nest_inputs(graph: TppGraph, m: int, k: int, n: int,
                 TensorMap(("b", None), (bm, n), layout="flat")
                 if spec.name in row_res
                 else TensorMap(("b", "c"), (bm, bn), layout="flat"))
+        elif spec.kind == "scalar":   # traced scalar (PRNG seed) — one elem
+            in_maps.append(TensorMap((None, None), (1, 1), layout="flat"))
         else:  # rowvec — whole vector visible every call (norms need full N)
             in_maps.append(TensorMap((None, None), (1, n), layout="flat"))
     n_out = len(graph.outputs)
@@ -166,6 +168,8 @@ def _pack_operands(graph: TppGraph, operands: dict, ignore=frozenset()):
         v = operands[spec.name]
         if spec.kind == "rowvec":
             v = v.reshape(1, -1)
+        elif spec.kind == "scalar":
+            v = jnp.asarray(v).reshape(1, 1)
         packed.append(v)
     extra = set(operands) - set(graph.operand_names) - set(ignore)
     if extra:
@@ -197,10 +201,13 @@ def _compile_xla(graph: TppGraph, *, out_dtype=None, ignore=frozenset()):
                 return env[ref]
             spec = graph.operand(ref)
             v = operands[ref]
-            return v if spec.kind == "mask" else v.astype(jnp.float32)
+            return (v if spec.kind in ("mask", "scalar")
+                    else v.astype(jnp.float32))
 
         for nd in graph.nodes:
             op = EPILOGUE_OPS[nd.op]
+            # wants_offsets ops see the full (M, N) array here — the global
+            # coordinates ARE the local ones, so the (0, 0) default applies
             env[nd.name] = op.apply(*(value(r) for r in nd.inputs),
                                     **nd.attr_dict())
         odt = out_dtype or x.dtype
@@ -288,7 +295,8 @@ def contraction_operand_values(graph: TppGraph) -> frozenset[str]:
 
 def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
                     block_steps=None, out_dtype=None, interpret=False,
-                    mesh=None, vmem_limit_bytes=None, ignore=frozenset()):
+                    mesh=None, vmem_limit_bytes=None, hw_prng=False,
+                    ignore=frozenset()):
     bad = contraction_operand_values(graph)
     if bad:
         raise FusionLegalityError(
@@ -318,6 +326,12 @@ def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
         and reducing.op in _STATS_CLOSE
         and reducing.inputs[red_op.stats_input] in staged)
     stats_name = (reducing.inputs[red_op.stats_input] if use_stats else None)
+    # counter-PRNG ops key their draw on global element coordinates; the
+    # hardware generator (opt-in, real TPU only — interpret mode has no HW
+    # PRNG) trades that schedule invariance for throughput
+    has_offset_ops = any(EPILOGUE_OPS[nd.op].wants_offsets
+                         for nd in graph.nodes)
+    use_hw_bits = bool(hw_prng) and not interpret
     plan_cache: dict = {}  # (operand shapes/dtypes) -> pallas call
 
     def build_call(m, k, n, x_dtype, odt):
@@ -328,6 +342,14 @@ def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
         tl = ThreadedLoop(loops, spec_string, reduction_letters=("a",))
         validate_reduction_innermost(tl.nest, ("b", "c"), ("a",))
         validate_epilogue_band(tl.nest, graph)
+        if has_offset_ops and any(l.letter in ("b", "c")
+                                  for l in tl.nest.mesh_levels):
+            raise FusionLegalityError(
+                f"graph {graph.name!r}: an in-kernel PRNG epilogue keys its "
+                f"draw on global (M, N) element coordinates, but spec "
+                f"{tl.nest.spec.raw!r} shards an output loop over a mesh "
+                "axis — block coordinates inside a shard are local, so the "
+                "regenerated bits would repeat across shards.")
         plan = plan_pallas(tl.nest, in_maps, out_map, reduction_letters=("a",))
 
         kb = k // bk
@@ -353,6 +375,18 @@ def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
                          if use_stats else None)
             ik = ind["a"]
             jc = ind["c"]
+            ib = ind["b"]
+
+            def node_kwargs(nd, op, col0):
+                """Static attrs + (for PRNG ops) the tile's global element
+                offsets: rows start at ib*bm, cols at ``col0`` (the current
+                N tile for pre-reduce nodes, 0 for full-row panels)."""
+                kw = nd.attr_dict()
+                if op.wants_offsets:
+                    kw["_offsets"] = (ib * bm, col0)
+                    if use_hw_bits:
+                        kw["_impl"] = "hw"
+                return kw
 
             if use_stats:
                 @pl.when(jnp.logical_and(jc == 0, ik == 0))
@@ -400,12 +434,14 @@ def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
                         v = r[:, pl.ds(jc * bn, acc_n)]
                     else:
                         v = r[...]
-                    return v if spec.kind == "mask" else v.astype(jnp.float32)
+                    return (v if spec.kind in ("mask", "scalar")
+                            else v.astype(jnp.float32))
 
                 for nd in pre_nodes:
                     op = EPILOGUE_OPS[nd.op]
                     env[nd.name] = op.apply(
-                        *(value(r) for r in nd.inputs), **nd.attr_dict())
+                        *(value(r) for r in nd.inputs),
+                        **node_kwargs(nd, op, jc * bn))
 
                 if reducing is None:
                     if n_out > 1:
@@ -452,7 +488,8 @@ def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
                     for nd in post_nodes:
                         op = EPILOGUE_OPS[nd.op]
                         fullenv[nd.name] = op.apply(
-                            *(fval(r) for r in nd.inputs), **nd.attr_dict())
+                            *(fval(r) for r in nd.inputs),
+                            **node_kwargs(nd, op, 0))
 
                     if n_out > 1:
                         o_ref[...] = jnp.stack(
@@ -471,7 +508,8 @@ def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
 
         db = jnp.dtype(x_dtype).itemsize
         ep_elems = sum(
-            (m * n if s.kind in ("tile", "mask") else n) for s in ep_specs)
+            (m * n if s.kind in ("tile", "mask")
+             else (1 if s.kind == "scalar" else n)) for s in ep_specs)
         con_elems = sum(
             (m * k if s.kind == "lhs" else k * n) for s in con_specs)
         out_shape = (n_out, m, n) if n_out > 1 else (m, n)
@@ -543,7 +581,10 @@ def compile(graph: TppGraph, *, path: str = "pallas", simplify: bool = True,
     (default) emits one fused Pallas kernel; ``path="xla"`` emits the
     composed-TPP reference.  Keyword options for the Pallas path:
     ``spec_string``, ``tiles``, ``block_steps``, ``out_dtype``, ``interpret``,
-    ``mesh``, ``vmem_limit_bytes``; the XLA path takes ``out_dtype`` only.
+    ``mesh``, ``vmem_limit_bytes``, ``hw_prng`` (draw ``dropout_rng`` bits
+    from the TPU hardware generator — faster on real TPUs but NOT
+    schedule-invariant or reference-bit-identical; see ``fusion.rng``); the
+    XLA path takes ``out_dtype`` only.
     """
     lowered = simplify_graph(graph) if simplify else graph
     ignore = frozenset(graph.operand_names) - frozenset(lowered.operand_names)
@@ -576,6 +617,7 @@ def compile_for_backend(graph: TppGraph, backend: Optional[str] = None, **kw):
         kw.pop("tiles", None)
         kw.pop("spec_string", None)
         kw.pop("block_steps", None)
+        kw.pop("hw_prng", None)
     try:
         key = (graph, backend,
                tuple(sorted((k, _freeze_kw(v)) for k, v in kw.items())))

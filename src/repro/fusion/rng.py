@@ -1,0 +1,155 @@
+"""Counter-based in-kernel PRNG for fused dropout (TPP building-block RNG).
+
+The TPP dropout primitive draws its random bits *inside* the kernel from a
+stateless, counter-based generator (xorshift128+ in Georganas et al. 2021;
+the same building-block philosophy as the 2019 single-building-block paper)
+instead of streaming a pre-generated ``(M, N)`` keep-mask — the one epilogue
+operand whose HBM traffic grows with the output.  This module is the
+generator the fusion compiler uses:
+
+  * **threefry2x32** (20 rounds, the Threefish-reduced mixer JAX's own PRNG
+    is built on): a pure function ``(key0, key1, ctr0, ctr1) -> bits`` of
+    adds / xors / rotates only — every op lowers identically through XLA,
+    interpret-mode Pallas, and compiled Mosaic, which is what makes the
+    three backends agree **bit for bit**.
+  * **Counter = element coordinates.**  The bits for output element
+    ``(i, j)`` are ``threefry(seed, salt, i, j)`` — a tile at offset
+    ``(r0, c0)`` regenerates exactly the global draw by adding its offset to
+    a local iota.  Draws are therefore *schedule-invariant by construction*:
+    any blocking / loop order / tile shape of any tuned schedule visits the
+    same ``(i, j)`` set and gets the same bits, and a derived backward graph
+    (``fusion.autodiff``) regenerates the forward draw instead of saving the
+    mask.
+  * **Key = (traced seed, static salt).**  The seed is a runtime scalar
+    operand (thread it from the train step, fold the step/layer index in via
+    :func:`fold_in`); the salt is a static per-node constant derived from a
+    stable name (:func:`derive_salt`), so two dropout sites in one graph —
+    or the same site replayed inside a backward graph — draw independent /
+    identical bits respectively, by construction.
+
+The keep decision compares the raw uint32 lane against a *static* integer
+threshold ``floor((1 - rate) * 2^32)`` — exact (no float rounding in the
+compare), and the survivor rescale ``1/(1-rate)`` is applied in fp32
+regardless of the value dtype (the bf16 precision fix).
+
+``hw_tile_bits`` exposes the TPU hardware generator
+(``pltpu.prng_seed`` / ``prng_random_bits``) re-seeded per tile for
+real-hardware throughput.  Hardware draws depend on the tile shape, so they
+are *not* schedule-invariant and not bit-comparable with the counter path —
+the lowering only uses them behind the explicit ``hw_prng=True`` opt-in.
+"""
+from __future__ import annotations
+
+import zlib
+
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "SCHEME", "threefry2x32", "derive_salt", "fold_in", "tile_bits",
+    "keep_threshold", "keep_mask", "dropout", "hw_tile_bits",
+]
+
+# Identity of the bit-generation scheme; part of ``graph_signature`` so tune
+# -cache entries from a different generator can never collide with this one.
+SCHEME = "threefry2x32-20"
+
+_PARITY = 0x1BD11BDA          # Threefish key-schedule parity constant
+_ROTATIONS = ((13, 15, 26, 6), (17, 29, 16, 24))
+_GOLDEN = 0x9E3779B9          # fold_in key word (golden-ratio constant)
+
+
+def _u32(x):
+    return jnp.asarray(x).astype(jnp.uint32)
+
+
+def _rotl(x, d: int):
+    return (x << jnp.uint32(d)) | (x >> jnp.uint32(32 - d))
+
+
+def threefry2x32(k0, k1, x0, x1):
+    """The 20-round threefry2x32 block cipher on uint32 words (broadcasts
+    over array-shaped counters).  Returns both output words."""
+    k0, k1, x0, x1 = _u32(k0), _u32(k1), _u32(x0), _u32(x1)
+    ks = (k0, k1, k0 ^ k1 ^ jnp.uint32(_PARITY))
+    x0 = x0 + ks[0]
+    x1 = x1 + ks[1]
+    for i in range(5):
+        for d in _ROTATIONS[i % 2]:
+            x0 = x0 + x1
+            x1 = _rotl(x1, d) ^ x0
+        x0 = x0 + ks[(i + 1) % 3]
+        x1 = x1 + ks[(i + 2) % 3] + jnp.uint32(i + 1)
+    return x0, x1
+
+
+def derive_salt(name: str) -> int:
+    """Static per-site key word from a stable name (crc32).  Use one name per
+    dropout site (e.g. ``"fused_output/dropout"``); the fused graph node and
+    any unfused reference path that must reproduce its draw derive the same
+    salt from the same string."""
+    return zlib.crc32(name.encode("utf-8")) & 0xFFFFFFFF
+
+
+def fold_in(seed, data):
+    """Fold ``data`` (step / layer / microbatch index — traced or static)
+    into ``seed``, returning a new uint32 scalar seed.  One threefry call
+    keyed on the golden-ratio constant; statistically independent streams
+    per folded value."""
+    x0, _ = threefry2x32(_u32(seed), jnp.uint32(_GOLDEN), _u32(data),
+                         jnp.uint32(0))
+    return x0
+
+
+def tile_bits(seed, salt, shape, *, offsets=(0, 0)):
+    """uint32 bits for a 2D tile of ``shape`` whose element ``(r, c)`` sits
+    at global coordinates ``(offsets[0] + r, offsets[1] + c)`` — the counter
+    words.  ``offsets`` may be traced (the Pallas lowering passes the tile's
+    block offsets); the full-array call sites use the default ``(0, 0)``."""
+    assert len(shape) == 2, shape
+    r0, c0 = offsets
+    rows = lax.broadcasted_iota(jnp.int32, shape, 0) + jnp.asarray(
+        r0, jnp.int32)
+    cols = lax.broadcasted_iota(jnp.int32, shape, 1) + jnp.asarray(
+        c0, jnp.int32)
+    bits, _ = threefry2x32(seed, salt, rows, cols)
+    return bits
+
+
+def keep_threshold(rate: float) -> int:
+    """Static uint32 threshold: ``bits < threshold`` keeps an element with
+    probability ``1 - rate`` (exact integer compare, no float rounding)."""
+    t = int((1.0 - float(rate)) * 4294967296.0)
+    return max(0, min(t, 4294967295))
+
+
+def keep_mask(seed, salt, shape, *, rate: float, offsets=(0, 0)):
+    """Boolean keep decisions for a tile (True = keep)."""
+    return tile_bits(seed, salt, shape, offsets=offsets) < jnp.uint32(
+        keep_threshold(rate))
+
+
+def dropout(x, seed, salt, rate: float, *, offsets=(0, 0)):
+    """Reference dropout over a full 2D array with the *same* draw the fused
+    ``dropout_rng`` epilogue regenerates tile-by-tile — the unfused model
+    path calls this so fused-vs-unfused training trajectories match under
+    one seed.  Scale runs in fp32 (bf16 fix); output keeps ``x.dtype``."""
+    if rate <= 0.0:
+        return x
+    keep = keep_mask(seed, salt, x.shape, rate=rate, offsets=offsets)
+    y = jnp.where(keep, x.astype(jnp.float32) * jnp.float32(
+        1.0 / (1.0 - rate)), jnp.float32(0.0))
+    return y.astype(x.dtype)
+
+
+def hw_tile_bits(seed, salt, shape, *, offsets=(0, 0)):
+    """TPU hardware PRNG path: re-seed ``pltpu.prng_seed`` per tile on
+    ``(seed, salt, row0, col0)`` and draw a tile of bits.  Faster than the
+    counter mixer on real hardware, but the stream depends on the tile shape
+    — NOT schedule-invariant and NOT bit-identical to :func:`tile_bits`;
+    only used behind the lowering's explicit ``hw_prng=True`` opt-in."""
+    from jax.experimental.pallas import tpu as pltpu
+    r0, c0 = offsets
+    pltpu.prng_seed(_u32(seed), _u32(salt), _u32(r0), _u32(c0))
+    bits = pltpu.prng_random_bits(shape)
+    return pltpu.bitcast(bits, jnp.uint32)

@@ -98,7 +98,7 @@ def init_attention(cfg: ModelConfig, key):
 
 def attention_apply(cfg: ModelConfig, p, x, *, kind: str = "attn",
                     positions=None, cache=None, cache_pos=None,
-                    xattn_kv=None, residual=None):
+                    xattn_kv=None, residual=None, dropout_seed=None):
     """x (B, S, d).  kind ∈ {attn, local, global, bidir, cross}.
 
     Training/prefill: cache None.  Decode: S == 1, ``cache`` = dict(k, v)
@@ -106,8 +106,15 @@ def attention_apply(cfg: ModelConfig, p, x, *, kind: str = "attn",
     ``residual`` (B, S, d): when given, the block residual is folded into
     the output projection — with ``cfg.use_fusion`` it rides the
     ``fused_attn_out_graph`` ``+residual`` tail inside the same kernel as
-    the GEMM, so the caller must NOT add it again.  Returns
-    (out, new_cache)."""
+    the GEMM, so the caller must NOT add it again.
+
+    ``dropout_seed`` (traced uint32 scalar, train only): enables the
+    post-projection dropout at ``cfg.dropout_rate``.  Both paths draw the
+    SAME counter-based bits (``fusion.rng``) over the (B·S, d) projection —
+    fused inside the output-projection kernel (``dropout_rng`` epilogue,
+    no mask tensor), reference via ``rng.dropout`` — so fused and unfused
+    training trajectories match under one seed.  ``None`` (inference /
+    decode) disables dropout.  Returns (out, new_cache)."""
     dt = compute_dtype(cfg)
     b, s, d = x.shape
     h, hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -178,15 +185,28 @@ def attention_apply(cfg: ModelConfig, p, x, *, kind: str = "attn",
             new_cache = {"k": k, "v": v}
 
     o = o.transpose(0, 2, 1, 3).reshape(b * s, h * hd)
+    drop_rate = cfg.dropout_rate if dropout_seed is not None else 0.0
     if cfg.use_fusion:
         # output projection through the fusion compiler; the block residual
-        # (lm.block_apply) rides the graph's +residual tail — GEMM and
-        # residual add in ONE kernel, fused backward via compile_with_vjp
+        # (lm.block_apply) rides the graph's +residual tail — GEMM, in-kernel
+        # PRNG dropout, and residual add in ONE kernel, fused backward (which
+        # regenerates the dropout bits) via compile_with_vjp
         from repro.fusion import fused_attn_out_apply
         res2d = residual.reshape(b * s, d) if residual is not None else None
-        out = fused_attn_out_apply(o, pw["wo"], residual=res2d).reshape(b, s, d)
+        out = fused_attn_out_apply(
+            o, pw["wo"], residual=res2d, dropout_rate=drop_rate,
+            dropout_seed=dropout_seed if drop_rate > 0.0 else None,
+        ).reshape(b, s, d)
     else:
-        out = ops.matmul(o, pw["wo"]).reshape(b, s, d)
+        out = ops.matmul(o, pw["wo"])
+        if drop_rate > 0.0:
+            # same counter-based draw over the same (B·S, d) index space and
+            # salt as the fused dropout_rng node — bit-identical decisions
+            from repro.fusion import rng as frng
+            from repro.fusion.library import ATTN_OUT_DROPOUT_SALT
+            out = frng.dropout(out, dropout_seed, ATTN_OUT_DROPOUT_SALT,
+                               drop_rate)
+        out = out.reshape(b, s, d)
         if residual is not None:
             out = residual + out
     return out, new_cache

@@ -84,8 +84,10 @@ def init_block(cfg: ModelConfig, key, kind: str, moe: bool, cross: bool = False)
 
 def block_apply(cfg: ModelConfig, p, x, *, kind: str, moe: bool,
                 cache=None, cache_pos=0, positions=None, xattn_kv=None,
-                ep_axis: Optional[str] = None):
-    """Pre-norm residual block.  Returns (x, new_cache, aux_loss)."""
+                ep_axis: Optional[str] = None, dropout_seed=None):
+    """Pre-norm residual block.  ``dropout_seed`` (train only, already
+    folded per layer) enables the attention-output dropout at
+    ``cfg.dropout_rate``.  Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     h = B._norm(cfg, p["norm1"], x)
     new_cache = dict(cache) if cache is not None else None
@@ -111,7 +113,8 @@ def block_apply(cfg: ModelConfig, p, x, *, kind: str, moe: bool,
                                    positions=positions,
                                    cache=cache.get("attn") if cache else None,
                                    cache_pos=cache_pos,
-                                   residual=x if res_folded else None)
+                                   residual=x if res_folded else None,
+                                   dropout_seed=dropout_seed)
         if new_cache is not None:
             new_cache["attn"] = c
     x = out if res_folded else x + out
@@ -221,24 +224,36 @@ def init_params(cfg: ModelConfig, key):
 
 def _apply_groups(cfg, gparams_list, groups, x, *, caches=None, cache_pos=0,
                   positions=None, xattn_kv=None, ep_axis=None, remat=True,
-                  cross=False, unroll=False):
+                  cross=False, unroll=False, dropout_seed=None):
     """Scan each group over its repeat axis; thread caches and aux loss.
 
     ``unroll=True`` replaces the depth scan with a trace-time loop — used by
     the dry-run so ``compiled.cost_analysis()`` counts every layer (XLA's
-    analysis reports a while-loop body once), at the cost of HLO size."""
+    analysis reports a while-loop body once), at the cost of HLO size.
+
+    ``dropout_seed`` (traced uint32 scalar) is folded with the absolute
+    layer index (``fusion.rng.fold_in``) so every layer draws an independent
+    dropout stream from one seed — identical across fused/unfused paths and
+    across scan/unroll layouts."""
     total_aux = jnp.zeros((), jnp.float32)
     new_caches = []
+    layer_base = 0
     for gi, (gparams, group) in enumerate(zip(gparams_list, groups)):
         gcache = caches[gi] if caches is not None else None
 
-        def period(x, pparams, pcache):
+        def period(x, pparams, pcache, lidx0):
             aux_p = jnp.zeros((), jnp.float32)
             ncache = [] if pcache is not None else None
             for pos_i, (kind, moe) in enumerate(group.kinds):
+                if dropout_seed is not None:
+                    from repro.fusion import rng as frng
+                    seed_i = frng.fold_in(dropout_seed, lidx0 + pos_i)
+                else:
+                    seed_i = None
                 fn = partial(block_apply, cfg, kind=kind, moe=moe,
                              cache_pos=cache_pos, positions=positions,
-                             xattn_kv=xattn_kv, ep_axis=ep_axis)
+                             xattn_kv=xattn_kv, ep_axis=ep_axis,
+                             dropout_seed=seed_i)
                 if remat:
                     fn = jax.checkpoint(
                         fn, policy=jax.checkpoint_policies.nothing_saveable,
@@ -254,13 +269,15 @@ def _apply_groups(cfg, gparams_list, groups, x, *, caches=None, cache_pos=0,
                 aux_p = aux_p + aux
             return x, ncache, aux_p
 
+        period_len = len(group.kinds)
         if group.repeat == 1 or unroll:
             ncaches_list = []
             for r in range(group.repeat):
                 pparams = jax.tree.map(lambda a: a[r], gparams)
                 pcache = (jax.tree.map(lambda a: a[r], gcache)
                           if gcache is not None else None)
-                x, ncache, aux_p = period(x, pparams, pcache)
+                x, ncache, aux_p = period(
+                    x, pparams, pcache, layer_base + r * period_len)
                 total_aux = total_aux + aux_p
                 if ncache is not None:
                     ncaches_list.append(ncache)
@@ -270,14 +287,16 @@ def _apply_groups(cfg, gparams_list, groups, x, *, caches=None, cache_pos=0,
         else:
             def scan_body(carry, xs):
                 x, aux_acc = carry
-                pparams, pcache = xs
-                x, ncache, aux_p = period(x, pparams, pcache)
+                pparams, pcache, lidx0 = xs
+                x, ncache, aux_p = period(x, pparams, pcache, lidx0)
                 return (x, aux_acc + aux_p), ncache
 
-            xs = (gparams, gcache)
+            lidx = layer_base + jnp.arange(group.repeat) * period_len
+            xs = (gparams, gcache, lidx)
             (x, total_aux), ncaches = jax.lax.scan(
                 scan_body, (x, total_aux), xs)
             new_caches.append(ncaches)
+        layer_base += group.repeat * period_len
     return x, new_caches if caches is not None else None, total_aux
 
 
@@ -287,9 +306,12 @@ def _embed(cfg, params, tokens):
 
 
 def forward_hidden(cfg: ModelConfig, params, batch, *, caches=None,
-                   cache_pos=0, ep_axis=None, remat=True, unroll=False):
+                   cache_pos=0, ep_axis=None, remat=True, unroll=False,
+                   dropout_seed=None):
     """→ (hidden (B, S, d) fp-compute, new_caches, aux).  ``batch`` keys:
-    tokens (B,S) [+ patches (B,P,d) for vlm; frames (B,F,d) for encdec]."""
+    tokens (B,S) [+ patches (B,P,d) for vlm; frames (B,F,d) for encdec].
+    ``dropout_seed`` (train only) enables ``cfg.dropout_rate`` dropout in
+    the decoder blocks — per-layer streams are folded in downstream."""
     tokens = batch["tokens"]
     b, s = tokens.shape
     dt = B.compute_dtype(cfg)
@@ -318,7 +340,8 @@ def forward_hidden(cfg: ModelConfig, params, batch, *, caches=None,
     x, new_dec, aux = _apply_groups(
         cfg, params["groups"], groups, x, caches=dec_caches,
         cache_pos=cache_pos, positions=positions, xattn_kv=xattn_kv,
-        ep_axis=ep_axis, remat=remat, unroll=unroll)
+        ep_axis=ep_axis, remat=remat, unroll=unroll,
+        dropout_seed=dropout_seed)
     x = B._norm(cfg, params["final_norm"], x)
     new_caches = None
     if caches is not None:
@@ -361,11 +384,15 @@ def _unembed_weight(cfg, params):
 
 
 def lm_loss(cfg: ModelConfig, params, batch, *, ep_axis=None, remat=True,
-            loss_chunk: int = 512, aux_weight: float = 0.01, unroll=False):
+            loss_chunk: int = 512, aux_weight: float = 0.01, unroll=False,
+            dropout_seed=None):
     """batch: tokens (B,S), labels (B,S), mask (B,S).  Chunked CE over the
-    sequence: logits materialize only (B, chunk, V) at a time."""
+    sequence: logits materialize only (B, chunk, V) at a time.
+    ``dropout_seed`` (train step, already folded with the step index)
+    enables ``cfg.dropout_rate`` dropout."""
     h, _, aux = forward_hidden(cfg, params, batch, ep_axis=ep_axis,
-                               remat=remat, unroll=unroll)
+                               remat=remat, unroll=unroll,
+                               dropout_seed=dropout_seed)
     if cfg.frontend == "vision_stub" and "patches" in batch:
         h = h[:, batch["patches"].shape[1]:]
     w = _unembed_weight(cfg, params)

@@ -38,6 +38,9 @@ class TrainConfig:
     loss_chunk: int = 512
     ep_axis: Optional[str] = "model"
     unroll_layers: bool = False         # dry-run: exact cost analysis
+    dropout_seed: int = 0               # base seed for cfg.dropout_rate
+    #                                     dropout; folded with the step index
+    #                                     (counter PRNG — no key plumbing)
     adamw: adamw_mod.AdamWConfig = adamw_mod.AdamWConfig()
 
 
@@ -62,13 +65,22 @@ def init_train_state(cfg: ModelConfig, tcfg: TrainConfig, key):
 
 
 def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
-    def loss_fn(params, microbatch):
+    def loss_fn(params, microbatch, dropout_seed=None):
         return lm.lm_loss(cfg, params, microbatch, ep_axis=tcfg.ep_axis,
                           remat=tcfg.remat, loss_chunk=tcfg.loss_chunk,
-                          unroll=tcfg.unroll_layers)
+                          unroll=tcfg.unroll_layers,
+                          dropout_seed=dropout_seed)
 
     def train_step(params, opt_state, batch, step):
         lr = _lr(tcfg, step)
+        # per-step dropout stream: fold the step index into the base seed
+        # (fresh draws every step, reproducible across runs/restarts —
+        # per-layer folding happens inside the model)
+        dropout_seed = None
+        if cfg.dropout_rate > 0.0:
+            from repro.fusion import rng as frng
+            dropout_seed = frng.fold_in(
+                jnp.uint32(tcfg.dropout_seed), jnp.asarray(step, jnp.uint32))
         nmb = tcfg.microbatches
         if nmb > 1:
             # split the global batch into microbatches and accumulate —
@@ -83,22 +95,26 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
             zero_g = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
-            def acc_body(carry, mb):
+            def acc_body(carry, xs):
                 g_acc, l_acc = carry
+                mb, mb_i = xs
+                mb_seed = (frng.fold_in(dropout_seed, mb_i)
+                           if dropout_seed is not None else None)
                 (loss, metrics), g = jax.value_and_grad(
-                    loss_fn, has_aux=True)(params, mb)
+                    loss_fn, has_aux=True)(params, mb, mb_seed)
                 g_acc = jax.tree.map(lambda a, b_: a + b_.astype(jnp.float32),
                                      g_acc, g)
                 return (g_acc, l_acc + loss), None
 
             (grads, loss_sum), _ = jax.lax.scan(
-                acc_body, (zero_g, jnp.zeros(())), mbs)
+                acc_body, (zero_g, jnp.zeros(())),
+                (mbs, jnp.arange(nmb, dtype=jnp.uint32)))
             grads = jax.tree.map(lambda g: g / nmb, grads)
             loss = loss_sum / nmb
             metrics = {}
         else:
             (loss, metrics), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(params, batch)
+                loss_fn, has_aux=True)(params, batch, dropout_seed)
 
         opt_state = dict(opt_state)
         if tcfg.grad_compression:

@@ -36,6 +36,8 @@ def _operands_for(graph, dtype, m=M, k=K, n=N):
             v = jnp.asarray(RNG.normal(size=(m, n)).astype(np.float32), dtype)
         elif spec.kind == "mask":
             v = jnp.asarray(RNG.random((m, n)) > 0.4)
+        elif spec.kind == "scalar":   # PRNG seed
+            v = jnp.asarray(int(RNG.integers(0, 2**31)), jnp.uint32)
         else:  # rowvec — fp32 like the model's norm/bias params
             v = jnp.asarray(RNG.normal(size=(n,)).astype(np.float32))
         ops[spec.name] = v
@@ -51,8 +53,10 @@ def _single_op_graph(op_name):
         nm = f"p{i}"
         operands.append((nm, kind))
         extra.append(nm)
-    attrs = {"rate": 0.3} if op_name in ("dropout", "dropout_grad") else (
-        {"s": 0.5} if op_name == "scale" else {})
+    attrs = ({"rate": 0.3} if op_name in ("dropout", "dropout_grad") else
+             {"rate": 0.3, "salt": 11} if op_name in ("dropout_rng",
+                                                      "dropout_rng_grad")
+             else {"s": 0.5} if op_name == "scale" else {})
     # value inputs beyond the accumulator become (M, N) tile operands
     # ("acc", "y0", "y1", ...) — covers binary TPPs and the derivative ops
     values = ["acc"]
@@ -325,30 +329,53 @@ def test_simplification_invariance(path):
     """compile(simplified) == compile(original) — and the original call
     signature (incl. the dropped mask) keeps working."""
     g = fusion.fused_output_graph(0.0)
-    opd = _operands_for(g, jnp.float32)        # includes a keep_mask
+    opd = _operands_for(g, jnp.float32)        # includes the PRNG seed
     kw = dict(tiles=TILES, interpret=True) if path == "pallas" else {}
     out = fusion.compile(g, path=path, **kw)(**opd)
     raw = fusion.compile(g, path=path, simplify=False, **kw)(**opd)
     np.testing.assert_allclose(np.asarray(out), np.asarray(raw),
                                rtol=1e-6, atol=1e-6)
-    # same result without the mask operand at all
-    opd2 = {k: v for k, v in opd.items() if k != "keep_mask"}
+    # same result without the seed operand at all
+    opd2 = {k: v for k, v in opd.items() if k != "seed"}
     out2 = fusion.compile(g, path=path, **kw)(**opd2)
     np.testing.assert_allclose(np.asarray(out2), np.asarray(out),
                                rtol=0, atol=0)
 
 
 def test_rate0_fused_output_has_no_mask_tensormap():
-    """Acceptance: rate-0 fused_output lowers with no mask operand in its
-    TensorMaps (no all-ones (M, N) bool streamed through the kernel)."""
+    """Acceptance: rate-0 fused_output lowers with no dropout operand in its
+    TensorMaps (neither a mask nor a seed)."""
     g = fusion.simplify_graph(fusion.fused_output_graph(0.0))
-    assert "keep_mask" not in g.operand_names
+    assert "seed" not in g.operand_names
     loops, in_maps, out_map = fusion.lowering.build_nest_inputs(
         g, M, K, N, TILES)
     # x, w, bias, residual, gamma, beta — and nothing (M, N)-boolean
     assert len(in_maps) == 6
     g1 = fusion.simplify_graph(fusion.fused_output_graph(0.1))
-    assert "keep_mask" in g1.operand_names
+    assert "seed" in g1.operand_names
+
+
+def test_rng_fused_output_streams_no_mask_at_any_rate():
+    """Acceptance: at rate > 0 the PRNG graph lowers with NO (M, N) mask
+    operand — the seed is the only dropout input and it is one element —
+    confirmed structurally and by ``graph_cost`` traffic accounting."""
+    g_rng = fusion.simplify_graph(fusion.fused_output_graph(0.1))
+    assert all(o.kind != "mask" for o in g_rng.operands)
+    loops, in_maps, out_map = fusion.lowering.build_nest_inputs(
+        g_rng, M, K, N, TILES)
+    seed_pos = [i for i, o in enumerate(
+        g_rng.contraction_operands + g_rng.epilogue_operands)
+        if o.kind == "scalar"]
+    assert len(seed_pos) == 1 and in_maps[seed_pos[0]].tile == (1, 1)
+    # traffic: the legacy mask graph moves >= M*N more bytes per call
+    g_mask = fusion.fused_output_graph(0.1, rng_dropout=False)
+    rep_mask = fusion.graph_cost(g_mask, 256, 256, 256, tiles=(32, 64, 64),
+                                 dtype=np.float32)
+    rep_rng = fusion.graph_cost(fusion.fused_output_graph(0.1), 256, 256,
+                                256, tiles=(32, 64, 64), dtype=np.float32)
+    assert rep_mask.hbm_bytes - rep_rng.hbm_bytes >= 256 * 256
+    # ...while the PRNG graph pays the bits-generation VPU flops instead
+    assert rep_rng.compute_time >= rep_mask.compute_time
 
 
 def test_fused_attn_out_apply_validates_norm_params():
@@ -364,18 +391,110 @@ def test_fused_attn_out_apply_validates_norm_params():
     assert out.shape == (16, 16)
 
 
-def test_fused_output_apply_requires_mask_only_when_dropping():
-    x = jnp.asarray(RNG.normal(size=(M, K)).astype(np.float32))
-    w = jnp.asarray(RNG.normal(size=(K, N)).astype(np.float32))
-    bias, gamma, beta = (jnp.asarray(RNG.normal(size=(N,)).astype(np.float32))
+def _fused_output_args(dtype=jnp.float32, m=M, k=K, n=N):
+    x = jnp.asarray(RNG.normal(size=(m, k)).astype(np.float32), dtype)
+    w = jnp.asarray(RNG.normal(size=(k, n)).astype(np.float32), dtype)
+    bias, gamma, beta = (jnp.asarray(RNG.normal(size=(n,)).astype(np.float32))
                          for _ in range(3))
-    res = jnp.asarray(RNG.normal(size=(M, N)).astype(np.float32))
-    out = fusion.fused_output_apply(x, w, bias, res, gamma, beta,
-                                    dropout_rate=0.0, backend="xla")
+    res = jnp.asarray(RNG.normal(size=(m, n)).astype(np.float32), dtype)
+    return x, w, bias, res, gamma, beta
+
+
+def test_fused_output_apply_requires_seed_only_when_dropping():
+    args = _fused_output_args()
+    out = fusion.fused_output_apply(*args, dropout_rate=0.0, backend="xla")
     assert out.shape == (M, N)
-    with pytest.raises(ValueError):
-        fusion.fused_output_apply(x, w, bias, res, gamma, beta,
-                                  dropout_rate=0.5, backend="xla")
+    with pytest.raises(ValueError, match="dropout_seed"):
+        fusion.fused_output_apply(*args, dropout_rate=0.5, backend="xla")
+    # a seed enables the in-kernel PRNG — no mask anywhere
+    out_d = fusion.fused_output_apply(*args, dropout_rate=0.5,
+                                      dropout_seed=7, backend="xla")
+    assert out_d.shape == (M, N)
+    assert not np.allclose(np.asarray(out_d), np.asarray(out))
+
+
+def test_fused_output_apply_deterministic_escape():
+    """Satellite bugfix: inference calls at rate > 0 no longer demand a
+    mask/seed — deterministic=True simplifies the dropout node away and
+    matches the rate-0 result exactly."""
+    args = _fused_output_args()
+    for backend in ("xla", "pallas_interpret"):
+        out0 = fusion.fused_output_apply(*args, dropout_rate=0.0,
+                                         backend=backend)
+        out_det = fusion.fused_output_apply(*args, dropout_rate=0.5,
+                                            deterministic=True,
+                                            backend=backend)
+        np.testing.assert_array_equal(np.asarray(out0), np.asarray(out_det))
+
+
+def test_fused_output_apply_legacy_mask_still_works():
+    """Backward compat: passing keep_mask routes through the registered
+    mask-operand ``dropout`` op (same semantics as before the PRNG)."""
+    args = _fused_output_args()
+    mask = jnp.asarray(RNG.random((M, N)) > 0.5)
+    outs = [np.asarray(fusion.fused_output_apply(
+        *args, dropout_rate=0.5, keep_mask=mask, backend=be))
+        for be in ("xla", "pallas_interpret")]
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-5, atol=1e-5)
+
+
+def test_fused_output_rng_backend_and_schedule_bit_identical_draws():
+    """Acceptance: the counter-based draw is bit-identical across xla /
+    pallas_interpret and across tuned schedules — compare the post-dropout
+    zero pattern of a bare GEMM→dropout_rng graph (exact, not tolerance)."""
+    g = fusion.TppGraph.chain(
+        "g_rng_sched", [("dropout_rng", ("seed",), {"rate": 0.4, "salt": 5})],
+        [("x", "lhs"), ("w", "rhs"), ("seed", "scalar")])
+    ops = _operands_for(g, jnp.float32)
+    ref = np.asarray(fusion.compile(g, path="xla",
+                                    out_dtype=jnp.float32)(**ops))
+    outs = [ref]
+    for spec, bs, tiles in [("bca", {}, TILES), ("cba", {}, TILES),
+                            ("bcca", {"c": (2,)}, TILES),
+                            ("bbca", {"b": (2,)}, (8, 32, 32)),
+                            ("cbba", {"b": (2,)}, (8, 16, 64))]:
+        outs.append(np.asarray(fusion.compile(
+            g, path="pallas", tiles=tiles, spec_string=spec, block_steps=bs,
+            interpret=True, out_dtype=jnp.float32)(**ops)))
+    for o in outs[1:]:
+        np.testing.assert_array_equal(o == 0.0, ref == 0.0)
+        np.testing.assert_allclose(o, ref, rtol=1e-5, atol=1e-5)
+    # a different seed flips decisions
+    ops2 = dict(ops, seed=ops["seed"] + jnp.uint32(1))
+    other = np.asarray(fusion.compile(g, path="xla",
+                                      out_dtype=jnp.float32)(**ops2))
+    assert ((other == 0.0) != (ref == 0.0)).any()
+
+
+@pytest.mark.parametrize("op_name", ["dropout", "dropout_rng"])
+def test_dropout_bf16_rescale_runs_fp32(op_name):
+    """Satellite bugfix pin: the 1/(1-rate) rescale (and the PRNG keep
+    decision) run in fp32 — at rate 0.5 the survivor values of a bf16 graph
+    must equal exactly bf16(fp32_value * 2), with zero tolerance."""
+    rate = 0.5
+    if op_name == "dropout_rng":
+        attrs = {"rate": rate, "salt": 3}
+        extra = [("seed", "scalar")]
+    else:
+        attrs = {"rate": rate}
+        extra = [("keep_mask", "mask")]
+    g = fusion.TppGraph.chain(
+        f"g_bf16_{op_name}", [(op_name, tuple(n for n, _ in extra), attrs)],
+        [("x", "lhs"), ("w", "rhs"), *extra])
+    ops = _operands_for(g, jnp.bfloat16)
+    base = fusion.TppGraph.chain(
+        "g_bf16_base", [], [("x", "lhs"), ("w", "rhs")])
+    for path, kw in (("xla", {}), ("pallas", dict(tiles=TILES,
+                                                  interpret=True))):
+        out = np.asarray(fusion.compile(g, path=path, **kw)(**ops),
+                         np.float32)
+        raw = np.asarray(fusion.compile(base, path=path,
+                                        out_dtype=jnp.float32, **kw)(
+            x=ops["x"], w=ops["w"]), np.float32)
+        want = np.asarray(jnp.asarray(raw * 2.0).astype(jnp.bfloat16),
+                          np.float32)
+        kept = out != 0.0
+        np.testing.assert_array_equal(out[kept], want[kept])
 
 
 # ---------------------------------------------------------------------------
@@ -690,6 +809,56 @@ def test_graph_signature_distinguishes_roots_and_outputs():
     g1 = fusion.fused_mlp_graph("gelu")
     sigs = {fusion.graph_signature(g) for g in (g1, g2, g3)}
     assert len(sigs) == 3
+
+
+def test_graph_signature_keys_dropout_rate_and_scheme():
+    """Satellite audit: the dropout rate keys tune-cache entries for BOTH
+    dropout ops (a rate-0 graph simplifies to a different structure than a
+    rate-0.1 one, and rate 0.1 vs 0.2 differ via node attrs), the PRNG
+    graphs carry the bit-generation scheme, and mask vs PRNG graphs can
+    never collide."""
+    def sig(g):
+        return fusion.graph_signature(fusion.simplify_graph(g))
+
+    for rng_dropout in (True, False):
+        sigs = {sig(fusion.fused_output_graph(r, rng_dropout=rng_dropout))
+                for r in (0.0, 0.1, 0.2)}
+        assert len(sigs) == 3, rng_dropout
+    assert sig(fusion.fused_output_graph(0.1)) != sig(
+        fusion.fused_output_graph(0.1, rng_dropout=False))
+    from repro.fusion import rng as frng
+    assert f"rng:{frng.SCHEME}" in sig(fusion.fused_output_graph(0.1))
+    assert "rng:" not in sig(fusion.fused_output_graph(0.1,
+                                                       rng_dropout=False))
+    # salt is part of the identity too (two dropout sites ≠ one site)
+    assert sig(fusion.fused_output_graph(0.1, dropout_salt=1)) != sig(
+        fusion.fused_output_graph(0.1, dropout_salt=2))
+
+
+def test_cross_rate_autotune_cache_miss():
+    """Satellite: a schedule tuned at one dropout rate must MISS the cache
+    at another rate — for the PRNG graph and the legacy mask graph alike."""
+    import tempfile
+    with tempfile.TemporaryDirectory() as cd:
+        for rng_dropout in (True, False):
+            g1 = fusion.fused_output_graph(0.1, rng_dropout=rng_dropout)
+            g2 = fusion.fused_output_graph(0.2, rng_dropout=rng_dropout)
+            g0 = fusion.fused_output_graph(0.0, rng_dropout=rng_dropout)
+            _r, s1 = fusion.autotune_graph(
+                g1, 128, 128, 256, tiles=(16, 32, 64), max_candidates=12,
+                cache_dir=cd, return_stats=True)
+            _r, s1b = fusion.autotune_graph(
+                g1, 128, 128, 256, tiles=(16, 32, 64), max_candidates=12,
+                cache_dir=cd, return_stats=True)
+            _r, s2 = fusion.autotune_graph(
+                g2, 128, 128, 256, tiles=(16, 32, 64), max_candidates=12,
+                cache_dir=cd, return_stats=True)
+            _r, s0 = fusion.autotune_graph(
+                g0, 128, 128, 256, tiles=(16, 32, 64), max_candidates=12,
+                cache_dir=cd, return_stats=True)
+            assert not s1.cache_hit and s1b.cache_hit, rng_dropout
+            assert not s2.cache_hit, rng_dropout      # rate 0.1 ≠ 0.2
+            assert not s0.cache_hit, rng_dropout      # simplified ≠ rate>0
 
 
 def test_multi_root_graph_cost_scales_flops_and_shares_lhs():

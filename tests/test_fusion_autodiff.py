@@ -36,6 +36,8 @@ def _operands_for(graph, dtype, m=M, k=K, n=N):
             v = jnp.asarray(RNG.normal(size=(m, n)).astype(np.float32), dtype)
         elif spec.kind == "mask":
             v = jnp.asarray(RNG.random((m, n)) > 0.4)
+        elif spec.kind == "scalar":   # PRNG seed
+            v = jnp.asarray(int(RNG.integers(0, 2**31)), jnp.uint32)
         else:  # rowvec — fp32 like the model's norm/bias params
             v = jnp.asarray(RNG.normal(size=(n,)).astype(np.float32))
         ops[spec.name] = v
@@ -74,6 +76,10 @@ def _assert_grad_parity(graph, dtype, backend, tol=None, policy="recompute",
 LIBRARY_GRAPHS = {
     "fused_output_r0": lambda: fusion.fused_output_graph(0.0),
     "fused_output_r05": lambda: fusion.fused_output_graph(0.5),
+    "fused_output_r05_mask": lambda: fusion.fused_output_graph(
+        0.5, rng_dropout=False),
+    "fused_attn_out_do_res": lambda: fusion.fused_attn_out_graph(
+        True, dropout_rate=0.3),
     "fused_mlp_gelu": lambda: fusion.fused_mlp_graph("gelu"),
     "fused_mlp_relu": lambda: fusion.fused_mlp_graph("relu"),
     "fused_gated_mlp_silu": lambda: fusion.fused_gated_mlp_graph("silu"),
@@ -104,8 +110,9 @@ def _single_op_graph(op_name):
     for i, kind in enumerate(op.operand_kinds):
         operands.append((f"p{i}", kind))
         extra.append(f"p{i}")
-    attrs = {"rate": 0.3} if op_name == "dropout" else (
-        {"s": 0.5} if op_name == "scale" else {})
+    attrs = ({"rate": 0.3} if op_name == "dropout" else
+             {"rate": 0.3, "salt": 11} if op_name == "dropout_rng"
+             else {"s": 0.5} if op_name == "scale" else {})
     values = ["acc"]
     for i in range(op.value_arity - 1):
         operands.append((f"y{i}", "tile"))
@@ -222,17 +229,31 @@ def test_backward_dz_graph_blocked_schedule_sweep(spec, bs):
 
 
 def test_reducing_backward_uses_post_reduce_band():
-    """fused_output backward: dropout_grad runs *after* layernorm_grad in
-    the same fused graph (post-reduce band), multi-output stacked."""
-    plan = autodiff.derive_vjp(fusion.fused_output_graph(0.5))
-    dz = [grp for grp in plan.stage1 if grp.graph is not None
-          and "layernorm_grad" in {nd.op for nd in grp.graph.nodes}]
-    assert len(dz) == 1
-    graph = dz[0].graph
-    red = graph.reducing_node()
-    assert red.op == "layernorm_grad"
-    assert [nd.op for nd in graph.post_reduce_nodes()] == ["dropout_grad"]
-    assert len(graph.outputs) == 2   # (d_residual, d_acc) in one kernel
+    """fused_output backward: the dropout grad runs *after* layernorm_grad
+    in the same fused graph (post-reduce band), multi-output stacked — for
+    the PRNG graph (whose grad node regenerates the forward bits) and the
+    legacy mask graph alike."""
+    for rng_dropout, gop in ((True, "dropout_rng_grad"),
+                             (False, "dropout_grad")):
+        plan = autodiff.derive_vjp(
+            fusion.fused_output_graph(0.5, rng_dropout=rng_dropout))
+        dz = [grp for grp in plan.stage1 if grp.graph is not None
+              and "layernorm_grad" in {nd.op for nd in grp.graph.nodes}]
+        assert len(dz) == 1
+        graph = dz[0].graph
+        red = graph.reducing_node()
+        assert red.op == "layernorm_grad"
+        assert [nd.op for nd in graph.post_reduce_nodes()] == [gop]
+        assert len(graph.outputs) == 2   # (d_residual, d_acc) in one kernel
+        if rng_dropout:
+            # the backward node carries the forward (rate, salt) attrs and
+            # seed operand — the draw is regenerated, never saved
+            bnode = graph.post_reduce_nodes()[0]
+            fnode = next(nd for nd in plan.forward.nodes
+                         if nd.op == "dropout_rng")
+            assert bnode.attrs == fnode.attrs
+            assert "seed" in bnode.inputs
+            assert all(o.kind != "mask" for o in graph.operands)
 
 
 # ---------------------------------------------------------------------------
@@ -381,6 +402,129 @@ def test_attention_residual_threading_parity():
     for a, b in zip(flat_t, flat_f):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# In-kernel PRNG dropout: backward regenerates the forward draw
+# ---------------------------------------------------------------------------
+
+def _bits_graph(rate=0.4, salt=21, act="gelu"):
+    """bias → act → dropout (post-activation dropout): the act grad needs
+    the recomputed accumulator, so the derived dz graph is a FUSED kernel
+    that must regenerate the dropout draw in-kernel."""
+    return fusion.TppGraph.chain(
+        "ad_bits",
+        [("bias_add", ("bias",), {}), (act, (), {}),
+         ("dropout_rng", ("seed",), {"rate": rate, "salt": salt})],
+        [("x", "lhs"), ("w", "rhs"), ("bias", "rowvec"),
+         ("seed", "scalar")])
+
+
+SCHEDULES = [("bca", {}, (16, 32, 64)), ("cba", {}, (16, 32, 64)),
+             ("bcca", {"c": (2,)}, (16, 32, 64)),
+             ("bbca", {"b": (2,)}, (8, 32, 32)),
+             ("cbba", {"b": (2,)}, (8, 16, 64))]
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+@pytest.mark.parametrize("sched", range(len(SCHEDULES)))
+def test_bwd_dz_regenerates_forward_draw(backend, sched):
+    """Acceptance property: for random schedules (different blockings and
+    orderings), the bits the ``@bwd_dz*`` graph regenerates exactly match
+    the forward draw — every dropped element's cotangent is an EXACT zero,
+    every kept one carries the fp32-rescaled act grad."""
+    from repro.fusion import rng as frng
+    spec, bs, tiles = SCHEDULES[sched]
+    rate, salt = 0.4, 21
+    g = _bits_graph(rate, salt)
+    ops = _operands_for(g, jnp.float32)
+    plan = autodiff.derive_vjp(g)
+    (grp,) = plan.stage1
+    assert grp.graph is not None, "dz stage should be a fused graph"
+    kw = ({} if backend == "xla"
+          else dict(tiles=tiles, spec_string=spec, block_steps=bs))
+    dz_fn = fusion.compile_for_backend(grp.graph, backend,
+                                       out_dtype=jnp.float32, **kw)
+    feed = {nm: ops[nm] for nm in grp.operand_names}
+    feed.update({d: jnp.ones((M, N), jnp.float32) for d in grp.dy_names})
+    dz = np.asarray(dz_fn(**feed))
+    # the independently regenerated draw — must agree with the kernel's
+    keep = np.asarray(frng.keep_mask(ops["seed"], salt, (M, N), rate=rate))
+    assert 0.3 < keep.mean() < 0.9
+    assert (dz[~keep] == 0.0).all()
+    # kept positions: dz = gelu_grad(1/(1-rate), z) — nonzero wherever the
+    # act grad is meaningfully sized
+    z = (np.asarray(ops["x"], np.float64) @ np.asarray(ops["w"], np.float64)
+         + np.asarray(ops["bias"], np.float64))
+    alive = keep & (np.abs(z) < 3.0)
+    assert alive.any() and (dz[alive] != 0.0).all()
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+def test_grad_through_rng_dropout_matches_manual_mask(backend):
+    """jax.grad through the fused PRNG layer equals the analytic cotangent
+    computed from an explicitly regenerated keep-mask — fwd/bwd draws are
+    identical, so no tolerance beyond GEMM reassociation is needed."""
+    from repro.fusion import rng as frng
+    g = _bits_graph(rate=0.4, salt=21)
+    ops = _operands_for(g, jnp.float32)
+    probe = jnp.asarray(RNG.normal(size=(M, N)).astype(np.float32))
+    vjp_fn = autodiff.compile_with_vjp(g, backend)
+
+    def loss(x):
+        return jnp.sum(vjp_fn(**dict(ops, x=x)) * probe)
+
+    dx = jax.grad(loss)(ops["x"])
+    keep = frng.keep_mask(ops["seed"], 21, (M, N), rate=0.4)
+    z = ops["x"] @ ops["w"] + ops["bias"]
+    dv = jnp.where(keep, probe * jnp.float32(1.0 / 0.6), 0.0)
+    want = EPILOGUE_OPS["gelu_grad"].apply(dv, z) @ ops["w"].T
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("policy", ["recompute", "saved"])
+def test_rng_dropout_residual_policies_agree(policy):
+    """Both residual policies regenerate the same draw (the seed operand and
+    attrs ride the plan either way)."""
+    g = _bits_graph(rate=0.3, salt=9)
+    _assert_grad_parity(g, jnp.float32, "xla", policy=policy)
+
+
+def test_train_step_with_dropout_matches_unfused():
+    """Acceptance: train-step trajectory match with dropout enabled — same
+    seed ⇒ identical losses fused vs unfused-reference (both draw the same
+    counter-based bits), and a different base seed changes the draw."""
+    from repro.configs import get_config
+    from repro.train.steps import TrainConfig, make_train_step, \
+        init_train_state
+    cfg0 = dataclasses.replace(get_config("minicpm_2b").reduced(),
+                               dropout_rate=0.15)
+    tcfg = TrainConfig(peak_lr=1e-2, warmup_steps=2, total_steps=10)
+    key = jax.random.PRNGKey(0)
+    batch = {
+        "tokens": jax.random.randint(key, (2, 16), 0, cfg0.vocab_size),
+        "labels": jax.random.randint(key, (2, 16), 0, cfg0.vocab_size),
+        "mask": jnp.ones((2, 16), jnp.int32),
+    }
+    hists = {}
+    for fuse in (False, True):
+        cfg = dataclasses.replace(cfg0, use_fusion=fuse)
+        params, opt = init_train_state(cfg, tcfg, jax.random.PRNGKey(1))
+        step = make_train_step(cfg, tcfg)
+        hist = []
+        for i in range(3):
+            params, opt, metrics = step(params, opt, batch, i)
+            hist.append(float(metrics["loss"]))
+        hists[fuse] = hist
+    a, b = np.asarray(hists[False]), np.asarray(hists[True])
+    assert np.max(np.abs(a - b)) < 1e-3, (hists[False], hists[True])
+    # a different base seed draws differently (dropout is actually on)
+    cfg = dataclasses.replace(cfg0, use_fusion=False)
+    params, opt = init_train_state(cfg, tcfg, jax.random.PRNGKey(1))
+    step2 = make_train_step(cfg, dataclasses.replace(tcfg, dropout_seed=99))
+    _, _, m2 = step2(params, opt, batch, 0)
+    assert abs(float(m2["loss"]) - hists[False][0]) > 1e-6
 
 
 def test_train_step_fused_descends_and_matches_unfused():
