@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
 # Tier-1 verification: the full pytest suite plus smoke runs of the fusion
-# benchmark (fused-kernel path, incl. the two-root gated-MLP parity case) and
+# benchmark (fused-kernel path, incl. the two-root gated-MLP parity case),
 # the autotune benchmark (streaming search must keep matching the exhaustive
-# baseline's top schedules), so both are exercised on every PR.
+# baseline's top schedules), and the serving benchmark (engine-vs-loop
+# parity + continuous-batching throughput floor), so all are exercised on
+# every PR.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -47,6 +49,10 @@ assert (runs["pallas_interpret"][0] == runs["pallas_interpret"][1]).all(), \
 print("seeded-dropout determinism smoke: OK")
 PY
 REPRO_TUNE_CACHE=0 python benchmarks/bench_autotune.py --smoke
+# serving smoke: gates engine-vs-legacy-loop greedy parity on a uniform
+# batch AND the continuous-vs-static throughput floor on a seeded ragged
+# trace (writes BENCH_serve.json; the full trace uses a stricter floor).
+python benchmarks/bench_serve.py --smoke
 # grad-parity smoke: derived backward TppGraphs (fusion.autodiff) vs
 # jax.grad of the composed-TPP reference, plus the fused-training step.
 # The no-arg run above already executed the full autodiff suite — only

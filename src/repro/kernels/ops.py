@@ -26,7 +26,8 @@ from repro.kernels import ref as _ref
 
 __all__ = [
     "current_backend", "use_backend",
-    "matmul", "attention", "decode_attention", "mamba_scan",
+    "matmul", "attention", "decode_attention", "paged_decode_attention",
+    "mamba_scan",
     "block_spmm", "grouped_matmul", "conv2d",
 ]
 
@@ -95,6 +96,35 @@ def decode_attention(q, k_cache, v_cache, *, length=None, window=None,
     from repro.kernels.flash_attention import flash_decode_pallas
     return flash_decode_pallas(
         q, k_cache, v_cache, length=length, window=window, block_kv=block_kv,
+        out_dtype=out_dtype, interpret=_interp(backend),
+    )
+
+
+def paged_decode_attention(q, k_pool, v_pool, page_table, *, page_size,
+                           length, window=None, out_dtype=None, backend=None,
+                           block_kv=128):
+    """Decode attention over token-major page pools (P, page_size, Hk, D)
+    indexed by ``page_table`` (B, maxp) — the serving engine's KV layout.
+
+    The XLA path runs the gather in pool layout (no transpose copy); Pallas
+    backends gather the per-slot view to the head-major cache layout and
+    reuse ``flash_decode_pallas`` (the gather is the price of not carrying a
+    dedicated paged kernel per backend)."""
+    backend = backend or current_backend()
+    if backend == "xla":
+        return _ref.paged_decode_attention_ref(
+            q, k_pool, v_pool, page_table, page_size=page_size,
+            length=length, window=window, out_dtype=out_dtype)
+    import jax.numpy as jnp
+    from repro.kernels.flash_attention import flash_decode_pallas
+    b, maxp = page_table.shape
+    # (B, maxp, ps, Hk, D) → (B, Hk, maxp·ps, D)
+    k = jnp.swapaxes(k_pool[page_table].reshape(
+        b, maxp * page_size, k_pool.shape[2], k_pool.shape[3]), 1, 2)
+    v = jnp.swapaxes(v_pool[page_table].reshape(
+        b, maxp * page_size, v_pool.shape[2], v_pool.shape[3]), 1, 2)
+    return flash_decode_pallas(
+        q, k, v, length=length, window=window, block_kv=block_kv,
         out_dtype=out_dtype, interpret=_interp(backend),
     )
 

@@ -156,6 +156,30 @@ def decode_attention_ref(q, k_cache, v_cache, *, length=None, window=None,
     return o.reshape(b, h, d).astype(out_dtype or q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pool, v_pool, page_table, *, page_size,
+                               length, window=None, out_dtype=None):
+    """Single-token decode over a paged KV pool: q (B, H, D); pools are
+    token-major page pools (P, page_size, Hk, D) shared by every slot;
+    ``page_table`` (B, maxp) int32 names each slot's pages (trash-page
+    sentinel in unused entries); ``length`` (B,) valid prefix lengths.
+
+    Token-major pools keep the decode *write* a natural (page, offset) row
+    scatter; for the read, the gathered view is swapped to the head-major
+    cache layout before the einsum — XLA folds the swap into the gather's
+    output layout, whereas contracting the token-major view directly
+    strides over heads and scalarizes the dot on CPU (measured ~4× the
+    whole attention cost).  Positions beyond ``length`` read reserved /
+    trash pages and are masked by :func:`decode_attention_ref`."""
+    b, maxp = page_table.shape
+    s = maxp * page_size
+    k = jnp.swapaxes(k_pool[page_table].reshape(b, s, k_pool.shape[2], -1),
+                     1, 2)
+    v = jnp.swapaxes(v_pool[page_table].reshape(b, s, v_pool.shape[2], -1),
+                     1, 2)
+    return decode_attention_ref(q, k, v, length=length, window=window,
+                                out_dtype=out_dtype)
+
+
 # --------------------------------------------------------------------------
 # Mamba selective scan (mamba1)
 # --------------------------------------------------------------------------

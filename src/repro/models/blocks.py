@@ -82,6 +82,19 @@ def apply_rope(x, positions, *, theta: float, fraction: float = 1.0):
 
 
 # --------------------------------------------------------------------------
+# Paged-cache indexing helpers (serving engine; see serve/kvcache.py)
+# --------------------------------------------------------------------------
+
+def _page_lookup(page_table, idx):
+    """page_table (B, maxp) int32 → page ids for per-token page indices
+    ``idx`` (B, T).  Out-of-range indices clip to the last column, which the
+    allocator fills with the trash-page sentinel — writes for padding /
+    retired slots land in the scratch page and reads are length-masked."""
+    idx = jnp.clip(idx, 0, page_table.shape[-1] - 1)
+    return jnp.take_along_axis(page_table, idx, axis=1)
+
+
+# --------------------------------------------------------------------------
 # GQA attention (causal / sliding-window / bidirectional) with KV cache
 # --------------------------------------------------------------------------
 
@@ -98,11 +111,22 @@ def init_attention(cfg: ModelConfig, key):
 
 def attention_apply(cfg: ModelConfig, p, x, *, kind: str = "attn",
                     positions=None, cache=None, cache_pos=None,
-                    xattn_kv=None, residual=None, dropout_seed=None):
+                    xattn_kv=None, residual=None, dropout_seed=None,
+                    page_table=None, page_size: int = 0):
     """x (B, S, d).  kind ∈ {attn, local, global, bidir, cross}.
 
     Training/prefill: cache None.  Decode: S == 1, ``cache`` = dict(k, v)
-    ring buffers (B, Hk, S_max, hd), ``cache_pos`` scalar write index.
+    ring buffers (B, Hk, S_max, hd), ``cache_pos`` scalar write index — or a
+    ``(B,)`` vector of per-slot positions (continuous batching: every slot
+    sits at its own sequence length; attention masks by ``pos + 1``).
+
+    Paged mode (``page_table`` (B, maxp) int32 + static ``page_size``): the
+    cache arrays are token-major page *pools* (P, page_size, Hk, hd) shared
+    by all slots;
+    a slot's logical sequence lives in the pages its table row names.  Decode
+    scatters the new K/V into (page, offset) and attends over the gathered
+    per-slot view; prefill (S > 1, from position 0) attends over the in-chunk
+    K/V and records them into the slot's pages for later decode.
     ``residual`` (B, S, d): when given, the block residual is folded into
     the output projection — with ``cfg.use_fusion`` it rides the
     ``fused_attn_out_graph`` ``+residual`` tail inside the same kernel as
@@ -149,7 +173,35 @@ def attention_apply(cfg: ModelConfig, p, x, *, kind: str = "attn",
     causal = kind in ("attn", "local", "global")
 
     new_cache = cache
-    if cache is not None and kind != "cross":
+    if cache is not None and kind != "cross" and page_table is not None:
+        assert page_size > 0, "paged cache needs a static page_size"
+        if s == 1:
+            pos = jnp.asarray(cache_pos, jnp.int32)
+            assert pos.ndim == 1, "paged decode takes per-slot (B,) positions"
+            pg = _page_lookup(page_table, (pos // page_size)[:, None])[:, 0]
+            off = jnp.mod(pos, page_size)
+            k_pool = cache["k"].at[pg, off].set(k[:, :, 0])
+            v_pool = cache["v"].at[pg, off].set(v[:, :, 0])
+            new_cache = {"k": k_pool, "v": v_pool}
+            o = ops.paged_decode_attention(
+                q[:, :, 0], k_pool, v_pool, page_table,
+                page_size=page_size, length=pos + 1, window=window)
+            o = o[:, :, None]
+        else:
+            # whole-prompt prefill (position 0): attention runs on the
+            # in-flight K/V; the pages only record them for later decode.
+            # Positions past the slot's allocation clip into the trash page.
+            if isinstance(cache_pos, int):
+                assert cache_pos == 0, "paged prefill starts at position 0"
+            tpos = jnp.arange(s, dtype=jnp.int32)
+            pg = _page_lookup(page_table,
+                              jnp.broadcast_to(tpos // page_size, (b, s)))
+            off = jnp.broadcast_to(jnp.mod(tpos, page_size), (b, s))
+            k_pool = cache["k"].at[pg, off].set(xk)   # (B,S,Hk,hd) token-major
+            v_pool = cache["v"].at[pg, off].set(xv)
+            new_cache = {"k": k_pool, "v": v_pool}
+            o = ops.attention(q, k, v, causal=causal, window=window)
+    elif cache is not None and kind != "cross":
         smax = cache["k"].shape[2]
         # ring buffer: window-bounded local cache (init_cache ring_local) —
         # write at pos % W; once full, its W entries ARE the window, so no
@@ -157,24 +209,44 @@ def attention_apply(cfg: ModelConfig, p, x, *, kind: str = "attn",
         # keys carry absolute RoPE)
         is_ring = (kind == "local" and cfg.sliding_window is not None
                    and smax <= cfg.sliding_window)
-        write_pos = (jnp.mod(cache_pos, smax) if is_ring else cache_pos)
-        k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, write_pos, 0))
-        v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, write_pos, 0))
-        new_cache = {"k": k_cache, "v": v_cache}
-        if is_ring:
-            length = jnp.minimum(
-                jnp.full((b,), cache_pos + s, jnp.int32), smax)
-            window = None
-        else:
-            length = jnp.full((b,), cache_pos + s, jnp.int32)
-        if s == 1:
+        if jnp.ndim(cache_pos) == 1:
+            # per-slot positions (continuous batching on a dense cache)
+            assert s == 1, "vector cache_pos is decode-only (S == 1)"
+            pos = jnp.asarray(cache_pos, jnp.int32)
+            write_pos = jnp.mod(pos, smax) if is_ring else pos
+            bidx = jnp.arange(b)
+            k_cache = cache["k"].at[bidx, :, write_pos].set(k[:, :, 0])
+            v_cache = cache["v"].at[bidx, :, write_pos].set(v[:, :, 0])
+            new_cache = {"k": k_cache, "v": v_cache}
+            if is_ring:
+                length = jnp.minimum(pos + 1, smax)
+                window = None
+            else:
+                length = pos + 1
             o = ops.decode_attention(q[:, :, 0], k_cache, v_cache,
                                      length=length, window=window)
             o = o[:, :, None]
-        else:  # chunked prefill into the cache
-            o = ops.attention(q, k_cache[:, :, : cache_pos + s],
-                              v_cache[:, :, : cache_pos + s],
-                              causal=causal, window=window)
+        else:
+            write_pos = (jnp.mod(cache_pos, smax) if is_ring else cache_pos)
+            k_cache = jax.lax.dynamic_update_slice(
+                cache["k"], k, (0, 0, write_pos, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                cache["v"], v, (0, 0, write_pos, 0))
+            new_cache = {"k": k_cache, "v": v_cache}
+            if is_ring:
+                length = jnp.minimum(
+                    jnp.full((b,), cache_pos + s, jnp.int32), smax)
+                window = None
+            else:
+                length = jnp.full((b,), cache_pos + s, jnp.int32)
+            if s == 1:
+                o = ops.decode_attention(q[:, :, 0], k_cache, v_cache,
+                                         length=length, window=window)
+                o = o[:, :, None]
+            else:  # chunked prefill into the cache
+                o = ops.attention(q, k_cache[:, :, : cache_pos + s],
+                                  v_cache[:, :, : cache_pos + s],
+                                  causal=causal, window=window)
     elif kind == "cross" and cache is not None:
         # cross-attention caches the encoder KV once
         k, v = cache["k"], cache["v"]
@@ -232,13 +304,18 @@ def init_mla(cfg: ModelConfig, key):
 
 
 def mla_apply(cfg: ModelConfig, p, x, *, positions=None, cache=None,
-              cache_pos=None):
+              cache_pos=None, page_table=None, page_size: int = 0):
     """Multi-head Latent Attention.  The KV cache stores only the compressed
     latent (kv_lora + rope_head_dim) per position — the paper-exact memory
     saving.  Train/prefill re-expands K/V through wkv_b; decode uses the
     **absorbed** formulation (scores and context computed directly against
     the latent — O(S·kv_lora) per head instead of O(S·2·head_dim·H) expansion),
-    the production deepseek-v2 serving path."""
+    the production deepseek-v2 serving path.
+
+    ``cache_pos`` may be a ``(B,)`` vector of per-slot positions (continuous
+    batching).  Paged mode (``page_table`` + ``page_size``): the cache is a
+    latent page pool (P, page_size, kvr+rd) shared by all slots — see
+    :func:`attention_apply`."""
     dt = compute_dtype(cfg)
     b, s, d = x.shape
     h, hd, rd, kvr = cfg.num_heads, cfg.head_dim, cfg.rope_head_dim, cfg.kv_lora_rank
@@ -262,9 +339,36 @@ def mla_apply(cfg: ModelConfig, p, x, *, positions=None, cache=None,
     scale = 1.0 / math.sqrt(hd + rd)
 
     new_cache = None
-    if cache is not None:
-        lat_cache = jax.lax.dynamic_update_slice(
-            cache["latent"], latent, (0, cache_pos, 0))
+    paged = page_table is not None
+    if cache is not None and paged:
+        assert page_size > 0, "paged cache needs a static page_size"
+        if s == 1:
+            pos = jnp.asarray(cache_pos, jnp.int32)
+            assert pos.ndim == 1, "paged decode takes per-slot (B,) positions"
+            pg = _page_lookup(page_table, (pos // page_size)[:, None])[:, 0]
+            pool = cache["latent"].at[pg, jnp.mod(pos, page_size)].set(
+                latent[:, 0])
+        else:
+            if isinstance(cache_pos, int):
+                assert cache_pos == 0, "paged prefill starts at position 0"
+            tpos = jnp.arange(s, dtype=jnp.int32)
+            pg = _page_lookup(page_table,
+                              jnp.broadcast_to(tpos // page_size, (b, s)))
+            pool = cache["latent"].at[
+                pg, jnp.broadcast_to(jnp.mod(tpos, page_size), (b, s))
+            ].set(latent)
+        new_cache = {"latent": pool}
+        maxp = page_table.shape[-1]
+        lat_cache = pool[page_table].reshape(b, maxp * page_size, -1)
+    elif cache is not None:
+        if jnp.ndim(cache_pos) == 1:
+            assert s == 1, "vector cache_pos is decode-only (S == 1)"
+            lat_cache = cache["latent"].at[
+                jnp.arange(b), jnp.asarray(cache_pos, jnp.int32)
+            ].set(latent[:, 0])
+        else:
+            lat_cache = jax.lax.dynamic_update_slice(
+                cache["latent"], latent, (0, cache_pos, 0))
         new_cache = {"latent": lat_cache}
     if cache is not None and s == 1:
         smax = lat_cache.shape[1]
@@ -279,7 +383,9 @@ def mla_apply(cfg: ModelConfig, p, x, *, positions=None, cache=None,
             + jnp.einsum("bhr,bsr->bhs", q_rope[:, 0].astype(jnp.float32),
                          kr_all.astype(jnp.float32))
         ) * scale
-        length = cache_pos + 1
+        length = jnp.asarray(cache_pos) + 1
+        if length.ndim == 1:
+            length = length[:, None, None]
         mask = jnp.arange(smax)[None, None, :] < length
         scores = jnp.where(mask, scores, -1e30)
         probs = jax.nn.softmax(scores, axis=-1)
@@ -505,9 +611,13 @@ def _causal_conv(w, b, x, state=None):
     return y.astype(x.dtype), new_state
 
 
-def mamba_apply(cfg: ModelConfig, p, x, *, cache=None):
+def mamba_apply(cfg: ModelConfig, p, x, *, cache=None, length=None):
     """x (B, S, d).  cache = {"conv": (B, c-1, di), "h": (B, di, N)} for
-    decode continuation.  Returns (out, new_cache)."""
+    decode continuation.  ``length`` ((B,) int32, optional) marks tokens at
+    positions >= length[i] as padding: their SSM update is forced to the
+    identity (dt = 0, x = 0) and the conv state is gathered at the true
+    boundary, so bucket-padded prefill leaves the exact state a
+    length[i]-token sequence would.  Returns (out, new_cache)."""
     dt_ = compute_dtype(cfg)
     b, s, d = x.shape
     di, n, dr = cfg.d_inner, cfg.ssm_state, cfg.ssm_dt_rank
@@ -518,13 +628,32 @@ def mamba_apply(cfg: ModelConfig, p, x, *, cache=None):
     xi = constrain(xi, ("batch", None, "ssm_inner"))
     z = constrain(z, ("batch", None, "ssm_inner"))
     conv_state = cache["conv"] if cache is not None else None
+    pad_mask = None
+    if length is not None:
+        pad_mask = (jnp.arange(s)[None, :] <
+                    jnp.asarray(length, jnp.int32)[:, None])[..., None]
+        # true conv window ends at the valid-length boundary, not at S
+        c = pw["conv_w"].shape[0]
+        if c > 1:
+            st = (conv_state if conv_state is not None
+                  else jnp.zeros((b, c - 1, di), xi.dtype))
+            xp = jnp.concatenate([st, xi], axis=1)       # (B, S+c-1, di)
+            idx = (jnp.asarray(length, jnp.int32)[:, None]
+                   + jnp.arange(c - 1)[None, :])          # window [len, len+c-2]
+            boundary_conv = jnp.take_along_axis(xp, idx[..., None], axis=1)
     xi, new_conv = _causal_conv(pw["conv_w"], pw["conv_b"], xi, conv_state)
+    if pad_mask is not None and pw["conv_w"].shape[0] > 1:
+        new_conv = boundary_conv
     xi = tpp.silu(xi)
 
     proj = ops.matmul(xi.reshape(b * s, di), pw["w_x"]).reshape(b, s, dr + 2 * n)
     dt_raw = ops.matmul(proj[..., :dr].reshape(b * s, dr), pw["w_dt"]).reshape(b, s, di)
     dt_v = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"]).astype(dt_)
     b_in, c_in = proj[..., dr:dr + n], proj[..., dr + n:]
+    if pad_mask is not None:
+        # dt = 0 makes the h recurrence an identity; x = 0 kills the input
+        dt_v = jnp.where(pad_mask, dt_v, 0)
+        xi = jnp.where(pad_mask, xi, 0)
 
     a = -jnp.exp(p["a_log"])  # (di, N) fp32
     dt_v = constrain(dt_v, ("batch", None, "ssm_inner"))

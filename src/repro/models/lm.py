@@ -27,7 +27,7 @@ from repro.models import blocks as B
 
 __all__ = [
     "LayerGroup", "derive_groups", "init_params", "forward_hidden",
-    "lm_loss", "init_cache", "decode_step", "prefill",
+    "lm_loss", "init_cache", "init_paged_cache", "decode_step", "prefill",
 ]
 
 
@@ -84,23 +84,31 @@ def init_block(cfg: ModelConfig, key, kind: str, moe: bool, cross: bool = False)
 
 def block_apply(cfg: ModelConfig, p, x, *, kind: str, moe: bool,
                 cache=None, cache_pos=0, positions=None, xattn_kv=None,
-                ep_axis: Optional[str] = None, dropout_seed=None):
+                ep_axis: Optional[str] = None, dropout_seed=None,
+                page_table=None, page_size: int = 0, seq_lengths=None):
     """Pre-norm residual block.  ``dropout_seed`` (train only, already
     folded per layer) enables the attention-output dropout at
-    ``cfg.dropout_rate``.  Returns (x, new_cache, aux_loss)."""
+    ``cfg.dropout_rate``.  ``cache_pos`` may be a per-slot ``(B,)`` vector
+    and ``page_table``/``page_size`` switch the attention caches to the
+    paged pool layout (see ``blocks.attention_apply``); mamba state stays
+    per-slot but honours ``seq_lengths`` ((B,) valid-token counts) so
+    bucket-padded prefill leaves exact SSM state.
+    Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     h = B._norm(cfg, p["norm1"], x)
     new_cache = dict(cache) if cache is not None else None
     res_folded = False
     if kind == "mamba":
         out, c = B.mamba_apply(cfg, p["mamba"], h,
-                               cache=cache.get("mamba") if cache else None)
+                               cache=cache.get("mamba") if cache else None,
+                               length=seq_lengths)
         if new_cache is not None:
             new_cache["mamba"] = c
     elif cfg.use_mla:
         out, c = B.mla_apply(cfg, p["mla"], h, positions=positions,
                              cache=cache.get("mla") if cache else None,
-                             cache_pos=cache_pos)
+                             cache_pos=cache_pos, page_table=page_table,
+                             page_size=page_size)
         if new_cache is not None:
             new_cache["mla"] = c
     else:
@@ -114,7 +122,9 @@ def block_apply(cfg: ModelConfig, p, x, *, kind: str, moe: bool,
                                    cache=cache.get("attn") if cache else None,
                                    cache_pos=cache_pos,
                                    residual=x if res_folded else None,
-                                   dropout_seed=dropout_seed)
+                                   dropout_seed=dropout_seed,
+                                   page_table=page_table,
+                                   page_size=page_size)
         if new_cache is not None:
             new_cache["attn"] = c
     x = out if res_folded else x + out
@@ -224,7 +234,8 @@ def init_params(cfg: ModelConfig, key):
 
 def _apply_groups(cfg, gparams_list, groups, x, *, caches=None, cache_pos=0,
                   positions=None, xattn_kv=None, ep_axis=None, remat=True,
-                  cross=False, unroll=False, dropout_seed=None):
+                  cross=False, unroll=False, dropout_seed=None,
+                  page_table=None, page_size=0, seq_lengths=None):
     """Scan each group over its repeat axis; thread caches and aux loss.
 
     ``unroll=True`` replaces the depth scan with a trace-time loop — used by
@@ -253,7 +264,8 @@ def _apply_groups(cfg, gparams_list, groups, x, *, caches=None, cache_pos=0,
                 fn = partial(block_apply, cfg, kind=kind, moe=moe,
                              cache_pos=cache_pos, positions=positions,
                              xattn_kv=xattn_kv, ep_axis=ep_axis,
-                             dropout_seed=seed_i)
+                             dropout_seed=seed_i, page_table=page_table,
+                             page_size=page_size, seq_lengths=seq_lengths)
                 if remat:
                     fn = jax.checkpoint(
                         fn, policy=jax.checkpoint_policies.nothing_saveable,
@@ -305,19 +317,29 @@ def _embed(cfg, params, tokens):
     return params["embed"].astype(dt)[tokens]
 
 
+def _positions_from(pos0, b, s):
+    if jnp.ndim(pos0) == 1:          # per-slot (B,) positions (paged decode)
+        return jnp.asarray(pos0, jnp.int32)[:, None] + jnp.arange(s)[None, :]
+    return pos0 + jnp.broadcast_to(jnp.arange(s), (b, s))
+
+
 def forward_hidden(cfg: ModelConfig, params, batch, *, caches=None,
                    cache_pos=0, ep_axis=None, remat=True, unroll=False,
-                   dropout_seed=None):
+                   dropout_seed=None, page_table=None, page_size=0,
+                   seq_lengths=None):
     """→ (hidden (B, S, d) fp-compute, new_caches, aux).  ``batch`` keys:
     tokens (B,S) [+ patches (B,P,d) for vlm; frames (B,F,d) for encdec].
     ``dropout_seed`` (train only) enables ``cfg.dropout_rate`` dropout in
-    the decoder blocks — per-layer streams are folded in downstream."""
+    the decoder blocks — per-layer streams are folded in downstream.
+    ``cache_pos`` may be a per-slot (B,) vector (continuous batching) and
+    ``page_table``/``page_size`` switch attention caches to the paged pool
+    layout (see ``init_paged_cache``)."""
     tokens = batch["tokens"]
     b, s = tokens.shape
     dt = B.compute_dtype(cfg)
     x = _embed(cfg, params, tokens)
     pos0 = cache_pos
-    positions = pos0 + jnp.broadcast_to(jnp.arange(s), (b, s))
+    positions = _positions_from(pos0, b, s)
 
     xattn_kv = None
     if cfg.is_encdec:
@@ -331,8 +353,7 @@ def forward_hidden(cfg: ModelConfig, params, batch, *, caches=None,
         patches = batch["patches"].astype(dt)
         pp = patches.reshape(-1, cfg.d_model) @ params["patch_proj"].astype(dt)
         x = jnp.concatenate([pp.reshape(patches.shape), x], axis=1)
-        s_tot = x.shape[1]
-        positions = pos0 + jnp.broadcast_to(jnp.arange(s_tot), (b, s_tot))
+        positions = _positions_from(pos0, b, x.shape[1])
 
     x = constrain(x, ("batch", "seq", "embed"))
     groups = derive_groups(cfg)
@@ -341,7 +362,8 @@ def forward_hidden(cfg: ModelConfig, params, batch, *, caches=None,
         cfg, params["groups"], groups, x, caches=dec_caches,
         cache_pos=cache_pos, positions=positions, xattn_kv=xattn_kv,
         ep_axis=ep_axis, remat=remat, unroll=unroll,
-        dropout_seed=dropout_seed)
+        dropout_seed=dropout_seed, page_table=page_table,
+        page_size=page_size, seq_lengths=seq_lengths)
     x = B._norm(cfg, params["final_norm"], x)
     new_caches = None
     if caches is not None:
@@ -477,26 +499,86 @@ def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int,
     return {"dec": dec, "enc_out": None}
 
 
+def init_paged_cache(cfg: ModelConfig, num_slots: int, num_pages: int,
+                     page_size: int):
+    """Paged decode caches: attention K/V live in shared page *pools* indexed
+    by a per-slot page table instead of per-slot dense buffers.  Pools carry
+    ``num_pages + 1`` rows — the last row is the *trash page*: page-table
+    entries of empty/retired slots point at it, so their writes land harmlessly
+    outside every live request's pages (reads are length-masked anyway).
+
+    Mamba/conv state is O(1) per slot, so it stays a dense per-slot buffer
+    exactly like ``init_cache`` (the engine slices/merges it on slot swap)."""
+    if cfg.is_encdec:
+        raise NotImplementedError(
+            "paged serving does not support encoder-decoder models")
+    dt = B.compute_dtype(cfg)
+    hk, hd = cfg.num_kv_heads, cfg.head_dim
+    rows = num_pages + 1  # + trash page
+
+    def block_cache(kind, moe):
+        c = {}
+        if kind == "mamba":
+            c["mamba"] = {
+                "conv": jnp.zeros((num_slots, cfg.ssm_conv - 1, cfg.d_inner), dt),
+                "h": jnp.zeros((num_slots, cfg.d_inner, cfg.ssm_state),
+                               jnp.float32),
+            }
+        elif cfg.use_mla:
+            c["mla"] = {"latent": jnp.zeros(
+                (rows, page_size, cfg.kv_lora_rank + cfg.rope_head_dim), dt)}
+        else:
+            # token-major (rows, page_size, hk, hd): gathers land directly in
+            # the paged_decode_attention einsum layout (no transpose copy)
+            c["attn"] = {
+                "k": jnp.zeros((rows, page_size, hk, hd), dt),
+                "v": jnp.zeros((rows, page_size, hk, hd), dt),
+            }
+        return c
+
+    groups = derive_groups(cfg)
+    dec = []
+    for g in groups:
+        percopy = [block_cache(kind, moe) for kind, moe in g.kinds]
+        dec.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (g.repeat,) + a.shape).copy(), percopy))
+    return {"dec": dec, "enc_out": None}
+
+
 def prefill(cfg: ModelConfig, params, caches, batch, *, ep_axis=None,
-            unroll=False):
+            unroll=False, page_table=None, page_size=0, logit_index=None):
     """Process the prompt (writes caches at offset 0); returns
-    (last-token logits (B,V), caches)."""
+    (last-token logits (B,V), caches).  ``logit_index`` ((B,) int32) reads
+    logits at a per-row position instead of ``-1`` — used by the engine when
+    prompts are right-padded to a shape bucket (it doubles as the mamba
+    valid-length mask, so SSM state is exact despite padding)."""
+    seq_lengths = None
+    if logit_index is not None:
+        seq_lengths = jnp.asarray(logit_index, jnp.int32) + 1
     h, caches, _ = forward_hidden(cfg, params, batch, caches=caches,
                                   cache_pos=0, ep_axis=ep_axis, remat=False,
-                                  unroll=unroll)
+                                  unroll=unroll, page_table=page_table,
+                                  page_size=page_size,
+                                  seq_lengths=seq_lengths)
+    if logit_index is None:
+        h_last = h[:, -1]
+    else:
+        h_last = h[jnp.arange(h.shape[0]), jnp.asarray(logit_index, jnp.int32)]
     w = _unembed_weight(cfg, params)
-    logits = h[:, -1].astype(jnp.float32) @ w.astype(jnp.float32)
+    logits = h_last.astype(jnp.float32) @ w.astype(jnp.float32)
     return _mask_pad_logits(cfg, logits), caches
 
 
 def decode_step(cfg: ModelConfig, params, caches, tokens, pos, *,
-                ep_axis=None, unroll=False):
-    """One decode step: tokens (B,) int32, ``pos`` scalar int32 position.
+                ep_axis=None, unroll=False, page_table=None, page_size=0):
+    """One decode step: tokens (B,) int32, ``pos`` scalar int32 position —
+    or per-slot (B,) positions for continuous batching.
     Returns (logits (B,V), new caches)."""
     batch = {"tokens": tokens[:, None]}
     h, caches, _ = forward_hidden(cfg, params, batch, caches=caches,
                                   cache_pos=pos, ep_axis=ep_axis, remat=False,
-                                  unroll=unroll)
+                                  unroll=unroll, page_table=page_table,
+                                  page_size=page_size)
     w = _unembed_weight(cfg, params)
     logits = h[:, -1].astype(jnp.float32) @ w.astype(jnp.float32)
     logits = constrain(logits, ("batch", "vocab"))

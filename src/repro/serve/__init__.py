@@ -1,2 +1,8 @@
-from repro.serve.decode import ServeConfig, generate, make_serve_step
-__all__ = ["ServeConfig", "generate", "make_serve_step"]
+from repro.serve.decode import (ServeConfig, generate, generate_loop,
+                                make_serve_step)
+from repro.serve.engine import Engine, EngineConfig
+from repro.serve.kvcache import PagedKvCache
+from repro.serve.scheduler import Request, Scheduler
+
+__all__ = ["ServeConfig", "generate", "generate_loop", "make_serve_step",
+           "Engine", "EngineConfig", "PagedKvCache", "Request", "Scheduler"]

@@ -1,15 +1,16 @@
-"""Batched-request serving: prefill + jitted KV-cache decode loop.
+"""Batched-request serving: prefill + jitted KV-cache decode.
 
 ``serve_step`` (one token for the whole batch against the caches) is the
 function the decode/long-context dry-run shapes lower — NOT ``train_step``
-(per the assignment).  ``generate`` drives it greedily for the examples and
-tests; per-request lengths are handled by the decode kernels' length masking
-(ragged batches without re-padding).
+(per the assignment).  ``generate`` is a thin compatibility wrapper over
+the continuous-batching :class:`repro.serve.engine.Engine`; the pre-engine
+per-token Python loop survives as :func:`generate_loop` (the benchmark
+baseline, and the fallback for configs the engine does not cover).
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import functools
 from typing import Optional
 
 import jax
@@ -18,7 +19,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import lm
 
-__all__ = ["ServeConfig", "make_serve_step", "generate"]
+__all__ = ["ServeConfig", "make_serve_step", "generate", "generate_loop"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,35 +28,131 @@ class ServeConfig:
     ep_axis: Optional[str] = "model"
     greedy: bool = True
     temperature: float = 1.0
+    top_k: int = 0               # 0 → off
+    top_p: float = 1.0           # >= 1 → off
+    seed: int = 0
     unroll_layers: bool = False
 
 
 def make_serve_step(cfg: ModelConfig, scfg: ServeConfig):
-    """→ step(params, caches, tokens (B,), pos ()) → (next_tokens, caches)."""
+    """→ step(params, caches, tokens (B,), pos ()) → (next_tokens, caches).
 
-    def serve_step(params, caches, tokens, pos):
+    With ``scfg.greedy`` the step argmaxes (and keeps the exact 4-argument
+    signature the sharded dry-runs lower).  Otherwise it draws through the
+    counter-based sampler at ``scfg.temperature``/``top_k``/``top_p``,
+    taking two extra arguments: ``seed`` (() uint32) and ``uids`` ((B,)
+    uint32 per-request sampler keys)."""
+
+    def greedy_step(params, caches, tokens, pos):
         logits, caches = lm.decode_step(cfg, params, caches, tokens, pos,
                                         ep_axis=scfg.ep_axis,
                                         unroll=scfg.unroll_layers)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return nxt, caches
 
-    return serve_step
+    if scfg.greedy:
+        return greedy_step
+
+    from repro.serve.sampling import sample_tokens
+
+    def sampled_step(params, caches, tokens, pos, seed, uids):
+        logits, caches = lm.decode_step(cfg, params, caches, tokens, pos,
+                                        ep_axis=scfg.ep_axis,
+                                        unroll=scfg.unroll_layers)
+        b = tokens.shape[0]
+        nxt = sample_tokens(
+            logits, uids=uids, positions=jnp.broadcast_to(pos + 1, (b,)),
+            seed=seed,
+            temperature=jnp.full((b,), scfg.temperature, jnp.float32),
+            top_k=jnp.full((b,), scfg.top_k, jnp.int32),
+            top_p=jnp.full((b,), scfg.top_p, jnp.float32))
+        return nxt, caches
+
+    return sampled_step
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_step(cfg: ModelConfig, scfg: ServeConfig):
+    return jax.jit(make_serve_step(cfg, scfg))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_prefill(cfg: ModelConfig, scfg: ServeConfig):
+    def fn(params, caches, tokens):
+        return lm.prefill(cfg, params, caches, {"tokens": tokens},
+                          ep_axis=scfg.ep_axis, unroll=scfg.unroll_layers)
+    return jax.jit(fn)
+
+
+def _validate(scfg: ServeConfig, p: int, num_new: int) -> None:
+    if num_new < 1:
+        raise ValueError(f"num_new must be >= 1, got {num_new}")
+    if p + num_new > scfg.max_seq:
+        raise ValueError(
+            f"prompt ({p}) + num_new ({num_new}) = {p + num_new} exceeds "
+            f"ServeConfig.max_seq ({scfg.max_seq}); raise max_seq or "
+            f"shorten the request")
 
 
 def generate(cfg: ModelConfig, params, prompts, num_new: int, *,
              scfg: ServeConfig = ServeConfig(), jit: bool = True):
-    """prompts (B, P) int32 → (B, P + num_new)."""
+    """prompts (B, P) int32 → (B, P + num_new).
+
+    Runs on the continuous-batching engine (paged KV cache, fused
+    while-loop decode); encoder-decoder configs and ``jit=False`` fall
+    back to :func:`generate_loop`."""
     b, p = prompts.shape
-    caches = lm.init_cache(cfg, b, min(scfg.max_seq, p + num_new))
-    logits, caches = lm.prefill(cfg, params, caches, {"tokens": prompts},
-                                ep_axis=scfg.ep_axis)
-    step = make_serve_step(cfg, scfg)
+    _validate(scfg, p, num_new)
+    if cfg.is_encdec or not jit:
+        return generate_loop(cfg, params, prompts, num_new, scfg=scfg,
+                             jit=jit)
+
+    from repro.serve.engine import Engine, EngineConfig
+    ecfg = EngineConfig(
+        num_slots=b, page_size=16, max_seq=p + num_new,
+        segment_len=min(8, num_new), eos_token=None, seed=scfg.seed,
+        ep_axis=scfg.ep_axis, unroll_layers=scfg.unroll_layers)
+    eng = Engine(cfg, params, ecfg)
+    prompts_np = jax.device_get(prompts)
+    temperature = 0.0 if scfg.greedy else scfg.temperature
+    uids = [eng.submit(prompts_np[i], num_new, temperature=temperature,
+                       top_k=scfg.top_k, top_p=scfg.top_p)
+            for i in range(b)]
+    done = eng.run()
+    return jnp.asarray([done[uid] for uid in uids], jnp.int32)
+
+
+def generate_loop(cfg: ModelConfig, params, prompts, num_new: int, *,
+                  scfg: ServeConfig = ServeConfig(), jit: bool = True,
+                  seed: Optional[int] = None):
+    """The pre-engine dense-cache loop: batch prefill, then one jitted
+    (or eager) step per token.  Kept as the benchmark baseline."""
+    b, p = prompts.shape
+    _validate(scfg, p, num_new)
+    caches = lm.init_cache(cfg, b, p + num_new)
     if jit:
-        step = jax.jit(step)
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        logits, caches = _jitted_prefill(cfg, scfg)(params, caches, prompts)
+        step = _jitted_step(cfg, scfg)
+    else:
+        logits, caches = lm.prefill(cfg, params, caches, {"tokens": prompts},
+                                    ep_axis=scfg.ep_axis)
+        step = make_serve_step(cfg, scfg)
+    if scfg.greedy:
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        extra = ()
+    else:
+        from repro.serve.sampling import sample_tokens
+        seed_ = jnp.uint32(scfg.seed if seed is None else seed)
+        uids = jnp.arange(b, dtype=jnp.uint32)
+        tok = sample_tokens(
+            logits, uids=uids, positions=jnp.full((b,), p, jnp.int32),
+            seed=seed_,
+            temperature=jnp.full((b,), scfg.temperature, jnp.float32),
+            top_k=jnp.full((b,), scfg.top_k, jnp.int32),
+            top_p=jnp.full((b,), scfg.top_p, jnp.float32))
+        extra = (seed_, uids)
     out = [tok]
     for t in range(num_new - 1):
-        tok, caches = step(params, caches, tok, jnp.int32(p + t))
+        tok, caches = step(params, caches, tok, jnp.int32(p + t), *extra)
         out.append(tok)
     return jnp.concatenate([prompts, jnp.stack(out, axis=1)], axis=1)

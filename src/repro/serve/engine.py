@@ -1,0 +1,370 @@
+"""The serving engine façade: ``submit`` / ``step`` / ``collect``.
+
+One ``Engine`` owns the device state (params stay caller-owned; paged KV
+pools and per-slot SSM state live here) and the host bookkeeping
+(scheduler, page allocator, per-request output buffers, latency metrics).
+Each ``step()`` is one continuous-batching iteration:
+
+1. **admit** — waiting requests move into free slots (FIFO, all-or-nothing
+   page reservation), each running a jitted batch-1 **prefill** at a
+   power-of-two shape bucket (per-row ``logit_index`` reads the true last
+   token, so padding never changes results) which also samples the
+   request's first token;
+2. **decode** — all running slots advance together through one jitted
+   ``lax.while_loop`` segment of up to ``segment_len`` tokens, sampling via
+   the counter-based sampler (`serve.sampling`); the loop exits early when
+   a request finishes so its slot can be refilled next step;
+3. **retire** — finished requests release pages + slot and their outputs
+   become collectable.
+
+Decode runs every slot unconditionally — empty/retired slots write into
+the trash page (see `serve.kvcache`) and their sampled tokens are
+discarded, so the jitted segment never recompiles as the batch churns.
+Cache buffers are donated to the segment on accelerator backends.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import time
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.serve.kvcache import PagedKvCache
+from repro.serve.sampling import sample_tokens
+from repro.serve.scheduler import Request, Scheduler
+
+__all__ = ["EngineConfig", "Engine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    num_slots: int = 8
+    page_size: int = 16
+    max_seq: int = 2048            # per-request prompt + generation cap
+    num_pages: Optional[int] = None  # default: worst case, every slot full
+    segment_len: int = 8           # decode tokens per jitted while_loop
+    min_bucket: int = 8            # smallest prefill shape bucket
+    stop_on_finish: bool = True    # early-exit segments to refill slots
+    eos_token: Optional[int] = None
+    seed: int = 0
+    ep_axis: Optional[str] = None
+    unroll_layers: bool = False
+
+    @property
+    def max_pages_per_slot(self) -> int:
+        return max(1, math.ceil(self.max_seq / self.page_size))
+
+    @property
+    def slot_capacity(self) -> int:
+        return self.max_pages_per_slot * self.page_size
+
+
+class DecodeState(NamedTuple):
+    """Per-slot device state threaded through the decode while_loop."""
+    tok: jax.Array      # (B,) i32  last sampled token (next model input)
+    pos: jax.Array      # (B,) i32  cache position that token occupies
+    gen: jax.Array      # (B,) i32  tokens generated so far
+    limit: jax.Array    # (B,) i32  max_new per request
+    active: jax.Array   # (B,) bool
+    uids: jax.Array     # (B,) u32  sampler counter key
+    temp: jax.Array     # (B,) f32
+    top_k: jax.Array    # (B,) i32
+    top_p: jax.Array    # (B,) f32
+
+
+def _is_mamba_leaf(path) -> bool:
+    return any(isinstance(k, jax.tree_util.DictKey) and k.key == "mamba"
+               for k in path)
+
+
+def _fresh_slot_state(caches):
+    """Mamba leaves sliced to a zeroed batch-1 row (a new request starts
+    from zero SSM state); pool leaves pass through shared."""
+    def f(path, a):
+        if _is_mamba_leaf(path):
+            return jnp.zeros(a.shape[:1] + (1,) + a.shape[2:], a.dtype)
+        return a
+    return jax.tree_util.tree_map_with_path(f, caches)
+
+
+def _merge_slot_state(caches, new, slot):
+    """Write batch-1 mamba rows back into ``slot``; take updated pools."""
+    def f(path, old, upd):
+        if _is_mamba_leaf(path):
+            return jax.lax.dynamic_update_slice_in_dim(old, upd, slot, axis=1)
+        return upd
+    return jax.tree_util.tree_map_with_path(f, caches, new)
+
+
+def _next_bucket(n: int, lo: int, cap: int) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return min(b, cap)
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig):
+        if cfg.is_encdec:
+            raise NotImplementedError(
+                "the serving engine does not support encoder-decoder models")
+        self.cfg, self.params, self.ecfg = cfg, params, ecfg
+        num_pages = (ecfg.num_pages if ecfg.num_pages is not None
+                     else ecfg.num_slots * ecfg.max_pages_per_slot)
+        self.kv = PagedKvCache(ecfg.num_slots, num_pages, ecfg.page_size,
+                               ecfg.max_pages_per_slot)
+        self.sched = Scheduler(ecfg.num_slots, self.kv)
+        self.caches = lm.init_paged_cache(cfg, ecfg.num_slots, num_pages,
+                                          ecfg.page_size)
+        self._seed = jnp.uint32(ecfg.seed)
+
+        b = ecfg.num_slots
+        # decode state lives on device between segments; the host keeps only
+        # the bookkeeping it needs to harvest tokens and retire slots
+        self._state = DecodeState(
+            tok=jnp.zeros(b, jnp.int32), pos=jnp.zeros(b, jnp.int32),
+            gen=jnp.zeros(b, jnp.int32), limit=jnp.ones(b, jnp.int32),
+            active=jnp.zeros(b, bool), uids=jnp.zeros(b, jnp.uint32),
+            temp=jnp.zeros(b, jnp.float32), top_k=jnp.zeros(b, jnp.int32),
+            top_p=jnp.ones(b, jnp.float32))
+        self._gen = np.zeros(b, np.int32)
+        self._done = np.zeros(b, bool)
+        self._uids = np.zeros(b, np.uint32)
+        self._table_dev = jnp.asarray(self.kv.table())
+        self._table_dirty = False
+
+        self._out: dict[int, list[int]] = {}     # uid → generated tokens
+        self._prompts: dict[int, list[int]] = {}
+        self._finished: set[int] = set()
+        self.metrics: dict[int, dict] = {}       # uid → latency record
+        self._next_uid = 0
+
+        self._prefill, self._segment = _jitted_fns(cfg, ecfg)
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(self, prompt, max_new: int, *, temperature: float = 0.0,
+               top_k: int = 0, top_p: float = 1.0,
+               uid: Optional[int] = None) -> int:
+        """Queue one request; returns its uid (the sampler counter key)."""
+        prompt = [int(t) for t in np.asarray(prompt).reshape(-1)]
+        if uid is None:
+            uid = self._next_uid
+        self._next_uid = max(self._next_uid, uid + 1)
+        req = Request(uid=uid, prompt=prompt, max_new=max_new,
+                      temperature=temperature, top_k=top_k, top_p=top_p)
+        if req.max_tokens > self.ecfg.max_seq:
+            raise ValueError(
+                f"request {uid}: prompt ({len(prompt)}) + max_new "
+                f"({max_new}) = {req.max_tokens} exceeds max_seq "
+                f"({self.ecfg.max_seq})")
+        self.sched.submit(req)
+        self._prompts[uid] = prompt
+        self._out[uid] = []
+        self.metrics[uid] = {"submitted": time.perf_counter(),
+                             "first_token": None, "finished": None,
+                             "token_times": []}
+        return uid
+
+    @property
+    def idle(self) -> bool:
+        return self.sched.idle
+
+    def step(self) -> list[int]:
+        """One continuous-batching iteration.  Returns uids finished."""
+        if self.sched.idle:
+            return []
+        admitted = self.sched.admit()
+        if not admitted and not self.sched.running:
+            # nothing running to free pages for the blocked head-of-line
+            req = self.sched.waiting[0]
+            raise RuntimeError(
+                f"request {req.uid} ({req.max_tokens} tokens) can never be "
+                f"admitted: pool has {self.kv.num_pages} pages of "
+                f"{self.kv.page_size}")
+        for slot, req in admitted:
+            self._admit(slot, req)
+        finished = self._retire_done()
+        if any(not self._done[s] for s in self.sched.running):
+            self._run_segment()
+            finished += self._retire_done()
+        return finished
+
+    def collect(self, uid: int) -> list[int]:
+        """Full token list (prompt + generated) of a finished request."""
+        if uid not in self._finished:
+            raise KeyError(f"request {uid} is not finished")
+        return self._prompts[uid] + self._out[uid]
+
+    def run(self, max_steps: int = 100_000) -> dict[int, list[int]]:
+        """Drive ``step`` until idle; returns {uid: tokens} for everything
+        finished along the way."""
+        done: list[int] = []
+        for _ in range(max_steps):
+            if self.idle:
+                break
+            done += self.step()
+        else:
+            raise RuntimeError("engine did not drain within max_steps")
+        return {uid: self.collect(uid) for uid in done}
+
+    # -- internals ----------------------------------------------------------
+
+    def _admit(self, slot: int, req: Request) -> None:
+        plen = len(req.prompt)
+        bucket = _next_bucket(plen, self.ecfg.min_bucket,
+                              self.ecfg.slot_capacity)
+        tokens = np.zeros((1, bucket), np.int32)
+        tokens[0, :plen] = req.prompt
+        table = self.kv.table()
+        tok, self.caches, self._state = self._prefill(
+            self.params, self.caches, self._state, jnp.asarray(tokens),
+            jnp.asarray(table[slot:slot + 1]), jnp.int32(plen),
+            jnp.int32(slot), self._seed,
+            jnp.uint32(req.uid), jnp.float32(req.temperature),
+            jnp.int32(req.top_k), jnp.float32(req.top_p),
+            jnp.int32(req.max_new))
+        self._table_dirty = True
+        first = int(tok)
+        now = time.perf_counter()
+        self._out[req.uid].append(first)
+        m = self.metrics[req.uid]
+        m["first_token"] = now
+        m["token_times"].append(now)
+
+        self._gen[slot] = 1
+        self._uids[slot] = req.uid
+        eos_hit = (self.ecfg.eos_token is not None
+                   and first == self.ecfg.eos_token)
+        self._done[slot] = bool(req.max_new <= 1 or eos_hit)
+
+    def _run_segment(self) -> None:
+        running = np.zeros(self.ecfg.num_slots, bool)
+        for s in self.sched.running:
+            running[s] = True
+        if self._table_dirty:
+            self._table_dev = jnp.asarray(self.kv.table())
+            self._table_dirty = False
+        refill = jnp.bool_(self.ecfg.stop_on_finish
+                           and self.sched.num_waiting > 0)
+        self.caches, self._state, out = self._segment(
+            self.params, self.caches, self._state, self._table_dev,
+            self._seed, refill)
+        # ONE host sync per segment: everything the host bookkeeping needs
+        gen_after, still_active, out = jax.device_get(
+            (self._state.gen, self._state.active, out))
+        now = time.perf_counter()
+        for slot in self.sched.running:
+            n_new = int(gen_after[slot] - self._gen[slot])
+            if n_new:
+                uid = int(self._uids[slot])
+                toks = [int(t) for t in out[slot, :n_new]]
+                self._out[uid].extend(toks)
+                self.metrics[uid]["token_times"].extend([now] * n_new)
+        self._gen = gen_after.copy()
+        self._done |= running & ~still_active
+
+    def _retire_done(self) -> list[int]:
+        finished = []
+        for slot in list(self.sched.running):
+            if self._done[slot]:
+                req = self.sched.retire(slot)
+                self._done[slot] = False
+                self._finished.add(req.uid)
+                self.metrics[req.uid]["finished"] = time.perf_counter()
+                finished.append(req.uid)
+        return finished
+
+
+# -- jitted bodies ----------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _jitted_fns(cfg: ModelConfig, ecfg: EngineConfig):
+    """One (prefill, segment) jit pair per (model, engine) config — shared
+    across Engine instances so a fresh engine reuses compiled code."""
+    # donation saves a cache copy per call on accelerators; XLA:CPU warns
+    # and ignores it, so only request it off-CPU
+    donate = () if jax.default_backend() == "cpu" else (1, 2)
+    segment = jax.jit(partial(_decode_segment, cfg, ecfg),
+                      donate_argnums=donate)
+    prefill = jax.jit(partial(_prefill_one, cfg, ecfg),
+                      donate_argnums=donate)
+    return prefill, segment
+
+def _prefill_one(cfg, ecfg, params, caches, state, tokens, table_row, plen,
+                 slot, seed, uid, temp, top_k, top_p, limit):
+    """Batch-1 prefill of one admitted request + its first sampled token,
+    fused with the slot's DecodeState update (the state stays device-resident
+    between engine steps; only the first token crosses back to the host)."""
+    local = _fresh_slot_state(caches)
+    logit_index = plen[None] - 1 if jnp.ndim(plen) == 0 else plen - 1
+    logits, new_local = lm.prefill(
+        cfg, params, local, {"tokens": tokens}, ep_axis=ecfg.ep_axis,
+        unroll=ecfg.unroll_layers, page_table=table_row,
+        page_size=ecfg.page_size, logit_index=logit_index)
+    tok = sample_tokens(logits, uids=uid[None], positions=logit_index + 1,
+                        seed=seed, temperature=temp[None],
+                        top_k=top_k[None], top_p=top_p[None])[0]
+    eos = (tok == ecfg.eos_token) if ecfg.eos_token is not None \
+        else jnp.bool_(False)
+    state = DecodeState(
+        tok=state.tok.at[slot].set(tok),
+        pos=state.pos.at[slot].set(plen),
+        gen=state.gen.at[slot].set(1),
+        limit=state.limit.at[slot].set(limit),
+        active=state.active.at[slot].set((limit > 1) & ~eos),
+        uids=state.uids.at[slot].set(uid),
+        temp=state.temp.at[slot].set(temp),
+        top_k=state.top_k.at[slot].set(top_k),
+        top_p=state.top_p.at[slot].set(top_p))
+    return tok, _merge_slot_state(caches, new_local, slot), state
+
+
+def _decode_segment(cfg, ecfg, params, caches, state, table, seed, refill):
+    """Up to ``segment_len`` decode steps for every slot in one
+    ``lax.while_loop``; finished slots go inactive (their writes keep
+    landing in their own pages / the trash page and are discarded).
+    ``refill`` (traced bool — requests are waiting) exits the loop as soon
+    as any slot finishes, so the freed slot refills next engine step
+    instead of idling out the segment."""
+    seg = ecfg.segment_len
+    b = state.tok.shape[0]
+    out0 = jnp.full((b, seg), -1, jnp.int32)
+
+    def cond(c):
+        t, _, st, _, finished_any = c
+        return (t < seg) & jnp.any(st.active) & ~(refill & finished_any)
+
+    def body(c):
+        t, caches, st, out, finished_any = c
+        tok_in = jnp.where(st.active, st.tok, 0)
+        logits, caches = lm.decode_step(
+            cfg, params, caches, tok_in, st.pos, ep_axis=ecfg.ep_axis,
+            unroll=ecfg.unroll_layers, page_table=table,
+            page_size=ecfg.page_size)
+        nxt = sample_tokens(logits, uids=st.uids, positions=st.pos + 1,
+                            seed=seed, temperature=st.temp, top_k=st.top_k,
+                            top_p=st.top_p)
+        rec = jnp.where(st.active, nxt, -1)
+        out = jax.lax.dynamic_update_slice(out, rec[:, None], (0, t))
+        gen = st.gen + st.active.astype(jnp.int32)
+        eos = (nxt == ecfg.eos_token) if ecfg.eos_token is not None \
+            else jnp.zeros_like(st.active)
+        done = st.active & ((gen >= st.limit) | eos)
+        st = st._replace(
+            tok=jnp.where(st.active, nxt, st.tok),
+            pos=st.pos + st.active.astype(jnp.int32),
+            gen=gen, active=st.active & ~done)
+        return t + 1, caches, st, out, finished_any | jnp.any(done)
+
+    _, caches, st, out, _ = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), caches, state, out0, jnp.bool_(False)))
+    return caches, st, out

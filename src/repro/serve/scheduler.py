@@ -1,0 +1,113 @@
+"""Continuous-batching scheduler: FIFO admission into decode slots.
+
+The engine runs a fixed number of decode *slots* (the jitted batch
+dimension).  Requests queue in arrival order; whenever slots free up —
+at startup, or when a running request finishes mid-flight — the scheduler
+admits waiting requests into the freed slots, so the batch is continuously
+refilled instead of draining to a convoy of stragglers.
+
+Admission is strict FIFO with head-of-line blocking: if the oldest waiting
+request does not fit (no free slot, or the page pool cannot cover its
+worst-case ``prompt + max_new`` reservation), nothing behind it is admitted
+either.  Combined with all-or-nothing page reservation (`kvcache`), this
+gives two easy invariants: no starvation (every request is eventually the
+head), and no preemption (an admitted request always runs to completion).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+from repro.serve.kvcache import PagedKvCache
+
+__all__ = ["Request", "Scheduler"]
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request (host-side).  ``uid`` keys the sampler's
+    counter stream, so it must be unique per request within a seed."""
+    uid: int
+    prompt: list[int]
+    max_new: int
+    temperature: float = 0.0     # <= 0 → greedy
+    top_k: int = 0               # 0 → off
+    top_p: float = 1.0           # >= 1 → off
+
+    def __post_init__(self):
+        if len(self.prompt) < 1:
+            raise ValueError("empty prompt")
+        if self.max_new < 1:
+            raise ValueError("max_new must be >= 1")
+
+    @property
+    def max_tokens(self) -> int:
+        return len(self.prompt) + self.max_new
+
+
+class Scheduler:
+    """Admission queue + slot occupancy tracking over a ``PagedKvCache``."""
+
+    def __init__(self, num_slots: int, kv: PagedKvCache):
+        self.num_slots = num_slots
+        self.kv = kv
+        self.waiting: deque[Request] = deque()
+        self.running: dict[int, Request] = {}   # slot → request
+
+    # -- queue --------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        if req.max_tokens > self.kv.max_pages_per_slot * self.kv.page_size:
+            raise ValueError(
+                f"request {req.uid} needs {req.max_tokens} tokens > slot "
+                f"capacity {self.kv.max_pages_per_slot * self.kv.page_size}")
+        self.waiting.append(req)
+
+    @property
+    def num_waiting(self) -> int:
+        return len(self.waiting)
+
+    @property
+    def free_slots(self) -> list[int]:
+        return [s for s in range(self.num_slots) if s not in self.running]
+
+    @property
+    def idle(self) -> bool:
+        return not self.waiting and not self.running
+
+    # -- admission / retirement --------------------------------------------
+
+    def admit(self) -> list[tuple[int, Request]]:
+        """Admit waiting requests (FIFO, head-of-line blocking) into free
+        slots, reserving their full page budget.  Returns the
+        (slot, request) pairs admitted this call."""
+        admitted = []
+        free = self.free_slots
+        while self.waiting and free:
+            req = self.waiting[0]
+            if not self.kv.can_fit(req.max_tokens):
+                break                     # head blocks the line
+            slot = free.pop(0)
+            self.kv.allocate(slot, req.max_tokens)
+            self.running[slot] = req
+            self.waiting.popleft()
+            admitted.append((slot, req))
+        return admitted
+
+    def retire(self, slot: int) -> Request:
+        """Free a finished request's slot and pages."""
+        req = self.running.pop(slot)
+        self.kv.release(slot)
+        return req
+
+    def check_invariants(self) -> None:
+        self.kv.check_invariants()
+        assert len(self.running) <= self.num_slots
+        for slot in self.running:
+            assert 0 <= slot < self.num_slots
+            assert self.kv.slot_pages(slot), \
+                f"running slot {slot} holds no pages"
+        for slot in self.free_slots:
+            assert not self.kv.slot_pages(slot), \
+                f"free slot {slot} still holds pages"

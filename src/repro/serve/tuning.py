@@ -1,0 +1,77 @@
+"""Prefill-vs-decode schedule split: tune each serving phase as its own
+shape.
+
+Serving runs the same fused layer graphs at two *opposite* operating
+points: prefill streams a whole prompt bucket through each layer
+(M = bucket tokens — compute-bound, big-tile schedules win), while decode
+pushes one token per slot (M = num_slots — bandwidth-bound, the winning
+schedules parallelize over N and keep M-blocking minimal).  A schedule
+tuned for one regime is routinely bad for the other, so the engine
+registers **both** shapes with :func:`repro.fusion.cost.autotune_graph`;
+the tune cache keys on ``(graph signature, m, k, n)``, so the two phases'
+ranked schedules coexist and any later compile at either shape finds its
+own winner.
+
+``tune_serving_shapes`` warms the cache for a model config's fused graphs
+(QKV projection, attention output, MLP) at the engine's decode shape and
+each prefill bucket, and returns the per-phase winners for inspection /
+the benchmark report.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from repro.configs.base import ModelConfig
+from repro.fusion.cost import autotune_graph
+from repro.fusion.library import (fused_attn_out_graph, fused_gated_mlp_graph,
+                                  fused_mlp_graph, fused_qkv_graph)
+
+__all__ = ["serving_graph_shapes", "tune_serving_shapes"]
+
+
+def serving_graph_shapes(cfg: ModelConfig) -> list[tuple[str, object, int, int]]:
+    """The (name, graph, K, N) fused-layer GEMMs a decoder layer runs —
+    the M dimension is supplied per phase."""
+    d = cfg.d_model
+    qn = cfg.num_heads * cfg.head_dim
+    shapes = [
+        ("qkv", fused_qkv_graph(), d, qn),
+        ("attn_out", fused_attn_out_graph(), qn, d),
+    ]
+    if cfg.d_ff > 0:
+        if cfg.gated_mlp:
+            shapes.append(("gated_mlp",
+                           fused_gated_mlp_graph(cfg.mlp_activation),
+                           d, cfg.d_ff))
+        else:
+            shapes.append(("mlp", fused_mlp_graph(cfg.mlp_activation),
+                           d, cfg.d_ff))
+    return shapes
+
+
+def tune_serving_shapes(cfg: ModelConfig, *, num_slots: int,
+                        prefill_buckets: Sequence[int] = (64, 256),
+                        max_candidates: Optional[int] = 64,
+                        cache=None, cache_dir=None) -> dict:
+    """Warm the tune cache for both serving phases and report the winners.
+
+    Returns ``{phase: [{graph, m, k, n, spec, cost}]}`` where phase is
+    ``"decode"`` or ``"prefill@<bucket>"``; entries land in the persistent
+    tune cache so subsequent fused compiles at those shapes reuse them."""
+    phases = [("decode", num_slots)]
+    phases += [(f"prefill@{b}", int(b)) for b in prefill_buckets]
+    report: dict[str, list] = {}
+    for phase, m in phases:
+        rows = []
+        for name, graph, k, n in serving_graph_shapes(cfg):
+            results = autotune_graph(graph, m, k, n,
+                                     max_candidates=max_candidates,
+                                     cache=cache, cache_dir=cache_dir)
+            best = results[0]
+            rows.append({
+                "graph": name, "m": m, "k": k, "n": n,
+                "spec": best.candidate.spec_string,
+                "cost": float(best.report.total_time),
+            })
+        report[phase] = rows
+    return report
