@@ -35,6 +35,8 @@ import numpy as np
 JSON_PATH = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
     "BENCH_serve.json")
+FAULTS_JSON_PATH = os.path.join(os.path.dirname(JSON_PATH),
+                                "BENCH_serve_faults.json")
 
 
 def synth_trace(seed: int, n: int, vocab: int, *, plen_lo=4, plen_hi=48,
@@ -196,10 +198,115 @@ def run(smoke: bool = False):
     return rows
 
 
+def run_faults(smoke: bool = False):
+    """Chaos goodput: the same synthetic trace served while a seeded
+    ``FaultPlan`` injects page exhaustion, forced preemptions and one NaN
+    poisoning, on an *optimistic-admission* engine with an undersized page
+    pool.  Gates: the engine drains, only the poisoned request FAILs, every
+    other request's tokens are bit-identical to a fault-free reserve-mode
+    golden run, no pages leak, and at least one preemption round-tripped.
+    Goodput counts only FINISHED requests' requested tokens.  Report:
+    ``BENCH_serve_faults.json``."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import lm
+    from repro.serve import Engine, EngineConfig, FaultPlan, RequestStatus
+
+    cfg = get_config("minicpm_2b").reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    n_req = 16 if smoke else 32
+    # new_lo=4 so the poisoned request is guaranteed to reach poison_pos
+    reqs = synth_trace(1, n_req, cfg.vocab_size, new_lo=4)
+    max_seq = max(len(r["prompt"]) + r["max_new"] for r in reqs)
+    num_slots, page_size = 8, 16
+    worst = -(-max_seq // page_size)
+    # undersized pool: 3 pages/slot vs a worst case of `worst` — admission
+    # is a gamble and growth/preemption must carry the slack
+    ecfg = EngineConfig(num_slots=num_slots, page_size=page_size,
+                        max_seq=max_seq, num_pages=3 * num_slots,
+                        segment_len=8, seed=0, admission="optimistic")
+    poison_uid = 3
+    poison_pos = len(reqs[poison_uid]["prompt"]) + 2
+    plan = FaultPlan.random(7, 30, p_exhaust=0.2, p_preempt=0.1,
+                            poison=(poison_uid, poison_pos))
+    # guarantee preemption coverage regardless of the random draw
+    plan = dataclasses.replace(
+        plan, preempt_steps=plan.preempt_steps | {2, 4})
+
+    def submit_all(eng):
+        for r in reqs:
+            eng.submit(r["prompt"], r["max_new"],
+                       temperature=r["temperature"], top_k=r["top_k"],
+                       top_p=r["top_p"], uid=r["uid"])
+
+    golden_eng = Engine(cfg, params, dataclasses.replace(
+        ecfg, admission="reserve", num_pages=None))
+    submit_all(golden_eng)
+    golden = golden_eng.run()
+
+    eng = Engine(cfg, params, ecfg, faults=plan)
+    submit_all(eng)
+    t0 = time.perf_counter()
+    steps = 0
+    while not eng.idle and steps < 1000:
+        eng.step()
+        eng.validate()           # invariants hold under every injected fault
+        steps += 1
+    wall = time.perf_counter() - t0
+    assert eng.idle, "chaos engine failed to drain"
+    assert eng.kv.free_pages == eng.kv.num_pages, "page leak under faults"
+    assert eng.status(poison_uid) == RequestStatus.FAILED
+    assert eng.stats["preemptions"] >= 1
+
+    finished = [r for r in reqs
+                if eng.status(r["uid"]) == RequestStatus.FINISHED]
+    assert len(finished) == n_req - 1, "a healthy request did not finish"
+    for r in finished:
+        assert eng.collect(r["uid"]) == golden[r["uid"]], (
+            f"uid {r['uid']} not bit-identical under faults")
+    goodput_tok = sum(r["max_new"] for r in finished)
+    goodput = goodput_tok / wall
+
+    statuses = {}
+    for r in reqs:
+        statuses[eng.status(r["uid"]).value] = \
+            statuses.get(eng.status(r["uid"]).value, 0) + 1
+    report = {
+        "smoke": smoke,
+        "config": "minicpm_2b.reduced",
+        "requests": n_req,
+        "trace_seed": 1,
+        "fault_seed": 7,
+        "poison": {"uid": poison_uid, "pos": poison_pos},
+        "exhaust_steps": sorted(plan.exhaust_steps),
+        "preempt_steps": sorted(plan.preempt_steps),
+        "steps_to_drain": steps,
+        "statuses": statuses,
+        "engine_stats": eng.stats,
+        "goodput_tokens": goodput_tok,
+        "goodput_tokens_per_sec": goodput,
+        "parity_with_fault_free_golden": True,
+        "page_leak": False,
+    }
+    with open(FAULTS_JSON_PATH, "w") as f:
+        json.dump(report, f, indent=1)
+    return [(
+        "serve_faults_goodput",
+        wall / goodput_tok * 1e6,
+        f"goodput_tok_per_s={goodput:.1f};preemptions="
+        f"{eng.stats['preemptions']};page_grows={eng.stats['page_grows']}"
+        f";failed=1;finished={len(finished)};steps={steps}",
+    )]
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="smaller trace + relaxed throughput gate")
+    ap.add_argument("--faults", action="store_true",
+                    help="chaos mode: seeded FaultPlan goodput run only")
     args = ap.parse_args()
-    for r in run(smoke=args.smoke):
+    rows = run_faults(smoke=args.smoke) if args.faults else run(
+        smoke=args.smoke)
+    for r in rows:
         print(",".join(map(str, r)))

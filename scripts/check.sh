@@ -53,6 +53,12 @@ REPRO_TUNE_CACHE=0 python benchmarks/bench_autotune.py --smoke
 # batch AND the continuous-vs-static throughput floor on a seeded ragged
 # trace (writes BENCH_serve.json; the full trace uses a stricter floor).
 python benchmarks/bench_serve.py --smoke
+# chaos smoke: seeded FaultPlan (page exhaustion + forced preemption + NaN
+# poisoning) against an optimistic-admission engine with an undersized page
+# pool — gates drain, per-request terminal statuses, zero page leaks, and
+# bit-parity of unaffected requests vs a fault-free golden run (goodput
+# report: BENCH_serve_faults.json).
+python benchmarks/bench_serve.py --smoke --faults
 # grad-parity smoke: derived backward TppGraphs (fusion.autodiff) vs
 # jax.grad of the composed-TPP reference, plus the fused-training step.
 # The no-arg run above already executed the full autodiff suite — only

@@ -27,6 +27,7 @@ import json
 import os
 import tempfile
 import time
+import warnings
 from pathlib import Path
 from typing import Optional
 
@@ -71,29 +72,57 @@ class TuneCache:
         return self.path / f"{key}.json"
 
     def lookup(self, key: str) -> Optional[dict]:
+        path = self._file(key)
         try:
-            with open(self._file(key)) as f:
+            with open(path) as f:
                 entry = json.load(f)
-        except (OSError, ValueError):
+        except OSError:
+            return None                       # no entry — a plain miss
+        except ValueError:
+            # corrupted/truncated file (interrupted writer, disk fault):
+            # discard it with a warning so it cannot poison — or crash —
+            # any later search, and fall through to a fresh tune
+            warnings.warn(
+                f"repro-tune: discarding corrupted cache entry {path} "
+                "(unreadable JSON); it will be re-tuned", RuntimeWarning)
+            try:
+                os.unlink(path)
+            except OSError:
+                pass
             return None
-        if entry.get("version") != CACHE_VERSION:
+        if not isinstance(entry, dict) or entry.get("version") != CACHE_VERSION:
             return None
         return entry
 
     def store(self, key: str, entry: dict) -> None:
+        """Atomic write (temp file + ``os.replace``) so readers never see a
+        half-written entry.  I/O failures warn instead of raising — a cache
+        that cannot persist must not abort the autotune that produced the
+        result."""
         entry = {"version": CACHE_VERSION, "stored_at": time.time(), **entry}
-        self.path.mkdir(parents=True, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=self.path, suffix=".tmp")
+        try:
+            self.path.mkdir(parents=True, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=self.path, suffix=".tmp")
+        except OSError as exc:
+            warnings.warn(f"repro-tune: cannot write cache entry under "
+                          f"{self.path} ({exc}); result not persisted",
+                          RuntimeWarning)
+            return
         try:
             with os.fdopen(fd, "w") as f:
                 json.dump(entry, f, indent=1)
             os.replace(tmp, self._file(key))
-        except BaseException:
+        except BaseException as exc:
             try:
                 os.unlink(tmp)
             except OSError:
                 pass
-            raise
+            if isinstance(exc, OSError):
+                warnings.warn(f"repro-tune: failed writing cache entry "
+                              f"{key[:12]}… ({exc}); result not persisted",
+                              RuntimeWarning)
+                return
+            raise                 # e.g. TypeError: unserializable entry — a bug
 
     def clear(self) -> int:
         """Remove every entry; returns the number of files deleted."""

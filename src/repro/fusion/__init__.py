@@ -5,7 +5,9 @@ from repro.fusion import rng
 from repro.fusion.graph import (EPILOGUE_OPS, ContractionRoot, EpilogueOp,
                                 FusionLegalityError, Node, OperandSpec,
                                 TppGraph, register_epilogue, simplify_graph)
-from repro.fusion.lowering import (DEFAULT_SPEC, compile, compile_for_backend,
+from repro.fusion.lowering import (DEFAULT_SPEC, clear_fallback_blocklist,
+                                   compile, compile_for_backend,
+                                   fallback_blocklist, force_pallas_failure,
                                    validate_epilogue_band)
 from repro.fusion.cost import (autotune_graph, estimate_unfused, graph_cost,
                                graph_signature, schedule_kwargs,
@@ -23,6 +25,7 @@ __all__ = [
     "EPILOGUE_OPS", "register_epilogue", "FusionLegalityError",
     "simplify_graph", "rng",
     "compile", "compile_for_backend", "validate_epilogue_band", "DEFAULT_SPEC",
+    "fallback_blocklist", "clear_fallback_blocklist", "force_pallas_failure",
     "derive_vjp", "BackwardPlan", "backward_graphs", "compile_with_vjp",
     "graph_cost", "autotune_graph", "estimate_unfused", "UnfusedEstimate",
     "schedule_kwargs", "graph_signature",

@@ -31,6 +31,9 @@ producing silently wrong kernels (the paper leaves such legality to the user).
 """
 from __future__ import annotations
 
+import contextlib
+import logging
+import os
 from typing import Optional
 
 import jax
@@ -49,6 +52,7 @@ from repro.fusion.graph import (EPILOGUE_OPS, FusionLegalityError, TppGraph,
 __all__ = [
     "compile", "compile_for_backend", "validate_epilogue_band",
     "build_nest_inputs", "DEFAULT_SPEC",
+    "fallback_blocklist", "clear_fallback_blocklist", "force_pallas_failure",
 ]
 
 DEFAULT_SPEC = "bca"  # M, N outer; K (reduction) innermost — output-stationary
@@ -601,6 +605,106 @@ def compile(graph: TppGraph, *, path: str = "pallas", simplify: bool = True,
 
 _COMPILE_CACHE: dict = {}
 
+# Graceful degradation: graphs whose fused Pallas lowering failed, now
+# permanently routed through the composed-TPP XLA reference (the paper's
+# "every primitive has a reference semantic" payoff).  Keyed by the graph
+# itself; ``fallback_blocklist()`` exposes a name→reason view.
+_FALLBACK_BLOCKLIST: dict = {}
+_FORCED_FAILURES: set[str] = set()   # graph names (fault injection / tests)
+_LOG = logging.getLogger("repro.fusion")
+
+
+class ForcedPallasFailure(RuntimeError):
+    """Raised in place of running a fused kernel under
+    :func:`force_pallas_failure` — exercises the XLA fallback path."""
+
+
+def _fallback_enabled() -> bool:
+    # strict mode (REPRO_FUSION_FALLBACK=0): lowering failures are fatal,
+    # as before this layer existed — for CI jobs that must not silently
+    # lose fused coverage
+    return os.environ.get("REPRO_FUSION_FALLBACK", "1") != "0"
+
+
+def fallback_blocklist() -> dict[str, str]:
+    """{graph name: failure reason} for every graph currently degraded to
+    the XLA reference."""
+    return {g.name: reason for g, reason in _FALLBACK_BLOCKLIST.items()}
+
+
+def clear_fallback_blocklist() -> None:
+    """Forget recorded lowering failures (e.g. after an env/backend change
+    that may have fixed them); blocklisted graphs will retry Pallas on
+    their next fresh compile."""
+    _FALLBACK_BLOCKLIST.clear()
+
+
+@contextlib.contextmanager
+def force_pallas_failure(*names: str):
+    """Fault injection: within the context, calling the fused Pallas
+    lowering of the named graphs raises, driving ``compile_for_backend``'s
+    XLA fallback.  On exit the forcing — and any blocklist entries it
+    caused — are removed, so a chaos test leaves the process clean."""
+    _FORCED_FAILURES.update(names)
+    try:
+        yield
+    finally:
+        _FORCED_FAILURES.difference_update(names)
+        for g in [g for g in _FALLBACK_BLOCKLIST if g.name in names]:
+            del _FALLBACK_BLOCKLIST[g]
+
+
+def _note_fallback(graph: TppGraph, exc: BaseException) -> None:
+    if graph not in _FALLBACK_BLOCKLIST:
+        reason = f"{type(exc).__name__}: {exc}"
+        _FALLBACK_BLOCKLIST[graph] = reason
+        _LOG.warning(
+            "fused Pallas lowering of graph %r failed (%s); falling back to "
+            "the composed-TPP XLA reference for this graph (set "
+            "REPRO_FUSION_FALLBACK=0 to make this fatal)", graph.name, reason)
+
+
+def _guarded_pallas(graph: TppGraph, backend: str, kw: dict):
+    """Compile the fused Pallas path with call-time XLA fallback.  Pallas
+    plan/lowering errors surface either at compile() time (epilogue-band
+    legality) or at first call per shape (tile divisibility, Mosaic) — both
+    are caught, logged once, blocklisted, and rerouted to the XLA
+    reference; ``TypeError`` (caller passed wrong operands) stays fatal."""
+    xla_kw = {k: v for k, v in kw.items() if k == "out_dtype"}
+    state: dict = {"xla_fn": None}
+
+    def xla_fn():
+        if state["xla_fn"] is None:
+            state["xla_fn"] = compile(graph, path="xla", **xla_kw)
+        return state["xla_fn"]
+
+    try:
+        pallas_fn = compile(graph, path="pallas",
+                            interpret=(backend == "pallas_interpret"), **kw)
+    except Exception as exc:
+        if not _fallback_enabled():
+            raise
+        _note_fallback(graph, exc)
+        pallas_fn = None
+
+    def guarded(**operands):
+        if pallas_fn is None or graph in _FALLBACK_BLOCKLIST:
+            return xla_fn()(**operands)
+        try:
+            if graph.name in _FORCED_FAILURES:
+                raise ForcedPallasFailure(
+                    f"forced Pallas failure for graph {graph.name!r}")
+            return pallas_fn(**operands)
+        except TypeError:
+            raise               # operand-signature error, not a lowering bug
+        except Exception as exc:
+            if not _fallback_enabled():
+                raise
+            _note_fallback(graph, exc)
+            return xla_fn()(**operands)
+
+    return guarded
+
 
 def compile_for_backend(graph: TppGraph, backend: Optional[str] = None, **kw):
     """Pick the lowering path from the active ``kernels.ops`` backend — the
@@ -610,7 +714,14 @@ def compile_for_backend(graph: TppGraph, backend: Optional[str] = None, **kw):
     library ``fused_*_apply`` helpers call this per layer invocation, and
     rebuilding the closure (plus re-planning the nest inside it) per eager
     call is pure waste.  The returned callable itself caches one pallas plan
-    per distinct operand-shape/dtype tuple."""
+    per distinct operand-shape/dtype tuple.
+
+    Unlike :func:`compile` (which raises on lowering failures — the strict
+    path tests and tools use), the pallas-backend callables returned here
+    degrade gracefully: a graph whose fused lowering fails is logged once,
+    blocklisted, and routed through the composed-TPP XLA reference, so
+    ``use_fusion=True`` models survive a backend that cannot compile a
+    shape.  ``REPRO_FUSION_FALLBACK=0`` restores strictness."""
     from repro.kernels import ops
     backend = backend or ops.current_backend()
     if backend == "xla":
@@ -629,8 +740,7 @@ def compile_for_backend(graph: TppGraph, backend: Optional[str] = None, **kw):
     if backend == "xla":
         fn = compile(graph, path="xla", **kw)
     else:
-        fn = compile(graph, path="pallas",
-                     interpret=(backend == "pallas_interpret"), **kw)
+        fn = _guarded_pallas(graph, backend, kw)
     if key is not None:
         _COMPILE_CACHE[key] = fn
     return fn

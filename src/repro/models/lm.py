@@ -28,6 +28,7 @@ from repro.models import blocks as B
 __all__ = [
     "LayerGroup", "derive_groups", "init_params", "forward_hidden",
     "lm_loss", "init_cache", "init_paged_cache", "decode_step", "prefill",
+    "finite_logits",
 ]
 
 
@@ -583,3 +584,10 @@ def decode_step(cfg: ModelConfig, params, caches, tokens, pos, *,
     logits = h[:, -1].astype(jnp.float32) @ w.astype(jnp.float32)
     logits = constrain(logits, ("batch", "vocab"))
     return _mask_pad_logits(cfg, logits), caches
+
+
+def finite_logits(logits) -> jax.Array:
+    """(B, V) → (B,) bool: True where every logit is finite.  The serving
+    engine's quarantine guard — a NaN/Inf row fails only its own request,
+    never the batch."""
+    return jnp.all(jnp.isfinite(logits), axis=-1)

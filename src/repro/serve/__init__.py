@@ -1,8 +1,11 @@
 from repro.serve.decode import (ServeConfig, generate, generate_loop,
                                 make_serve_step)
-from repro.serve.engine import Engine, EngineConfig
+from repro.serve.engine import Engine, EngineConfig, EngineDrainError
+from repro.serve.faults import NO_FAULTS, FaultPlan
 from repro.serve.kvcache import PagedKvCache
-from repro.serve.scheduler import Request, Scheduler
+from repro.serve.scheduler import Request, RequestStatus, Scheduler
 
 __all__ = ["ServeConfig", "generate", "generate_loop", "make_serve_step",
-           "Engine", "EngineConfig", "PagedKvCache", "Request", "Scheduler"]
+           "Engine", "EngineConfig", "EngineDrainError", "FaultPlan",
+           "NO_FAULTS", "PagedKvCache", "Request", "RequestStatus",
+           "Scheduler"]

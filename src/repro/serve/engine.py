@@ -2,20 +2,36 @@
 
 One ``Engine`` owns the device state (params stay caller-owned; paged KV
 pools and per-slot SSM state live here) and the host bookkeeping
-(scheduler, page allocator, per-request output buffers, latency metrics).
-Each ``step()`` is one continuous-batching iteration:
+(scheduler, page allocator, per-request output buffers, statuses, latency
+metrics).  Each ``step()`` is one continuous-batching iteration:
 
-1. **admit** — waiting requests move into free slots (FIFO, all-or-nothing
-   page reservation), each running a jitted batch-1 **prefill** at a
-   power-of-two shape bucket (per-row ``logit_index`` reads the true last
-   token, so padding never changes results) which also samples the
-   request's first token;
-2. **decode** — all running slots advance together through one jitted
+1. **expire/faults** — deadline-expired requests time out, the fault plan's
+   scheduled faults (forced preemption, allocator exhaustion, clock skew)
+   fire;
+2. **admit** — waiting requests move into free slots (FIFO, page
+   reservation per the admission mode), each running a jitted batch-1
+   **prefill** at a power-of-two shape bucket (per-row ``logit_index``
+   reads the true last token, so padding never changes results) which also
+   samples the request's first token;
+3. **grow/preempt** — under optimistic admission, each running slot's page
+   coverage is extended to the coming segment's writes; when the pool runs
+   dry the youngest-admitted request is preempted (pages released, request
+   requeued at the head with its generated prefix folded into the prompt —
+   counter-based sampling keyed on (seed, uid, position) makes the resume
+   bit-identical);
+4. **decode** — all running slots advance together through one jitted
    ``lax.while_loop`` segment of up to ``segment_len`` tokens, sampling via
    the counter-based sampler (`serve.sampling`); the loop exits early when
    a request finishes so its slot can be refilled next step;
-3. **retire** — finished requests release pages + slot and their outputs
+5. **retire** — finished requests release pages + slot and their outputs
    become collectable.
+
+Failures are *per-request*, never engine-wide: a NaN/Inf logits row (the
+always-on finite-logits guard) quarantines exactly that request as
+``FAILED`` while the batch keeps decoding; a request whose reservation can
+never fit the pool fails instead of raising; deadlines and ``cancel(uid)``
+retire requests as ``TIMED_OUT``/``CANCELLED``.  ``Engine.metrics[uid]
+["status"]`` carries the :class:`~repro.serve.scheduler.RequestStatus`.
 
 Decode runs every slot unconditionally — empty/retired slots write into
 the trash page (see `serve.kvcache`) and their sampled tokens are
@@ -37,11 +53,22 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import lm
-from repro.serve.kvcache import PagedKvCache
+from repro.serve.faults import NO_FAULTS, POISON_OFF, FaultPlan
+from repro.serve.kvcache import PagedKvCache, pages_needed
 from repro.serve.sampling import sample_tokens
-from repro.serve.scheduler import Request, Scheduler
+from repro.serve.scheduler import Request, RequestStatus, Scheduler
 
-__all__ = ["EngineConfig", "Engine"]
+__all__ = ["EngineConfig", "Engine", "EngineDrainError"]
+
+
+class EngineDrainError(RuntimeError):
+    """``Engine.run`` hit ``max_steps`` before draining.  ``results`` holds
+    ``{uid: tokens}`` for every request that *did* reach a terminal status,
+    so the finished work is not lost with the exception."""
+
+    def __init__(self, message: str, results: dict[int, list[int]]):
+        super().__init__(message)
+        self.results = results
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +84,14 @@ class EngineConfig:
     seed: int = 0
     ep_axis: Optional[str] = None
     unroll_layers: bool = False
+    admission: str = "reserve"     # "reserve" | "optimistic" page grants
+    thrash_preemptions: int = 4    # optimistic→reserve fallback watermark:
+    thrash_window: int = 8         #   ≥ N preemptions in the last W steps
+
+    def __post_init__(self):
+        if self.admission not in ("reserve", "optimistic"):
+            raise ValueError(f"unknown admission mode {self.admission!r} "
+                             "(want 'reserve' or 'optimistic')")
 
     @property
     def max_pages_per_slot(self) -> int:
@@ -74,6 +109,7 @@ class DecodeState(NamedTuple):
     gen: jax.Array      # (B,) i32  tokens generated so far
     limit: jax.Array    # (B,) i32  max_new per request
     active: jax.Array   # (B,) bool
+    bad: jax.Array      # (B,) bool non-finite logits seen (quarantine flag)
     uids: jax.Array     # (B,) u32  sampler counter key
     temp: jax.Array     # (B,) f32
     top_k: jax.Array    # (B,) i32
@@ -112,7 +148,8 @@ def _next_bucket(n: int, lo: int, cap: int) -> int:
 
 
 class Engine:
-    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig):
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig, *,
+                 faults: Optional[FaultPlan] = None, clock=None):
         if cfg.is_encdec:
             raise NotImplementedError(
                 "the serving engine does not support encoder-decoder models")
@@ -121,10 +158,16 @@ class Engine:
                      else ecfg.num_slots * ecfg.max_pages_per_slot)
         self.kv = PagedKvCache(ecfg.num_slots, num_pages, ecfg.page_size,
                                ecfg.max_pages_per_slot)
-        self.sched = Scheduler(ecfg.num_slots, self.kv)
+        self.sched = Scheduler(ecfg.num_slots, self.kv, mode=ecfg.admission)
         self.caches = lm.init_paged_cache(cfg, ecfg.num_slots, num_pages,
                                           ecfg.page_size)
         self._seed = jnp.uint32(ecfg.seed)
+        self._faults = faults if faults is not None else NO_FAULTS
+        self._poison_uid = jnp.uint32(self._faults.poison_uid)
+        self._poison_pos = jnp.int32(self._faults.poison_pos)
+        self._clock = clock if clock is not None else time.perf_counter
+        self._skew = 0.0          # virtual seconds added by fault delays
+        self._step_idx = 0
 
         b = ecfg.num_slots
         # decode state lives on device between segments; the host keeps only
@@ -132,19 +175,26 @@ class Engine:
         self._state = DecodeState(
             tok=jnp.zeros(b, jnp.int32), pos=jnp.zeros(b, jnp.int32),
             gen=jnp.zeros(b, jnp.int32), limit=jnp.ones(b, jnp.int32),
-            active=jnp.zeros(b, bool), uids=jnp.zeros(b, jnp.uint32),
+            active=jnp.zeros(b, bool), bad=jnp.zeros(b, bool),
+            uids=jnp.zeros(b, jnp.uint32),
             temp=jnp.zeros(b, jnp.float32), top_k=jnp.zeros(b, jnp.int32),
             top_p=jnp.ones(b, jnp.float32))
         self._gen = np.zeros(b, np.int32)
         self._done = np.zeros(b, bool)
         self._uids = np.zeros(b, np.uint32)
+        self._prior = np.zeros(b, np.int64)  # tokens of uid before admission
         self._table_dev = jnp.asarray(self.kv.table())
         self._table_dirty = False
 
         self._out: dict[int, list[int]] = {}     # uid → generated tokens
-        self._prompts: dict[int, list[int]] = {}
-        self._finished: set[int] = set()
-        self.metrics: dict[int, dict] = {}       # uid → latency record
+        self._prompts: dict[int, list[int]] = {}  # uid → ORIGINAL prompt
+        self._max_new: dict[int, int] = {}        # uid → original budget
+        self._terminal: set[int] = set()
+        self.metrics: dict[int, dict] = {}       # uid → latency + status
+        self.stats = {"preemptions": 0, "page_grows": 0, "timeouts": 0,
+                      "failures": 0, "cancellations": 0,
+                      "fallback_to_reserve_step": None}
+        self._preempt_log: list[int] = []        # step idx of preemptions
         self._next_uid = 0
 
         self._prefill, self._segment = _jitted_fns(cfg, ecfg)
@@ -153,12 +203,25 @@ class Engine:
 
     def submit(self, prompt, max_new: int, *, temperature: float = 0.0,
                top_k: int = 0, top_p: float = 1.0,
-               uid: Optional[int] = None) -> int:
-        """Queue one request; returns its uid (the sampler counter key)."""
+               uid: Optional[int] = None,
+               ttft_deadline: Optional[float] = None,
+               deadline: Optional[float] = None) -> int:
+        """Queue one request; returns its uid (the sampler counter key).
+
+        ``ttft_deadline``/``deadline`` are seconds after submission by which
+        the first token / the whole request must land; a request past its
+        deadline is retired as ``TIMED_OUT`` at the next step boundary.
+        Nothing is registered until every argument validates — a rejected
+        submit leaves the engine untouched."""
         prompt = [int(t) for t in np.asarray(prompt).reshape(-1)]
-        if uid is None:
-            uid = self._next_uid
-        self._next_uid = max(self._next_uid, uid + 1)
+        uid = self._next_uid if uid is None else uid
+        if uid in self.metrics:
+            raise ValueError(
+                f"duplicate uid {uid}: already "
+                f"{self.metrics[uid]['status'].value}; uids key the "
+                "sampler's counter stream and must be unique per engine")
+        if not 0 <= uid < POISON_OFF:
+            raise ValueError(f"uid {uid} out of range [0, {POISON_OFF})")
         req = Request(uid=uid, prompt=prompt, max_new=max_new,
                       temperature=temperature, top_k=top_k, top_p=top_p)
         if req.max_tokens > self.ecfg.max_seq:
@@ -167,86 +230,310 @@ class Engine:
                 f"({max_new}) = {req.max_tokens} exceeds max_seq "
                 f"({self.ecfg.max_seq})")
         self.sched.submit(req)
+        # -- validated: now (and only now) register the request -------------
+        self._next_uid = max(self._next_uid, uid + 1)
         self._prompts[uid] = prompt
+        self._max_new[uid] = max_new
         self._out[uid] = []
-        self.metrics[uid] = {"submitted": time.perf_counter(),
+        self.metrics[uid] = {"submitted": self._now(),
                              "first_token": None, "finished": None,
-                             "token_times": []}
+                             "token_times": [],
+                             "status": RequestStatus.WAITING,
+                             "preemptions": 0,
+                             "ttft_deadline": ttft_deadline,
+                             "deadline": deadline}
         return uid
 
     @property
     def idle(self) -> bool:
         return self.sched.idle
 
+    def status(self, uid: int) -> RequestStatus:
+        return self.metrics[uid]["status"]
+
+    def cancel(self, uid: int) -> bool:
+        """Abort a request from the host.  Returns True if it was alive
+        (waiting or running) and is now ``CANCELLED``; False if it had
+        already reached a terminal status."""
+        if uid not in self.metrics:
+            raise KeyError(f"unknown uid {uid}")
+        if uid in self._terminal:
+            return False
+        if self.sched.remove_waiting(uid) is None:
+            slot = next(s for s, r in self.sched.running.items()
+                        if r.uid == uid)
+            self._evict(slot)
+        self._set_terminal(uid, RequestStatus.CANCELLED)
+        self.stats["cancellations"] += 1
+        return True
+
     def step(self) -> list[int]:
-        """One continuous-batching iteration.  Returns uids finished."""
+        """One continuous-batching iteration.  Returns the uids that
+        reached a terminal status during this step."""
+        plan, idx = self._faults, self._step_idx
+        self._step_idx += 1
+        self._skew += plan.clock_skew(idx)
+        newly = self._expire_deadlines()
+        if plan.force_preempt(idx) and self.sched.running:
+            self._preempt(self.sched.youngest_running())
         if self.sched.idle:
-            return []
-        admitted = self.sched.admit()
-        if not admitted and not self.sched.running:
-            # nothing running to free pages for the blocked head-of-line
-            req = self.sched.waiting[0]
-            raise RuntimeError(
-                f"request {req.uid} ({req.max_tokens} tokens) can never be "
-                f"admitted: pool has {self.kv.num_pages} pages of "
-                f"{self.kv.page_size}")
-        for slot, req in admitted:
-            self._admit(slot, req)
-        finished = self._retire_done()
+            return newly
+        blocked = plan.allocator_exhausted(idx)
+        if not blocked:
+            newly += self._fail_impossible_heads()
+            for slot, req in self.sched.admit():
+                failed_uid = self._admit(slot, req)
+                if failed_uid is not None:
+                    newly.append(failed_uid)
+        newly += self._retire_done()
+        self._ensure_segment_pages(grow_allowed=not blocked)
         if any(not self._done[s] for s in self.sched.running):
-            self._run_segment()
-            finished += self._retire_done()
-        return finished
+            bad = self._run_segment()
+            newly += self._quarantine(bad)
+            newly += self._retire_done()
+        self._maybe_fallback_reserve()
+        return newly
 
     def collect(self, uid: int) -> list[int]:
-        """Full token list (prompt + generated) of a finished request."""
-        if uid not in self._finished:
+        """Full token list (original prompt + generated) of a request that
+        reached a terminal status (check ``status(uid)`` for which one —
+        FAILED/TIMED_OUT/CANCELLED requests return their partial output)."""
+        if uid not in self._terminal:
             raise KeyError(f"request {uid} is not finished")
         return self._prompts[uid] + self._out[uid]
 
     def run(self, max_steps: int = 100_000) -> dict[int, list[int]]:
-        """Drive ``step`` until idle; returns {uid: tokens} for everything
-        finished along the way."""
-        done: list[int] = []
+        """Drive ``step`` until idle; returns {uid: tokens} for every
+        request in a terminal status — including ones that finished in
+        earlier ``step``/``run`` calls.  On non-drain raises
+        :class:`EngineDrainError` with the partial results attached."""
         for _ in range(max_steps):
             if self.idle:
                 break
-            done += self.step()
-        else:
-            raise RuntimeError("engine did not drain within max_steps")
-        return {uid: self.collect(uid) for uid in done}
+            self.step()
+        results = {uid: self.collect(uid) for uid in sorted(self._terminal)}
+        if not self.idle:
+            raise EngineDrainError(
+                f"engine did not drain within {max_steps} steps "
+                f"({self.sched.num_waiting} waiting, "
+                f"{len(self.sched.running)} running); partial results for "
+                f"{len(results)} finished requests attached", results)
+        return results
+
+    def validate(self) -> None:
+        """Invariant checker (chaos tests run it after every step):
+        allocator freelist + page tables + scheduler slots + DecodeState +
+        host mirrors all agree."""
+        self.sched.check_invariants()
+        st = jax.device_get(self._state)
+        running = set(self.sched.running)
+        for slot in range(self.ecfg.num_slots):
+            if slot not in running:
+                assert not st.active[slot], \
+                    f"slot {slot} active on device but not running"
+                assert not self._done[slot], \
+                    f"slot {slot} marked done but not running"
+        waiting_uids = [r.uid for r in self.sched.waiting]
+        assert len(waiting_uids) == len(set(waiting_uids)), \
+            "uid queued twice"
+        for slot, req in self.sched.running.items():
+            uid = req.uid
+            assert int(self._uids[slot]) == uid, "host uid mirror stale"
+            assert int(st.uids[slot]) == uid, "device uid stale"
+            assert uid not in waiting_uids, "uid both running and waiting"
+            gen = int(self._gen[slot])
+            assert int(st.gen[slot]) == gen, \
+                f"slot {slot}: device gen {int(st.gen[slot])} != host {gen}"
+            assert len(self._out[uid]) == self._prior[slot] + gen, \
+                f"uid {uid}: harvested tokens disagree with gen counter"
+            # every KV position written so far sits in an owned page (the
+            # last sampled token is not written until the next decode step)
+            written = len(req.prompt) + gen - 1
+            assert self.kv.capacity(slot) >= written, \
+                f"slot {slot}: {written} tokens written but pages cover " \
+                f"only {self.kv.capacity(slot)}"
+            assert not self.metrics[uid]["status"].terminal, \
+                f"uid {uid} running with terminal status"
+        for uid, m in self.metrics.items():
+            terminal = m["status"].terminal
+            assert terminal == (uid in self._terminal), \
+                f"uid {uid}: status {m['status']} vs terminal-set mismatch"
+            if terminal:
+                assert uid not in waiting_uids, \
+                    f"terminal uid {uid} still queued"
 
     # -- internals ----------------------------------------------------------
 
-    def _admit(self, slot: int, req: Request) -> None:
+    def _now(self) -> float:
+        return self._clock() + self._skew
+
+    def _set_terminal(self, uid: int, status: RequestStatus) -> None:
+        m = self.metrics[uid]
+        m["status"] = status
+        m["finished"] = self._now()
+        self._terminal.add(uid)
+
+    def _deactivate_slot(self, slot: int) -> None:
+        self._state = self._state._replace(
+            active=self._state.active.at[slot].set(False))
+
+    def _evict(self, slot: int) -> Request:
+        """Release a slot whose request is leaving mid-flight (cancel,
+        timeout, quarantine): free pages, silence the device lane."""
+        req = self.sched.retire(slot)
+        self._done[slot] = False
+        self._deactivate_slot(slot)
+        self._table_dirty = True
+        return req
+
+    def _preempt(self, slot: int) -> None:
+        """Evict under memory pressure and requeue at the head of the line
+        with the generated prefix folded into the prompt — the counter
+        sampler (keyed on uid + absolute position) makes the resumed
+        request's remaining tokens bit-identical to the uninterrupted
+        run's."""
+        req = self.sched.preempt(slot)
+        self._done[slot] = False
+        self._deactivate_slot(slot)
+        self._table_dirty = True
+        uid = req.uid
+        resumed = Request(
+            uid=uid, prompt=self._prompts[uid] + self._out[uid],
+            max_new=self._max_new[uid] - len(self._out[uid]),
+            temperature=req.temperature, top_k=req.top_k, top_p=req.top_p)
+        self.sched.requeue_front(resumed)
+        m = self.metrics[uid]
+        m["status"] = RequestStatus.PREEMPTED
+        m["preemptions"] += 1
+        self.stats["preemptions"] += 1
+        self._preempt_log.append(self._step_idx)
+
+    def _expire_deadlines(self) -> list[int]:
+        now = self._now()
+        expired = []
+        for req in list(self.sched.waiting):
+            m = self.metrics[req.uid]
+            waited = now - m["submitted"]
+            ttft, total = m["ttft_deadline"], m["deadline"]
+            if ((ttft is not None and m["first_token"] is None
+                 and waited > ttft)
+                    or (total is not None and waited > total)):
+                self.sched.remove_waiting(req.uid)
+                self._set_terminal(req.uid, RequestStatus.TIMED_OUT)
+                self.stats["timeouts"] += 1
+                expired.append(req.uid)
+        for slot, req in list(self.sched.running.items()):
+            m = self.metrics[req.uid]
+            total = m["deadline"]
+            if total is not None and now - m["submitted"] > total:
+                self._evict(slot)
+                self._set_terminal(req.uid, RequestStatus.TIMED_OUT)
+                self.stats["timeouts"] += 1
+                expired.append(req.uid)
+        return expired
+
+    def _fail_impossible_heads(self) -> list[int]:
+        """A head-of-line request whose reservation can never be satisfied
+        fails (per-request status) instead of wedging the queue — the old
+        behavior was an engine-wide RuntimeError."""
+        failed = []
+        while self.sched.waiting:
+            req = self.sched.waiting[0]
+            need = self.sched.required_pages(req)
+            hopeless = (need > self.kv.max_pages_per_slot
+                        or need > self.kv.num_pages)
+            if not hopeless and not self.sched.running:
+                # nothing running → no page will ever be freed
+                hopeless = need > self.kv.free_pages
+            if not hopeless:
+                break
+            self.sched.waiting.popleft()
+            self._set_terminal(req.uid, RequestStatus.FAILED)
+            self.stats["failures"] += 1
+            failed.append(req.uid)
+        return failed
+
+    def _admit(self, slot: int, req: Request) -> Optional[int]:
+        """Prefill an admitted request into ``slot``.  Returns the uid if
+        the prefill logits were non-finite (request quarantined → FAILED),
+        else None."""
         plen = len(req.prompt)
         bucket = _next_bucket(plen, self.ecfg.min_bucket,
                               self.ecfg.slot_capacity)
         tokens = np.zeros((1, bucket), np.int32)
         tokens[0, :plen] = req.prompt
         table = self.kv.table()
-        tok, self.caches, self._state = self._prefill(
+        tok_bad, self.caches, self._state = self._prefill(
             self.params, self.caches, self._state, jnp.asarray(tokens),
             jnp.asarray(table[slot:slot + 1]), jnp.int32(plen),
             jnp.int32(slot), self._seed,
             jnp.uint32(req.uid), jnp.float32(req.temperature),
             jnp.int32(req.top_k), jnp.float32(req.top_p),
-            jnp.int32(req.max_new))
+            jnp.int32(req.max_new), self._poison_uid, self._poison_pos)
         self._table_dirty = True
-        first = int(tok)
-        now = time.perf_counter()
-        self._out[req.uid].append(first)
-        m = self.metrics[req.uid]
-        m["first_token"] = now
-        m["token_times"].append(now)
-
+        first, was_bad = (int(v) for v in jax.device_get(tok_bad))
+        uid = req.uid
+        self._uids[slot] = uid
+        self._prior[slot] = len(self._out[uid])
         self._gen[slot] = 1
-        self._uids[slot] = req.uid
+        if was_bad:
+            self._evict(slot)
+            self._set_terminal(uid, RequestStatus.FAILED)
+            self.stats["failures"] += 1
+            return uid
+        now = self._now()
+        self._out[uid].append(first)
+        m = self.metrics[uid]
+        if m["first_token"] is None:
+            m["first_token"] = now
+        m["token_times"].append(now)
+        m["status"] = RequestStatus.RUNNING
         eos_hit = (self.ecfg.eos_token is not None
                    and first == self.ecfg.eos_token)
         self._done[slot] = bool(req.max_new <= 1 or eos_hit)
+        return None
 
-    def _run_segment(self) -> None:
+    def _ensure_segment_pages(self, grow_allowed: bool = True) -> None:
+        """Extend every running slot's pages to cover the coming segment's
+        KV writes (oldest request first).  Growth is a no-op for fully
+        reserved slots; an optimistic slot that cannot grow preempts the
+        youngest running request and retries — decoding past a slot's owned
+        pages would silently drop KV into the trash page, so coverage is a
+        hard precondition for the segment."""
+        seg = self.ecfg.segment_len
+        order = sorted(self.sched.running,
+                       key=self.sched.admitted_seq.__getitem__)
+        for slot in order:
+            if slot not in self.sched.running:
+                continue                    # preempted by an older slot
+            req = self.sched.running[slot]
+            plen, gen = len(req.prompt), int(self._gen[slot])
+            # next segment writes positions [plen+gen-1, plen+gen+seg-2];
+            # the final sampled token is never fed back, so the request
+            # never writes past plen + max_new - 2
+            need_tokens = min(plen + gen - 1 + seg, req.max_tokens - 1)
+            while True:
+                need = (pages_needed(need_tokens, self.ecfg.page_size)
+                        - self.kv.num_owned(slot))
+                if need <= 0:
+                    break
+                if not grow_allowed:        # injected allocator exhaustion
+                    self._preempt(slot)
+                    break
+                if self.kv.grow(slot, need):
+                    self.stats["page_grows"] += need
+                    self._table_dirty = True
+                    break
+                victim = self.sched.youngest_running()
+                if victim == slot:
+                    # nothing younger to evict — preempt the grower itself
+                    self._preempt(slot)
+                    break
+                self._preempt(victim)
+
+    def _run_segment(self) -> np.ndarray:
+        """One jitted decode segment.  Returns the per-slot quarantine
+        flags (non-finite logits seen) for the host to act on."""
         running = np.zeros(self.ecfg.num_slots, bool)
         for s in self.sched.running:
             running[s] = True
@@ -257,11 +544,11 @@ class Engine:
                            and self.sched.num_waiting > 0)
         self.caches, self._state, out = self._segment(
             self.params, self.caches, self._state, self._table_dev,
-            self._seed, refill)
+            self._seed, refill, self._poison_uid, self._poison_pos)
         # ONE host sync per segment: everything the host bookkeeping needs
-        gen_after, still_active, out = jax.device_get(
-            (self._state.gen, self._state.active, out))
-        now = time.perf_counter()
+        gen_after, still_active, bad, out = jax.device_get(
+            (self._state.gen, self._state.active, self._state.bad, out))
+        now = self._now()
         for slot in self.sched.running:
             n_new = int(gen_after[slot] - self._gen[slot])
             if n_new:
@@ -270,7 +557,20 @@ class Engine:
                 self._out[uid].extend(toks)
                 self.metrics[uid]["token_times"].extend([now] * n_new)
         self._gen = gen_after.copy()
-        self._done |= running & ~still_active
+        self._done |= running & ~still_active & ~bad
+        return running & bad
+
+    def _quarantine(self, bad: np.ndarray) -> list[int]:
+        """Retire slots whose logits went non-finite as FAILED — one
+        poisoned request must never take down the batch."""
+        failed = []
+        for slot in list(self.sched.running):
+            if bad[slot]:
+                req = self._evict(slot)
+                self._set_terminal(req.uid, RequestStatus.FAILED)
+                self.stats["failures"] += 1
+                failed.append(req.uid)
+        return failed
 
     def _retire_done(self) -> list[int]:
         finished = []
@@ -278,10 +578,24 @@ class Engine:
             if self._done[slot]:
                 req = self.sched.retire(slot)
                 self._done[slot] = False
-                self._finished.add(req.uid)
-                self.metrics[req.uid]["finished"] = time.perf_counter()
+                self._table_dirty = True
+                self._set_terminal(req.uid, RequestStatus.FINISHED)
                 finished.append(req.uid)
         return finished
+
+    def _maybe_fallback_reserve(self) -> None:
+        """Thrash watermark: when preemption churns (≥ thrash_preemptions
+        in the last thrash_window steps), optimistic admission is costing
+        more repeated prefill than it saves — fall back to full
+        reservation for all future admissions.  Already-running optimistic
+        slots keep growing via ``_ensure_segment_pages``."""
+        if self.sched.mode != "optimistic":
+            return
+        floor = self._step_idx - self.ecfg.thrash_window
+        self._preempt_log = [s for s in self._preempt_log if s > floor]
+        if len(self._preempt_log) >= self.ecfg.thrash_preemptions:
+            self.sched.mode = "reserve"
+            self.stats["fallback_to_reserve_step"] = self._step_idx
 
 
 # -- jitted bodies ----------------------------------------------------------
@@ -300,16 +614,22 @@ def _jitted_fns(cfg: ModelConfig, ecfg: EngineConfig):
     return prefill, segment
 
 def _prefill_one(cfg, ecfg, params, caches, state, tokens, table_row, plen,
-                 slot, seed, uid, temp, top_k, top_p, limit):
+                 slot, seed, uid, temp, top_k, top_p, limit,
+                 poison_uid, poison_pos):
     """Batch-1 prefill of one admitted request + its first sampled token,
     fused with the slot's DecodeState update (the state stays device-resident
-    between engine steps; only the first token crosses back to the host)."""
+    between engine steps; only (first token, quarantine flag) cross back to
+    the host).  ``poison_*`` is the fault plan's NaN injection — with the
+    no-op sentinel the `where` is a bitwise identity."""
     local = _fresh_slot_state(caches)
     logit_index = plen[None] - 1 if jnp.ndim(plen) == 0 else plen - 1
     logits, new_local = lm.prefill(
         cfg, params, local, {"tokens": tokens}, ep_axis=ecfg.ep_axis,
         unroll=ecfg.unroll_layers, page_table=table_row,
         page_size=ecfg.page_size, logit_index=logit_index)
+    hit = (uid == poison_uid) & (logit_index + 1 >= poison_pos)
+    logits = jnp.where(hit[:, None], jnp.float32(jnp.nan), logits)
+    bad = ~lm.finite_logits(logits)[0]
     tok = sample_tokens(logits, uids=uid[None], positions=logit_index + 1,
                         seed=seed, temperature=temp[None],
                         top_k=top_k[None], top_p=top_p[None])[0]
@@ -320,21 +640,27 @@ def _prefill_one(cfg, ecfg, params, caches, state, tokens, table_row, plen,
         pos=state.pos.at[slot].set(plen),
         gen=state.gen.at[slot].set(1),
         limit=state.limit.at[slot].set(limit),
-        active=state.active.at[slot].set((limit > 1) & ~eos),
+        active=state.active.at[slot].set((limit > 1) & ~eos & ~bad),
+        bad=state.bad.at[slot].set(bad),
         uids=state.uids.at[slot].set(uid),
         temp=state.temp.at[slot].set(temp),
         top_k=state.top_k.at[slot].set(top_k),
         top_p=state.top_p.at[slot].set(top_p))
-    return tok, _merge_slot_state(caches, new_local, slot), state
+    tok_bad = jnp.stack([tok, bad.astype(jnp.int32)])
+    return tok_bad, _merge_slot_state(caches, new_local, slot), state
 
 
-def _decode_segment(cfg, ecfg, params, caches, state, table, seed, refill):
+def _decode_segment(cfg, ecfg, params, caches, state, table, seed, refill,
+                    poison_uid, poison_pos):
     """Up to ``segment_len`` decode steps for every slot in one
     ``lax.while_loop``; finished slots go inactive (their writes keep
     landing in their own pages / the trash page and are discarded).
     ``refill`` (traced bool — requests are waiting) exits the loop as soon
-    as any slot finishes, so the freed slot refills next engine step
-    instead of idling out the segment."""
+    as any slot finishes OR is quarantined, so the freed slot refills next
+    engine step instead of idling out the segment.  A slot whose logits go
+    non-finite (organically, or via the fault plan's ``poison_*``
+    injection) is flagged ``bad``, contributes no token, and stops
+    advancing — the other slots keep decoding."""
     seg = ecfg.segment_len
     b = state.tok.shape[0]
     out0 = jnp.full((b, seg), -1, jnp.int32)
@@ -350,20 +676,25 @@ def _decode_segment(cfg, ecfg, params, caches, state, table, seed, refill):
             cfg, params, caches, tok_in, st.pos, ep_axis=ecfg.ep_axis,
             unroll=ecfg.unroll_layers, page_table=table,
             page_size=ecfg.page_size)
+        hit = st.active & (st.uids == poison_uid) & (st.pos + 1 >= poison_pos)
+        logits = jnp.where(hit[:, None], jnp.float32(jnp.nan), logits)
+        bad_now = st.active & ~lm.finite_logits(logits)
+        alive = st.active & ~bad_now
         nxt = sample_tokens(logits, uids=st.uids, positions=st.pos + 1,
                             seed=seed, temperature=st.temp, top_k=st.top_k,
                             top_p=st.top_p)
-        rec = jnp.where(st.active, nxt, -1)
+        rec = jnp.where(alive, nxt, -1)
         out = jax.lax.dynamic_update_slice(out, rec[:, None], (0, t))
-        gen = st.gen + st.active.astype(jnp.int32)
+        gen = st.gen + alive.astype(jnp.int32)
         eos = (nxt == ecfg.eos_token) if ecfg.eos_token is not None \
             else jnp.zeros_like(st.active)
-        done = st.active & ((gen >= st.limit) | eos)
+        done = alive & ((gen >= st.limit) | eos)
         st = st._replace(
-            tok=jnp.where(st.active, nxt, st.tok),
-            pos=st.pos + st.active.astype(jnp.int32),
-            gen=gen, active=st.active & ~done)
-        return t + 1, caches, st, out, finished_any | jnp.any(done)
+            tok=jnp.where(alive, nxt, st.tok),
+            pos=st.pos + alive.astype(jnp.int32),
+            gen=gen, active=alive & ~done, bad=st.bad | bad_now)
+        return (t + 1, caches, st, out,
+                finished_any | jnp.any(done) | jnp.any(bad_now))
 
     _, caches, st, out, _ = jax.lax.while_loop(
         cond, body, (jnp.int32(0), caches, state, out0, jnp.bool_(False)))

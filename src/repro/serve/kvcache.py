@@ -11,11 +11,17 @@ length-masked by the decode kernels, so the trash page's contents never
 reach a logit.
 
 The host side (this module) is pure Python/NumPy bookkeeping: which pages
-are free, which slot owns which pages.  Allocation is all-or-nothing at
-admission time — a request reserves every page it could ever need
-(``ceil((prompt + max_new) / page_size)``) up front, so a running request
-can never hit a mid-flight out-of-pages condition and preemption is never
-required.
+are free, which slot owns which pages.  Allocation is all-or-nothing per
+grant: under the default *reserve* admission mode a request reserves every
+page it could ever need (``ceil((prompt + max_new) / page_size)``) up
+front, so a running request can never hit a mid-flight out-of-pages
+condition and preemption is never required.  Under *optimistic* admission
+(`scheduler.Scheduler(mode="optimistic")`) a request reserves only
+``ceil(prompt / page_size) + 1`` pages and the engine calls ``grow()`` at
+decode-segment boundaries; a failed grow triggers youngest-first
+preemption in the engine, never silent corruption — decode writes beyond a
+slot's owned pages would land in the trash page and be lost, so coverage
+must be ensured *before* the segment runs.
 """
 from __future__ import annotations
 
@@ -64,9 +70,14 @@ class PagedKvCache:
     def allocate(self, slot: int, num_tokens: int) -> list[int]:
         """Reserve pages for ``num_tokens`` in ``slot``.  All-or-nothing;
         raises if the slot is occupied or the reservation cannot fit."""
+        return self.allocate_pages(slot, pages_needed(num_tokens,
+                                                      self.page_size))
+
+    def allocate_pages(self, slot: int, n: int) -> list[int]:
+        """Reserve exactly ``n`` pages for ``slot``.  All-or-nothing;
+        raises if the slot is occupied or the grant cannot fit."""
         if slot in self._owned:
             raise ValueError(f"slot {slot} already holds pages")
-        n = pages_needed(num_tokens, self.page_size)
         if n > self.max_pages_per_slot:
             raise ValueError(
                 f"request needs {n} pages > max_pages_per_slot "
@@ -78,6 +89,31 @@ class PagedKvCache:
         self._table[slot, :] = self.trash
         self._table[slot, :n] = pages
         return pages
+
+    def grow(self, slot: int, n: int = 1) -> bool:
+        """Append ``n`` pages to an occupied slot's allocation (the
+        optimistic admission mode's on-demand growth).  All-or-nothing:
+        returns False — taking no pages — when the slot is at
+        ``max_pages_per_slot`` or the free list is short; the caller
+        (engine) then preempts somebody rather than decoding into pages the
+        slot does not own."""
+        owned = self._owned.get(slot)
+        if owned is None:
+            raise ValueError(f"slot {slot} holds no pages to grow")
+        if len(owned) + n > self.max_pages_per_slot or n > len(self._free):
+            return False
+        for _ in range(n):
+            page = self._free.pop()
+            self._table[slot, len(owned)] = page
+            owned.append(page)
+        return True
+
+    def num_owned(self, slot: int) -> int:
+        return len(self._owned.get(slot, ()))
+
+    def capacity(self, slot: int) -> int:
+        """Tokens the slot's current pages can hold."""
+        return self.num_owned(slot) * self.page_size
 
     def release(self, slot: int) -> list[int]:
         """Return ``slot``'s pages to the free list and point its table row

@@ -59,10 +59,14 @@ def _abstract_bytes(cfg: ModelConfig, spec: BatchSpec) -> int:
 
 def trial(cfg: ModelConfig, spec: BatchSpec, *,
           budget_bytes: Optional[int] = None,
-          execute: bool = False) -> bool:
+          execute: bool = False,
+          min_pages: Optional[int] = None) -> bool:
     """Is ``spec`` feasible?  Abstract bytes vs budget, plus (optionally)
-    a real one-step compile-and-run at that shape."""
-    if spec.num_slots < 1 or spec.num_pages < spec.max_pages_per_slot:
+    a real one-step compile-and-run at that shape.  ``min_pages`` relaxes
+    the pool floor below one slot's worst case — for optimistic-admission
+    pools that deliberately undersize and preempt under pressure."""
+    floor = spec.max_pages_per_slot if min_pages is None else min_pages
+    if spec.num_slots < 1 or spec.num_pages < floor:
         return False
     if budget_bytes is not None:
         # 1.25x slack for activations / XLA workspace
@@ -89,11 +93,19 @@ def trial(cfg: ModelConfig, spec: BatchSpec, *,
 
 def max_feasible_slots(cfg: ModelConfig, *, page_size: int, max_seq: int,
                        budget_bytes: Optional[int] = None,
-                       execute: bool = False, hi: int = 256) -> BatchSpec:
-    """Binary-search the largest feasible ``num_slots`` (each slot carrying
-    its full ``max_seq`` page reservation).  Raises if even one slot does
-    not fit."""
-    ppr = max(1, math.ceil(max_seq / page_size))
+                       execute: bool = False, hi: int = 256,
+                       pages_per_slot: Optional[int] = None) -> BatchSpec:
+    """Binary-search the largest feasible ``num_slots``.  By default each
+    slot carries its full ``max_seq`` page reservation; ``pages_per_slot``
+    overrides that per-slot count to size an *optimistic-admission* pool
+    (``EngineConfig(admission="optimistic")``) below worst case — more
+    slots fit the same budget, and the engine preempts when the gamble
+    loses.  Raises if even one slot does not fit."""
+    worst = max(1, math.ceil(max_seq / page_size))
+    ppr = worst if pages_per_slot is None else int(pages_per_slot)
+    if not 1 <= ppr <= worst:
+        raise ValueError(f"pages_per_slot must be in [1, {worst}] "
+                         f"(worst case for max_seq={max_seq})")
 
     def spec(b):
         return BatchSpec(num_slots=b, num_pages=b * ppr,
@@ -101,7 +113,7 @@ def max_feasible_slots(cfg: ModelConfig, *, page_size: int, max_seq: int,
 
     def ok(b):
         return trial(cfg, spec(b), budget_bytes=budget_bytes,
-                     execute=execute)
+                     execute=execute, min_pages=ppr)
 
     if not ok(1):
         raise ValueError(

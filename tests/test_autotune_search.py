@@ -307,8 +307,22 @@ def test_cache_corrupt_entry_is_miss(tmp_path):
     key = tunecache.cache_key(anything=1)
     tc.store(key, {"results": []})
     assert tc.lookup(key) is not None
-    (tmp_path / f"{key}.json").write_text("{not json")
-    assert tc.lookup(key) is None
+    path = tmp_path / f"{key}.json"
+    path.write_text("{not json")
+    with pytest.warns(RuntimeWarning, match="corrupted"):
+        assert tc.lookup(key) is None
+    assert not path.exists()                 # discarded, warns only once
+    tc.store(key, {"results": [1]})          # re-tune result lands cleanly
+    assert tc.lookup(key)["results"] == [1]
+
+
+def test_cache_store_failure_is_nonfatal(tmp_path):
+    blocker = tmp_path / "occupied"
+    blocker.write_text("")                   # parent path is a *file*
+    tc = tunecache.TuneCache(blocker / "cache")
+    with pytest.warns(RuntimeWarning, match="not persisted"):
+        tc.store("deadbeef", {"results": []})
+    assert tc.lookup("deadbeef") is None     # plain miss, no exception
 
 
 def test_cache_disabled_by_env(monkeypatch):
