@@ -22,6 +22,11 @@ if [ "${rc}" -eq 5 ]; then
 elif [ "${rc}" -ne 0 ]; then
     exit "${rc}"
 fi
+# static verifier gate: every config's fused graphs (forward + derived
+# backward) and the tuner's top schedules swept through the race/aliasing/
+# invariance analyzer — pure analysis, no kernel runs, exits nonzero on any
+# error-severity diagnostic (docs/static_analysis.md).
+python -m repro.analysis.lint --all-configs
 python benchmarks/bench_fusion.py --smoke
 # seeded-dropout determinism smoke: the in-kernel counter PRNG must yield
 # bit-identical outputs across two fresh compilations of the same seed, on

@@ -1,0 +1,25 @@
+"""``repro.analysis`` — the static schedule/graph verifier.
+
+Checks schedules and graphs symbolically, before anything runs:
+
+  * :mod:`~repro.analysis.footprint` — write-footprint race detection and
+    band-ordering legality for planned loop nests (``TPP1xx``);
+  * :mod:`~repro.analysis.graphlint` — TppGraph well-formedness and PRNG
+    salt lint (``TPP2xx``);
+  * :mod:`~repro.analysis.invariance` — cross-subsystem contracts: tune-
+    cache key completeness, donation aliasing (``TPP3xx``);
+  * :mod:`~repro.analysis.lint` — the CLI driver
+    (``python -m repro.analysis.lint --all-configs``).
+
+``ThreadedLoop._plan`` and ``fusion.compile`` consult these passes, so an
+illegal candidate is rejected with the same coded diagnostic the CLI
+prints.  Catalog and theory: docs/static_analysis.md.
+"""
+from repro.analysis.diagnostics import (AnalysisWarning, CATALOG, Diagnostic,
+                                        diag, enforce)
+from repro.analysis import footprint, graphlint, invariance
+
+__all__ = [
+    "AnalysisWarning", "CATALOG", "Diagnostic", "diag", "enforce",
+    "footprint", "graphlint", "invariance",
+]

@@ -1,0 +1,169 @@
+"""Diagnostic taxonomy for the static verifier (``repro.analysis``).
+
+Every legality finding in the repository — schedule races, graph
+well-formedness, invariance hazards — is one of the stable codes below.
+The same code reaches the user three ways:
+
+  * as the ``.code`` attribute of a raised ``LegalityError`` /
+    ``FusionLegalityError`` (tests pin diagnostics without string matching);
+  * as a :class:`Diagnostic` record from an analysis pass (the lint CLI
+    prints them and exits nonzero on any error severity);
+  * as a ``warnings.warn`` when the caller opted into a downgrade
+    (``ThreadedLoop(allow_races=True)`` keeps the analysis but demotes the
+    race finding to an :class:`AnalysisWarning`).
+
+Code ranges (see docs/static_analysis.md for the full catalog):
+
+  * ``TPP1xx`` — schedule / loop-nest legality (races, band ordering)
+  * ``TPP2xx`` — TppGraph structure (epilogue DAG well-formedness, PRNG)
+  * ``TPP3xx`` — cross-subsystem invariance (tune-cache keys, donation)
+
+``TPP000`` is the reserved default for errors raised before this taxonomy
+existed or not yet classified; no pass emits it deliberately.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+__all__ = [
+    "Diagnostic", "AnalysisWarning", "CATALOG", "diag", "enforce",
+]
+
+
+class AnalysisWarning(UserWarning):
+    """A verifier finding demoted to a warning (e.g. ``allow_races=True``)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    """One finding of a static analysis pass."""
+
+    code: str        # stable identifier, e.g. "TPP101"
+    name: str        # kebab-case label, e.g. "racy-parallel-reduction"
+    severity: str    # "error" | "warning"
+    message: str     # human explanation, incl. offending spec / site detail
+    site: str = ""   # location: spec string, graph:node, module attribute
+
+    def render(self) -> str:
+        loc = f" [{self.site}]" if self.site else ""
+        return f"{self.code} {self.name}{loc}: {self.message}"
+
+
+# code -> (name, default severity, one-line doc). Codes are append-only:
+# never renumber or reuse — tests and tooling pin them.
+CATALOG: dict[str, tuple[str, str, str]] = {
+    # --- TPP1xx: schedule / loop-nest legality -------------------------
+    "TPP101": ("racy-parallel-reduction", "error",
+               "a parallel-marked loop level does not index the output "
+               "write footprint, so concurrent iterations write the same "
+               "blocks"),
+    "TPP102": ("reduction-outside-innermost-band", "error",
+               "a reduction loop level sits above an output-indexing level; "
+               "output-block revisits would not be consecutive (undefined "
+               "on the Pallas TPU grid)"),
+    "TPP103": ("epilogue-band-order", "error",
+               "a reducing epilogue needs every N level inside the deepest "
+               "M level so the row panel is complete when the row closes"),
+    "TPP104": ("racy-parallel-statistics", "error",
+               "the N loop carries PARALLEL semantics but the reducing "
+               "epilogue's row panel / (sum, sum-sq) strip is indexed by M "
+               "only — concurrent N iterations race on the strip"),
+    "TPP105": ("sharded-reduction-statistics", "error",
+               "N is sharded over a mesh axis under a reducing epilogue; "
+               "each shard would close partial row statistics with no "
+               "cross-shard combine"),
+    "TPP106": ("sharded-prng-coords", "error",
+               "an in-kernel PRNG epilogue keys its draw on global (M, N) "
+               "coordinates, but an output loop is mesh-sharded — block "
+               "coordinates are shard-local, so bits would repeat"),
+    "TPP107": ("spec-structure", "error",
+               "the spec string does not cover the declared logical loops "
+               "(unknown letter, missing loop, or too many loops)"),
+    "TPP108": ("imperfect-blocking", "error",
+               "a blocking factor does not divide its parent step / extent, "
+               "or the problem shape is not divisible by the tiles"),
+    # --- TPP2xx: TppGraph structure ------------------------------------
+    "TPP201": ("dangling-operand", "error",
+               "a node or root references a value that no operand, root, or "
+               "earlier node defines, or a declared contraction operand is "
+               "never consumed by any root"),
+    "TPP202": ("reducer-collision", "error",
+               "more than one reducing epilogue node in a single graph; the "
+               "lowering supports one row-statistics strip per nest"),
+    "TPP203": ("duplicate-prng-salt", "error",
+               "two same-kind PRNG draws in one compiled graph share a "
+               "salt, so both sites draw identical bits"),
+    "TPP204": ("arity-mismatch", "error",
+               "a node's input count disagrees with the registered op's "
+               "value arity + operand list (or a grad registration "
+               "disagrees with its forward op)"),
+    "TPP205": ("mask-dtype-flow", "warning",
+               "a boolean mask operand is consumed as an arithmetic value "
+               "input; the kernel would compute on raw 0/1 bits"),
+    "TPP206": ("value-visibility", "error",
+               "a post-reduce node references a value that is not row-"
+               "resident when the row closes (not staged, not an operand "
+               "panel)"),
+    "TPP207": ("contraction-operand-value", "warning",
+               "a contraction operand is referenced as an epilogue value; "
+               "legal on the XLA reference path but not Pallas-lowerable "
+               "(the kernel only sees K-indexed tiles at epilogue time)"),
+    "TPP208": ("invalid-output", "error",
+               "a declared graph output names no computed value, or is not "
+               "available at output time"),
+    "TPP209": ("unknown-epilogue-op", "error",
+               "a node uses an op name missing from the epilogue registry"),
+    "TPP210": ("operand-kind-mismatch", "error",
+               "an operand's declared kind disagrees with its use (root "
+               "lhs/rhs kind, node operand slot, unknown kind, trans on a "
+               "non-contraction operand)"),
+    "TPP211": ("duplicate-name", "error",
+               "two operands, roots, nodes, or outputs share a name, or a "
+               "definition shadows an earlier one"),
+    # --- TPP3xx: cross-subsystem invariance ----------------------------
+    "TPP301": ("tune-key-incompleteness", "error",
+               "an attribute the lowering or search branches on is missing "
+               "from the persistent tune-cache key (graph_signature or the "
+               "autotune key schema) — stale entries would collide"),
+    "TPP302": ("stale-tune-cache-entry", "warning",
+               "a persisted tune-cache entry was keyed under an older key "
+               "schema; rerun with --fix-cache to invalidate it"),
+    "TPP303": ("donation-aliasing-hazard", "error",
+               "the serving engine's buffer-donation declaration disagrees "
+               "with the jitted segment signatures (a donated buffer would "
+               "alias a live input such as the weights)"),
+}
+
+
+def diag(code: str, message: str, *, site: str = "",
+         severity: str | None = None) -> Diagnostic:
+    """Build a :class:`Diagnostic` for a catalogued code."""
+    name, default_sev, _doc = CATALOG[code]
+    return Diagnostic(code=code, name=name,
+                      severity=severity or default_sev,
+                      message=message, site=site)
+
+
+def enforce(diags, *, exc=None, downgrade_errors: bool = False,
+            stacklevel: int = 3) -> None:
+    """Raise on the first error-severity diagnostic; warn the rest.
+
+    ``exc`` is the exception class (``LegalityError`` or a subclass — it
+    must accept a ``code=`` keyword); default is ``LegalityError``.  With
+    ``downgrade_errors=True`` (the ``allow_races`` escape) errors are
+    emitted as :class:`AnalysisWarning` instead — the analysis still runs,
+    the finding is still surfaced, only the severity drops.
+    """
+    if exc is None:
+        from repro.core.loops import LegalityError
+        exc = LegalityError
+    first_error = None
+    for d in diags:
+        if d.severity == "error" and not downgrade_errors:
+            if first_error is None:
+                first_error = d
+            continue
+        warnings.warn(d.render(), AnalysisWarning, stacklevel=stacklevel)
+    if first_error is not None:
+        raise exc(first_error.render(), code=first_error.code)

@@ -1,0 +1,110 @@
+"""TppGraph lint (``TPP2xx``) — epilogue-DAG well-formedness as diagnostics.
+
+``TppGraph.validate()`` (run on construction) raises the first structural
+error it finds; since this PR every such raise carries a stable ``.code``
+from the catalog in :mod:`repro.analysis.diagnostics`.  This module turns
+the same findings — plus lint-only passes that are not construction errors
+— into :class:`Diagnostic` records for the CLI driver:
+
+  * **structural**: re-run ``validate()`` and surface its coded error
+    (covers dangling operands, cycles/shadowing, arity vs. registry,
+    reducer collisions, kind mismatches, bad outputs);
+  * **PRNG salts** (``TPP203``): two same-kind counter-PRNG draws sharing a
+    salt draw identical bits — the standalone guard ``fusion.rng.
+    assert_unique_salts`` runs at ``compile()`` time, this pass reports the
+    same finding without compiling;
+  * **dtype flow** (``TPP205``): a boolean ``mask`` operand consumed as an
+    arithmetic value input computes on raw 0/1 bits — legal, suspicious;
+  * **Pallas portability** (``TPP207``): contraction operands referenced as
+    epilogue values keep the graph off the fused kernel path.
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+from repro.analysis.diagnostics import Diagnostic, diag
+
+__all__ = [
+    "lint_graph", "structural_diagnostics", "salt_diagnostics",
+    "dtype_flow_diagnostics", "portability_diagnostics",
+]
+
+
+def structural_diagnostics(graph) -> list[Diagnostic]:
+    """Re-run the construction-time validator, surfacing its coded error as
+    a diagnostic instead of an exception.  A constructed ``TppGraph`` is
+    valid by definition, so this returns ``[]`` for normal graphs — it
+    exists for graph-like objects built outside ``__init__`` (mutation
+    tests, future graph editors)."""
+    from repro.fusion.graph import FusionLegalityError
+    try:
+        graph.validate()
+    except FusionLegalityError as e:
+        return [diag(getattr(e, "code", "TPP201") or "TPP201", str(e),
+                     site=getattr(graph, "name", ""))]
+    return []
+
+
+def salt_diagnostics(graph) -> list[Diagnostic]:
+    """``TPP203`` findings for duplicate PRNG salts (see
+    ``fusion.rng.collect_salt_sites`` for the pairing rules: a forward
+    draw and the derived-backward op that regenerates it legitimately share
+    one salt — two *same-kind* draws never do)."""
+    from repro.fusion import rng
+    return [
+        diag("TPP203", msg, site=f"{graph.name}:{a}+{b}")
+        for a, b, msg in rng.salt_collisions(graph)
+    ]
+
+
+def dtype_flow_diagnostics(graph) -> list[Diagnostic]:
+    """``TPP205``: boolean mask operands used in arithmetic value slots."""
+    from repro.fusion.graph import EPILOGUE_OPS
+    out = []
+    mask_names = {o.name for o in graph.operands if o.kind == "mask"}
+    for nd in graph.nodes:
+        op = EPILOGUE_OPS[nd.op]
+        for ref in nd.inputs[:op.value_arity]:
+            if ref in mask_names and nd.op != "dropout":
+                out.append(diag(
+                    "TPP205",
+                    f"graph {graph.name!r}: node {nd.name!r} ({nd.op}) "
+                    f"consumes boolean mask operand {ref!r} as an "
+                    "arithmetic value — the kernel computes on raw 0/1 "
+                    "bits; if intended, declare the operand as kind "
+                    "'tile'.",
+                    site=f"{graph.name}:{nd.name}"))
+    return out
+
+
+def portability_diagnostics(graph) -> list[Diagnostic]:
+    """``TPP207``: graphs that will refuse the fused Pallas lowering."""
+    from repro.fusion.lowering import contraction_operand_values
+    bad = contraction_operand_values(graph)
+    if not bad:
+        return []
+    return [diag(
+        "TPP207",
+        f"graph {graph.name!r}: contraction operand(s) {sorted(bad)} are "
+        "referenced as epilogue values — only the XLA reference path can "
+        "lower this graph (the fused kernel sees K-indexed tiles only at "
+        "epilogue time).",
+        site=graph.name)]
+
+
+def lint_graph(graph) -> list[Diagnostic]:
+    """All graph-level passes over one (constructed) ``TppGraph``."""
+    diags = structural_diagnostics(graph)
+    if diags:
+        return diags        # structure broken — later passes assume it
+    diags += salt_diagnostics(graph)
+    diags += dtype_flow_diagnostics(graph)
+    diags += portability_diagnostics(graph)
+    return diags
+
+
+def lint_graphs(graphs: Iterable) -> list[Diagnostic]:
+    out: list[Diagnostic] = []
+    for g in graphs:
+        out.extend(lint_graph(g))
+    return out

@@ -1,0 +1,210 @@
+"""Cross-subsystem invariance checks (``TPP3xx``).
+
+These passes verify contracts that no single module can see broken:
+
+  * **Tune-cache key completeness** (``TPP301``): every attribute the
+    lowering or the search branches on must reach the persistent cache key.
+    Two declarations are checked against reality by introspection —
+    ``fusion.cost.SIGNATURE_FIELDS`` (the IR fields ``graph_signature``
+    encodes) against ``dataclasses.fields`` of the IR classes, and
+    ``core.autotune.TUNE_KEY_PARAMS`` / ``TUNE_KEY_EXEMPT`` against the
+    real signature of ``autotune_with_stats``.  Adding an IR field or a
+    search knob without extending the key (or documenting the exemption)
+    fails the lint gate before a stale cache hit can serve a wrong
+    schedule.
+  * **Stale cache entries** (``TPP302``): persisted entries record the key
+    schema that produced them; entries from an older schema are flagged and
+    ``lint --fix-cache`` deletes them.
+  * **Donation aliasing** (``TPP303``): the serving engine donates the KV
+    caches and decode state into its jitted bodies.  The donated-argument
+    set is a named declaration (``serve.engine.DONATED_ARGS``) resolved to
+    positions by signature inspection; this pass re-derives the positions
+    and rejects declarations that would donate a live input (the weights)
+    or name a parameter that does not exist.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import json
+from typing import Optional
+
+from repro.analysis.diagnostics import Diagnostic, diag
+
+__all__ = [
+    "signature_coverage_diagnostics", "tune_key_coverage_diagnostics",
+    "cache_schema_diagnostics", "donation_diagnostics", "check_invariance",
+]
+
+
+def signature_coverage_diagnostics(classes: Optional[dict] = None,
+                                   declared: Optional[dict] = None
+                                   ) -> list[Diagnostic]:
+    """``graph_signature`` completeness: every field of every IR dataclass
+    must be declared covered (encoded in the signature string) — a field
+    added to the IR without extending the signature lets schedules tuned
+    for differently-lowered graphs collide in the tune cache."""
+    from repro.fusion import cost, graph as graph_mod
+    if classes is None:
+        classes = {
+            "TppGraph": graph_mod.TppGraph,
+            "OperandSpec": graph_mod.OperandSpec,
+            "Node": graph_mod.Node,
+            "ContractionRoot": graph_mod.ContractionRoot,
+        }
+    if declared is None:
+        declared = cost.SIGNATURE_FIELDS
+    out = []
+    for cls_name, cls in classes.items():
+        actual = {f.name for f in dataclasses.fields(cls)}
+        covered = set(declared.get(cls_name, ()))
+        for f in sorted(actual - covered):
+            out.append(diag(
+                "TPP301",
+                f"field {cls_name}.{f} is not encoded in graph_signature — "
+                "tune-cache entries could be served across graphs that "
+                "lower differently; extend graph_signature and "
+                "cost.SIGNATURE_FIELDS (bump tunecache.CACHE_VERSION if "
+                "the encoding changes).",
+                site=f"fusion.cost.graph_signature:{cls_name}.{f}"))
+        for f in sorted(covered - actual):
+            out.append(diag(
+                "TPP301",
+                f"cost.SIGNATURE_FIELDS declares {cls_name}.{f} covered "
+                "but the dataclass has no such field — stale declaration.",
+                site=f"fusion.cost.SIGNATURE_FIELDS:{cls_name}.{f}"))
+    return out
+
+
+def tune_key_coverage_diagnostics(params=None) -> list[Diagnostic]:
+    """``autotune_with_stats`` key completeness: every keyword the search
+    accepts is either hashed into the persistent key (``TUNE_KEY_PARAMS``)
+    or carries a documented exemption (``TUNE_KEY_EXEMPT``)."""
+    from repro.core import autotune
+    if params is None:
+        params = [
+            p for p in inspect.signature(
+                autotune.autotune_with_stats).parameters
+        ]
+    keyed = set(autotune.TUNE_KEY_PARAMS)
+    exempt = set(autotune.TUNE_KEY_EXEMPT)
+    out = []
+    for p in sorted(keyed & exempt):
+        out.append(diag(
+            "TPP301",
+            f"autotune parameter {p!r} appears in both TUNE_KEY_PARAMS and "
+            "TUNE_KEY_EXEMPT — pick one.",
+            site=f"core.autotune:{p}"))
+    for p in params:
+        if p not in keyed and p not in exempt:
+            out.append(diag(
+                "TPP301",
+                f"autotune_with_stats accepts {p!r} but it is neither "
+                "hashed into the tune-cache key (TUNE_KEY_PARAMS) nor "
+                "declared result-neutral (TUNE_KEY_EXEMPT) — searches "
+                "differing only in this knob would collide on one cache "
+                "entry.",
+                site=f"core.autotune.autotune_with_stats:{p}"))
+    for p in sorted((keyed | exempt) - set(params)):
+        out.append(diag(
+            "TPP301",
+            f"TUNE_KEY_PARAMS/TUNE_KEY_EXEMPT name {p!r} but "
+            "autotune_with_stats has no such parameter — stale "
+            "declaration.",
+            site=f"core.autotune:{p}"))
+    return out
+
+
+def cache_schema_diagnostics(cache=None, *, fix: bool = False
+                             ) -> list[Diagnostic]:
+    """``TPP302``: scan the persistent tune cache for entries keyed under a
+    different key schema than the current ``TUNE_KEY_SCHEMA`` (including
+    pre-schema entries that recorded none).  With ``fix=True`` the stale
+    entries are deleted so the next search re-tunes them."""
+    from repro.core import autotune, tunecache
+    if cache is None:
+        cache = tunecache.default_cache()
+    if cache is None or not cache.path.is_dir():
+        return []
+    want = list(autotune.TUNE_KEY_SCHEMA)
+    out = []
+    for p in sorted(cache.path.glob("*.json")):
+        try:
+            with open(p) as f:
+                entry = json.load(f)
+        except (OSError, ValueError):
+            continue  # lookup() already self-heals corrupt entries
+        schema = entry.get("key_schema") if isinstance(entry, dict) else None
+        if schema == want:
+            continue
+        action = "deleted" if fix else "rerun lint --fix-cache to delete"
+        out.append(diag(
+            "TPP302",
+            f"tune-cache entry {p.name} was stored under key schema "
+            f"{schema!r} (current: {len(want)} components) — a key built "
+            f"today can never hit it, and it may mask a component the old "
+            f"schema did not hash; {action}.",
+            site=str(p)))
+        if fix:
+            try:
+                p.unlink()
+            except OSError:
+                pass
+    return out
+
+
+def donation_diagnostics(donated=None, fns=None) -> list[Diagnostic]:
+    """``TPP303``: validate the engine's buffer-donation declaration against
+    the jitted bodies' real signatures."""
+    from repro.serve import engine
+    if donated is None:
+        donated = engine.DONATED_ARGS
+    if fns is None:
+        fns = (engine._prefill_one, engine._decode_segment)
+    out = []
+    if len(set(donated)) != len(tuple(donated)):
+        out.append(diag(
+            "TPP303",
+            f"DONATED_ARGS {tuple(donated)!r} names a buffer twice — jit "
+            "would receive duplicate donate_argnums.",
+            site="serve.engine.DONATED_ARGS"))
+    if "params" in donated:
+        out.append(diag(
+            "TPP303",
+            "DONATED_ARGS includes 'params' — the weights are passed to "
+            "every step; donating them invalidates the live parameter "
+            "buffers after the first call.",
+            site="serve.engine.DONATED_ARGS"))
+    for fn in fns:
+        params = list(inspect.signature(fn).parameters)
+        site = f"serve.engine.{fn.__name__}"
+        for name in donated:
+            if name not in params:
+                out.append(diag(
+                    "TPP303",
+                    f"DONATED_ARGS names {name!r} but {fn.__name__} has no "
+                    f"such parameter (signature: {params}) — donate_argnums "
+                    "would silently donate a different buffer.",
+                    site=site))
+                continue
+            pos = params.index(name) - engine.BOUND_ARGS
+            if pos < 1:
+                out.append(diag(
+                    "TPP303",
+                    f"donating {name!r} at bound position {pos} of "
+                    f"{fn.__name__} would donate a live input "
+                    "(cfg/ecfg/params are reused across calls; XLA may "
+                    "alias the output into a buffer the next step still "
+                    "reads).",
+                    site=site))
+    return out
+
+
+def check_invariance(*, cache=None, fix_cache: bool = False
+                     ) -> list[Diagnostic]:
+    """All invariance passes, as the lint driver runs them."""
+    diags = signature_coverage_diagnostics()
+    diags += tune_key_coverage_diagnostics()
+    diags += donation_diagnostics()
+    diags += cache_schema_diagnostics(cache, fix=fix_cache)
+    return diags

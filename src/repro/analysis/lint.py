@@ -1,0 +1,234 @@
+"""``python -m repro.analysis.lint`` — sweep the repository's static surface.
+
+Pure analysis: no kernel is compiled or executed.  The sweep covers
+
+  * the fusion **library graphs** instantiated for every model config's
+    knobs (activation, gated MLP, norm flavor, dropout) — forward *and*
+    derived backward graphs — through every ``TPP2xx`` graph pass;
+  * the **top autotuned schedules** for each distinct (graph, shape) pair
+    drawn from the config zoo's real dimensions, re-verified against the
+    footprint/band passes (``TPP1xx``) — the tuner's legal frontier must be
+    race-free, and a tuner regression that emits a racy schedule fails here
+    before it can run;
+  * the **invariance** passes (``TPP3xx``): tune-cache key completeness,
+    engine donation declaration, and (with ``--fix-cache``) stale
+    tune-cache entries.
+
+Exit status is nonzero iff any error-severity diagnostic fired.  Typical
+invocations::
+
+    python -m repro.analysis.lint                  # graphs + invariance
+    python -m repro.analysis.lint --all-configs    # the full CI gate
+    python -m repro.analysis.lint --fix-cache      # also purge stale cache
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from repro.analysis import footprint, graphlint, invariance
+from repro.analysis.diagnostics import Diagnostic
+
+__all__ = ["run_lint", "main", "config_graphs", "config_shapes"]
+
+
+def _library_defaults():
+    """The library graphs at their canonical knobs (shape-independent)."""
+    from repro.fusion import library
+    return [
+        library.fused_output_graph(dropout_rate=0.1),
+        library.fused_output_graph(dropout_rate=0.1, rng_dropout=False),
+        library.fused_mlp_graph("gelu"),
+        library.fused_gated_mlp_graph("silu"),
+        library.fused_qkv_graph(),
+        library.fused_attn_out_graph(residual=True, norm="layernorm",
+                                     dropout_rate=0.1),
+    ]
+
+
+def config_graphs(cfg, notes: list) -> list:
+    """The fused graphs ``models.blocks`` would route this config through,
+    at the config's own knobs."""
+    from repro.fusion import library
+    from repro.fusion.graph import EPILOGUE_OPS
+    act = cfg.mlp_activation
+    if act not in EPILOGUE_OPS:
+        notes.append(f"{cfg.name}: activation {act!r} has no epilogue op; "
+                     "linting the gelu variant instead")
+        act = "gelu"
+    rate = cfg.dropout_rate if cfg.dropout_rate > 0.0 else 0.1
+    graphs = [
+        library.fused_gated_mlp_graph(act) if cfg.gated_mlp
+        else library.fused_mlp_graph(act),
+        library.fused_qkv_graph(),
+        library.fused_output_graph(dropout_rate=rate),
+    ]
+    norm = cfg.norm if cfg.norm in ("layernorm", "rmsnorm") else ""
+    graphs.append(library.fused_attn_out_graph(
+        residual=True, norm=norm, dropout_rate=rate))
+    return graphs
+
+
+def config_shapes(cfg, graphs, *, m: int) -> list:
+    """(graph, (m, k, n)) pairs at the config's real projection shapes."""
+    qdim = cfg.num_heads * cfg.head_dim
+    d_ff = cfg.moe_d_ff if getattr(cfg, "is_moe", False) and cfg.moe_d_ff \
+        else cfg.d_ff
+    out = []
+    for g in graphs:
+        if g.name.startswith("fused_mlp") or \
+                g.name.startswith("fused_gated_mlp"):
+            out.append((g, (m, cfg.d_model, d_ff)))
+        elif g.name.startswith("fused_qkv"):
+            out.append((g, (m, cfg.d_model, qdim)))
+        elif g.name.startswith("fused_attn_out"):
+            out.append((g, (m, qdim, cfg.d_model)))
+        else:  # fused_output: the d_ff -> d_model down projection
+            out.append((g, (m, d_ff, cfg.d_model)))
+    return out
+
+
+def _backward_graphs(graph, notes: list) -> list:
+    from repro.fusion import autodiff
+    try:
+        return list(autodiff.backward_graphs(graph).values())
+    except Exception as e:  # derivation gap (e.g. no grad rule) — not a lint
+        notes.append(f"{graph.name}: backward derivation skipped ({e})")
+        return []
+
+
+def _verify_top_schedules(graph, m, k, n, *, max_candidates, top_k,
+                          notes: list) -> tuple[list[Diagnostic], int]:
+    """Autotune one (graph, shape) and re-verify every returned schedule
+    with the footprint passes — the no-false-positive property, enforced
+    over the zoo."""
+    import jax.numpy as jnp
+    from repro.core.loops import ThreadedLoop
+    from repro.fusion import cost, lowering
+    from repro.kernels.brgemm import pick_tiles
+    try:
+        results = cost.autotune_graph(
+            graph, m, k, n, max_candidates=max_candidates, top_k=top_k,
+            use_cache=False)
+    except Exception as e:
+        notes.append(f"{graph.name}@({m},{k},{n}): autotune failed ({e})")
+        return [], 0
+    if not results:
+        notes.append(f"{graph.name}@({m},{k},{n}): tuner returned no legal "
+                     "schedule")
+        return [], 0
+    diags: list[Diagnostic] = []
+    tiles = pick_tiles(m, k, n, jnp.dtype(jnp.float32))
+    sgraph = lowering.simplify_graph(graph)
+    for r in results:
+        kw = cost.schedule_kwargs(r.candidate)
+        loops, _in_maps, _out_map = lowering.build_nest_inputs(
+            sgraph, m, k, n, tiles, kw["block_steps"])
+        tl = ThreadedLoop(loops, kw["spec_string"],
+                          reduction_letters=("a",))
+        diags.extend(footprint.verify_schedule(tl.nest, sgraph))
+    return diags, len(results)
+
+
+def run_lint(*, configs=(), all_configs: bool = False, m: int = 256,
+             max_candidates: int = 32, top_k: int = 4,
+             fix_cache: bool = False, out=sys.stdout) -> int:
+    """Run the sweep; print findings; return the number of errors."""
+    from repro.configs import base as config_base
+    from repro.fusion.cost import graph_signature
+
+    t0 = time.perf_counter()
+    notes: list[str] = []
+    diags: list[Diagnostic] = []
+
+    names = list(configs)
+    if all_configs:
+        names = list(config_base.ARCH_IDS)
+
+    # -- gather the graph population (dedup by signature) ----------------
+    graphs: dict[str, object] = {}
+    sweeps: dict[tuple, tuple] = {}       # (sig, m, k, n) -> (graph, shape)
+    for g in _library_defaults():
+        graphs.setdefault(graph_signature(g), g)
+    n_fwd = n_bwd = 0
+    for name in names:
+        cfg = config_base.get_config(name)
+        cgraphs = config_graphs(cfg, notes)
+        for g, shape in config_shapes(cfg, cgraphs, m=m):
+            if min(shape) <= 0:   # e.g. an SSM config with no MLP (d_ff=0)
+                notes.append(f"{name}: {g.name}@{shape} skipped "
+                             "(degenerate dimension)")
+                continue
+            sig = graph_signature(g)
+            if sig not in graphs:
+                graphs[sig] = g
+            sweeps.setdefault((sig,) + shape, (g, shape))
+    for g in list(graphs.values()):
+        n_fwd += 1
+        for bg in _backward_graphs(g, notes):
+            n_bwd += 1
+            graphs.setdefault(graph_signature(bg), bg)
+
+    # -- graph passes ----------------------------------------------------
+    diags.extend(graphlint.lint_graphs(graphs.values()))
+
+    # -- schedule passes over the tuner's legal frontier -----------------
+    n_scheds = 0
+    for (_sig, sm, sk, sn), (g, _shape) in sweeps.items():
+        d, n = _verify_top_schedules(
+            g, sm, sk, sn, max_candidates=max_candidates, top_k=top_k,
+            notes=notes)
+        diags.extend(d)
+        n_scheds += n
+
+    # -- invariance ------------------------------------------------------
+    diags.extend(invariance.check_invariance(fix_cache=fix_cache))
+
+    # -- report ----------------------------------------------------------
+    errors = [d for d in diags if d.severity == "error"]
+    warns = [d for d in diags if d.severity != "error"]
+    for d in errors + warns:
+        print(("error: " if d.severity == "error" else "warning: ")
+              + d.render(), file=out)
+    for note in notes:
+        print(f"note: {note}", file=out)
+    dt = time.perf_counter() - t0
+    print(
+        f"repro.analysis.lint: {len(graphs)} graphs ({n_fwd} fwd canonical, "
+        f"{n_bwd} derived backward), {len(sweeps)} (graph, shape) sweeps, "
+        f"{n_scheds} tuned schedules verified, {len(names)} configs — "
+        f"{len(errors)} error(s), {len(warns)} warning(s) in {dt:.1f}s",
+        file=out)
+    return len(errors)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="Static schedule/graph verifier — see "
+                    "docs/static_analysis.md")
+    ap.add_argument("--all-configs", action="store_true",
+                    help="sweep every registered model config")
+    ap.add_argument("--configs", default="",
+                    help="comma-separated config names to sweep")
+    ap.add_argument("--m", type=int, default=256,
+                    help="token dimension M for the shape sweep")
+    ap.add_argument("--max-candidates", type=int, default=32,
+                    help="tuner budget per (graph, shape)")
+    ap.add_argument("--top-k", type=int, default=4,
+                    help="schedules re-verified per (graph, shape)")
+    ap.add_argument("--fix-cache", action="store_true",
+                    help="delete tune-cache entries stored under a stale "
+                         "key schema")
+    args = ap.parse_args(argv)
+    configs = tuple(c for c in args.configs.split(",") if c)
+    n_errors = run_lint(
+        configs=configs, all_configs=args.all_configs, m=args.m,
+        max_candidates=args.max_candidates, top_k=args.top_k,
+        fix_cache=args.fix_cache)
+    return 1 if n_errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

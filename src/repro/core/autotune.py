@@ -704,9 +704,52 @@ def _search_exhaustive(
 
 _CACHE_STORE_K = 32
 
+# --- persistent-key completeness contract (checked by repro.analysis,
+# TPP301) -------------------------------------------------------------------
+# Every parameter of ``autotune_with_stats`` must appear in exactly one of
+# these two sets.  TUNE_KEY_PARAMS are hashed into the persistent cache key;
+# TUNE_KEY_EXEMPT parameters are documented result-neutral or handled by a
+# dedicated mechanism.  Adding a search knob without classifying it fails
+# the lint gate — an unclassified knob would let two different searches
+# collide on one cache entry.
+TUNE_KEY_PARAMS = frozenset({
+    "loops", "in_maps", "out_map",            # keyed via loop_signature/maps
+    "dtype", "flops_per_body", "tile_mnk", "reduction_letters",
+    "epilogue_flops", "scratch_bytes", "max_blockings", "parallel_letters",
+    "mesh_decomp", "target", "max_candidates", "seed", "strategy", "top_k",
+    "cache_extra",                             # keyed as ``extra``
+})
+TUNE_KEY_EXEMPT = frozenset({
+    # measured times re-rank on a hit and upgrade the stored entry in place
+    # (see the measure_fn branch of the lookup path); the model ranking the
+    # key protects is measurement-independent
+    "measure_fn", "measure_top_k",
+    # scoring batch size — identical results, different pipelining
+    "batch_size",
+    # unkeyed callables: searches using them skip the persistent cache
+    # entirely unless a distinguishing cache_extra is supplied
+    # (``hooks_unkeyed`` below)
+    "spec_filter", "validate_fn",
+    # cache plumbing, not search inputs
+    "cache", "cache_dir", "use_cache",
+})
+
+# Component names of the persisted key, recorded in every stored entry as
+# ``key_schema`` so ``repro.analysis.lint --fix-cache`` can invalidate
+# entries keyed under an older schema (TPP302).
+TUNE_KEY_SCHEMA = (
+    "loops", "maps", "dtype", "flops_per_body", "tile_mnk",
+    "reduction_letters", "epilogue_flops", "scratch_bytes", "max_blockings",
+    "parallel_letters", "mesh_decomp", "target", "max_candidates", "seed",
+    "strategy", "top_k", "extra",
+)
+
 
 def _tune_cache_key(loops, in_maps, out_map, **params) -> str:
     all_maps = list(in_maps) + [out_map]
+    assert set(params) | {"loops", "maps"} == set(TUNE_KEY_SCHEMA), \
+        "tune-cache key components drifted from TUNE_KEY_SCHEMA — update " \
+        "both together (and let lint --fix-cache invalidate old entries)"
     return tunecache.cache_key(
         loops=loop_signature(loops),
         maps=[(tm.letters, tm.tile, tm.layout) for tm in all_maps],
@@ -717,6 +760,7 @@ def _tune_cache_key(loops, in_maps, out_map, **params) -> str:
 def _entry_from_results(results: Sequence[TuneResult],
                         stats: SearchStats) -> dict:
     return {
+        "key_schema": list(TUNE_KEY_SCHEMA),
         "results": [
             {
                 "spec": r.candidate.spec_string,

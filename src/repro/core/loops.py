@@ -26,7 +26,18 @@ __all__ = [
 
 class LegalityError(ValueError):
     """Raised when a spec string is syntactically fine but illegal for the
-    declared loops (imperfect blocking, unknown letter, racy parallelization)."""
+    declared loops (imperfect blocking, unknown letter, racy parallelization).
+
+    Every raise carries a stable diagnostic ``code`` from the catalog in
+    ``repro.analysis.diagnostics`` (``TPP000`` = unclassified), so tests and
+    tooling can pin the finding without matching message strings."""
+
+    code = "TPP000"
+
+    def __init__(self, *args, code: Optional[str] = None):
+        super().__init__(*args)
+        if code is not None:
+            self.code = code
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,7 +85,10 @@ class LoopSpec:
         if n_blockings > len(self.block_steps):
             raise LegalityError(
                 f"loop {self.name or '?'}: {n_occurrences} occurrences need "
-                f"{n_blockings} block steps, only {len(self.block_steps)} declared"
+                f"{n_blockings} block steps, only {len(self.block_steps)} "
+                "declared — declare more block_steps or drop the extra "
+                "occurrence from the spec string",
+                code="TPP108",
             )
         outer = tuple(self.block_steps[:n_blockings])
         return outer + (self.step,)
@@ -205,36 +219,53 @@ class ThreadedLoop:
         spec, loops = self.spec, self.loops
         # Every letter used must correspond to a declared loop; every declared
         # loop must appear at least once (paper requires full traversal).
-        for o in spec.occurrences:
+        for i, o in enumerate(spec.occurrences):
             if o.loop_index >= len(loops):
                 raise LegalityError(
-                    f"{spec.raw!r}: letter {o.letter!r} has no declared loop"
+                    f"{spec.raw!r}: letter {o.letter!r} (occurrence {i}) has "
+                    f"no declared loop — only {len(loops)} loops declared "
+                    f"(letters {self.letters[:len(loops)]})",
+                    code="TPP107",
                 )
         missing = [
             l for i, l in enumerate(self.letters)
             if not spec.occurrences_of(l)
         ]
         if missing:
-            raise LegalityError(f"{spec.raw!r}: loops {missing} never appear")
+            raise LegalityError(
+                f"{spec.raw!r}: loops {missing} never appear — the paper "
+                "requires full traversal; add each declared letter to the "
+                "spec string at least once",
+                code="TPP107",
+            )
 
         # Assign steps per occurrence of each letter (outer→inner).
         occ_count = {l: len(spec.occurrences_of(l)) for l in self.letters}
         steps: dict[str, tuple[int, ...]] = {}
         for i, letter in enumerate(self.letters):
             loop = loops[i]
-            s = loop.steps_for(occ_count[letter])
+            try:
+                s = loop.steps_for(occ_count[letter])
+            except LegalityError as e:
+                raise LegalityError(f"{spec.raw!r}: {e}", code=e.code) from e
             # Perfect-nesting legality (paper POC): each outer step must be a
             # multiple of the next inner one, and the extent a multiple of the
             # outermost step.
             for outer, inner in zip(s, s[1:]):
                 if outer % inner != 0:
                     raise LegalityError(
-                        f"loop {letter!r}: imperfect blocking {outer} % {inner} != 0"
+                        f"{spec.raw!r}: loop {letter!r} has imperfect "
+                        f"blocking {outer} % {inner} != 0 — pick block "
+                        "steps where each outer step is a multiple of the "
+                        "next inner one",
+                        code="TPP108",
                     )
             if loop.extent % s[0] != 0:
                 raise LegalityError(
-                    f"loop {letter!r}: extent {loop.extent} not divisible by "
-                    f"outermost step {s[0]}"
+                    f"{spec.raw!r}: loop {letter!r} extent {loop.extent} not "
+                    f"divisible by outermost step {s[0]} — choose a "
+                    "divisor of the extent",
+                    code="TPP108",
                 )
             steps[letter] = s
 
@@ -254,13 +285,10 @@ class ThreadedLoop:
                     raise LegalityError(
                         f"{spec.raw!r}: {letter!r} level {d} trip {trip} not "
                         f"divisible by {o.ways} ways over axis {o.mesh_axis!r}"
+                        " — pick a ways count dividing the trip, or change "
+                        "the blocking",
+                        code="TPP108",
                     )
-            if o.parallel and letter in self.reduction_letters and not self.allow_races:
-                raise LegalityError(
-                    f"{spec.raw!r}: parallelizing reduction loop {letter!r} "
-                    "races on the output (pass allow_races=True with a "
-                    "reduction-combine plan, e.g. mesh split-K + psum)"
-                )
             levels.append(
                 Level(
                     letter=letter,
@@ -275,6 +303,20 @@ class ThreadedLoop:
                     is_innermost_of_loop=(d == occ_count[letter] - 1),
                 )
             )
+        # Write-footprint race analysis (repro.analysis.footprint) replaces
+        # the old syntactic "uppercase reduction letter" test: a parallel or
+        # mesh-sharded level must index the output's write footprint.
+        # ``allow_races=True`` no longer skips the analysis — findings are
+        # demoted to AnalysisWarning (the mesh split-K + psum plan resolves
+        # the race one layer up, but it is still a race at nest level).
+        from repro.analysis import footprint
+
+        footprint.enforce(
+            footprint.check_nest(
+                levels, spec_raw=spec.raw, letters=self.letters,
+                reduction_letters=self.reduction_letters),
+            exc=LegalityError, downgrade_errors=self.allow_races,
+        )
         return LoopNest(
             spec=spec, loops=loops, levels=tuple(levels), letters=self.letters
         )

@@ -57,21 +57,14 @@ def validate_reduction_innermost(nest: LoopNest, out_letters, reduction_letters)
     expressible through the executor path or as mesh split-K — this check
     narrows only the Pallas lowering to the TPU-sound subset (the paper leaves
     such legality to the user; we diagnose it)."""
+    from repro.analysis import footprint
     from repro.core.loops import LegalityError
 
-    grid_positions = [
-        (pos, lvl) for pos, lvl in enumerate(nest.levels) if lvl.mesh_axis is None
-    ]
-    out_pos = [p for p, l in grid_positions if l.letter in out_letters]
-    red_pos = [p for p, l in grid_positions if l.letter in reduction_letters]
-    if out_pos and red_pos and min(red_pos) < max(out_pos):
-        raise LegalityError(
-            f"spec {nest.spec.raw!r}: reduction loop level at grid position "
-            f"{min(red_pos)} is outside the innermost band (deepest output "
-            f"level at {max(out_pos)}) — output revisits would not be "
-            "consecutive, which is undefined on TPU. Use a K-innermost "
-            "order, the executor path, or a mesh split-K decomposition."
-        )
+    footprint.enforce(
+        footprint.check_reduction_innermost(nest, out_letters,
+                                            reduction_letters),
+        exc=LegalityError,
+    )
 
 
 @dataclasses.dataclass(frozen=True)

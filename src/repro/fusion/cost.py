@@ -48,6 +48,21 @@ def schedule_kwargs(candidate: autotune.Candidate) -> dict:
     }
 
 
+# Completeness contract for :func:`graph_signature`, checked by
+# ``repro.analysis.invariance.signature_coverage_diagnostics`` (TPP301):
+# every field of every IR dataclass must be listed here, and listing it
+# asserts the signature string encodes it.  Add a field to the IR without
+# extending the signature below and the lint gate fails — that is the
+# point: an unencoded field would let schedules tuned for differently-
+# lowered graphs collide in the persistent tune cache.
+SIGNATURE_FIELDS = {
+    "TppGraph": frozenset({"name", "operands", "roots", "nodes", "outputs"}),
+    "OperandSpec": frozenset({"name", "kind", "trans"}),
+    "Node": frozenset({"name", "op", "inputs", "attrs"}),
+    "ContractionRoot": frozenset({"name", "lhs", "rhs"}),
+}
+
+
 def graph_signature(graph: TppGraph) -> str:
     """Stable identity of a graph's cost-relevant structure — the epilogue
     component of the persistent tune-cache key.  Root structure (how many

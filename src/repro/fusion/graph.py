@@ -77,7 +77,9 @@ OPERAND_KINDS = ("lhs", "rhs", "tile", "mask", "rowvec", "scalar")
 class FusionLegalityError(LegalityError):
     """Raised when a TppGraph is malformed or cannot be lowered onto the
     requested loop nest (e.g. a normalizing epilogue whose reduction axis
-    conflicts with the nest's innermost band)."""
+    conflicts with the nest's innermost band).  Carries a stable ``.code``
+    (``TPP2xx`` — see ``repro.analysis.diagnostics.CATALOG``) so tests pin
+    the diagnostic, not the message string."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,11 +92,12 @@ class OperandSpec:
         if self.kind not in OPERAND_KINDS:
             raise FusionLegalityError(
                 f"operand {self.name!r}: unknown kind {self.kind!r}; "
-                f"expected one of {OPERAND_KINDS}")
+                f"expected one of {OPERAND_KINDS}", code="TPP210")
         if self.trans and self.kind not in ("lhs", "rhs"):
             raise FusionLegalityError(
                 f"operand {self.name!r}: trans=True only applies to "
-                f"contraction operands (lhs/rhs), not {self.kind!r}")
+                f"contraction operands (lhs/rhs), not {self.kind!r}",
+                code="TPP210")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -193,7 +196,8 @@ def _check_grad_arity(fwd: EpilogueOp, gop: EpilogueOp):
             f"its forward op — expected value_arity {fwd.value_arity} "
             f"(dv substitution) or {fwd.value_arity + 1} (dv prepended) with "
             f"operand_kinds {fwd.operand_kinds}, got value_arity "
-            f"{gop.value_arity} / operand_kinds {gop.operand_kinds}")
+            f"{gop.value_arity} / operand_kinds {gop.operand_kinds}",
+            code="TPP204")
 
 
 def register_epilogue(op: EpilogueOp, *, override: bool = False):
@@ -505,7 +509,8 @@ class TppGraph:
                 raise FusionLegalityError(
                     f"graph {self.name!r}: without explicit roots the graph "
                     f"needs exactly one lhs and one rhs operand, got "
-                    f"{len(lhs)} lhs / {len(rhs)} rhs — declare roots=")
+                    f"{len(lhs)} lhs / {len(rhs)} rhs — declare roots=",
+                code="TPP201")
             object.__setattr__(
                 self, "roots", (ContractionRoot("acc", lhs[0], rhs[0]),))
         else:
@@ -632,35 +637,39 @@ class TppGraph:
     def validate(self):
         names = [o.name for o in self.operands]
         if len(set(names)) != len(names):
-            raise FusionLegalityError(f"graph {self.name!r}: duplicate operand names")
+            raise FusionLegalityError(
+                f"graph {self.name!r}: duplicate operand names",
+                code="TPP211")
 
         # roots: unique names, no shadowing, lhs/rhs of the declared kinds
         root_names = [r.name for r in self.roots]
         if len(set(root_names)) != len(root_names):
             raise FusionLegalityError(
-                f"graph {self.name!r}: duplicate root names {root_names}")
+                f"graph {self.name!r}: duplicate root names {root_names}",
+                code="TPP211")
         for r in self.roots:
             if r.name in names or (r.name == "acc" and len(self.roots) > 1):
                 raise FusionLegalityError(
                     f"graph {self.name!r}: root name {r.name!r} shadows an "
-                    "operand or the single-root 'acc' alias")
+                    "operand or the single-root 'acc' alias", code="TPP211")
             for side, nm, kind in (("lhs", r.lhs, "lhs"), ("rhs", r.rhs, "rhs")):
                 try:
                     spec = self.operand(nm)
                 except KeyError:
                     raise FusionLegalityError(
                         f"graph {self.name!r}: root {r.name!r} {side} operand "
-                        f"{nm!r} is not declared") from None
+                        f"{nm!r} is not declared", code="TPP201") from None
                 if spec.kind != kind:
                     raise FusionLegalityError(
                         f"graph {self.name!r}: root {r.name!r} {side} operand "
-                        f"{nm!r} must have kind {kind!r}, got {spec.kind!r}")
+                        f"{nm!r} must have kind {kind!r}, got {spec.kind!r}",
+                        code="TPP210")
         rooted = {nm for r in self.roots for nm in (r.lhs, r.rhs)}
         for o in self.operands:
             if o.kind in ("lhs", "rhs") and o.name not in rooted:
                 raise FusionLegalityError(
                     f"graph {self.name!r}: {o.kind} operand {o.name!r} is not "
-                    "referenced by any contraction root")
+                    "referenced by any contraction root", code="TPP201")
 
         visible = set(names) | set(root_names)
         if len(self.roots) == 1:
@@ -672,18 +681,18 @@ class TppGraph:
             if op is None:
                 raise FusionLegalityError(
                     f"graph {self.name!r}: node {nd.name!r} uses unregistered "
-                    f"epilogue op {nd.op!r}")
+                    f"epilogue op {nd.op!r}", code="TPP209")
             want = op.value_arity + len(op.operand_kinds)
             if len(nd.inputs) != want:
                 raise FusionLegalityError(
                     f"graph {self.name!r}: node {nd.name!r} ({nd.op}) takes "
-                    f"{want} inputs, got {len(nd.inputs)}")
+                    f"{want} inputs, got {len(nd.inputs)}", code="TPP204")
             for ref in nd.inputs:
                 if ref not in visible:
                     raise FusionLegalityError(
                         f"graph {self.name!r}: node {nd.name!r} references "
                         f"unknown value {ref!r} (nodes must be topologically "
-                        "ordered)")
+                        "ordered)", code="TPP201")
             # trailing inputs must be operands of the declared kinds
             for ref, kind in zip(nd.inputs[op.value_arity:], op.operand_kinds):
                 try:
@@ -692,11 +701,12 @@ class TppGraph:
                     raise FusionLegalityError(
                         f"graph {self.name!r}: node {nd.name!r} ({nd.op}) "
                         f"input {ref!r} must be a graph operand of kind "
-                        f"{kind!r}") from None
+                        f"{kind!r}", code="TPP210") from None
                 if spec.kind != kind:
                     raise FusionLegalityError(
                         f"graph {self.name!r}: node {nd.name!r} ({nd.op}) "
-                        f"expects a {kind!r} operand, {ref!r} is {spec.kind!r}")
+                        f"expects a {kind!r} operand, {ref!r} is "
+                        f"{spec.kind!r}", code="TPP210")
             if reduce_node is not None:
                 # post-reduce band: pointwise nodes on the finished full-row
                 # panel.  They may read operands (mapped full-row), the
@@ -708,7 +718,7 @@ class TppGraph:
                     raise FusionLegalityError(
                         f"graph {self.name!r}: node {nd.name!r} ({nd.op}) — "
                         "at most one reducing epilogue per graph (one row "
-                        "panel + statistics strip)")
+                        "panel + statistics strip)", code="TPP202")
                 for ref in nd.inputs[:op.value_arity]:
                     if ref not in post_visible and ref not in names:
                         raise FusionLegalityError(
@@ -717,7 +727,8 @@ class TppGraph:
                             "which is not full-row resident after the "
                             f"reducing node ({reduce_node.op}) closes — only "
                             "operands, the reducing value, its staged "
-                            "inputs, and later post-reduce values are")
+                            "inputs, and later post-reduce values are",
+                            code="TPP206")
                 post_visible.add(nd.name)
             elif op.reduces is not None:
                 reduce_node = nd
@@ -725,7 +736,7 @@ class TppGraph:
             if nd.name in visible:
                 raise FusionLegalityError(
                     f"graph {self.name!r}: node name {nd.name!r} shadows an "
-                    "earlier value")
+                    "earlier value", code="TPP211")
             visible.add(nd.name)
 
         # outputs: computed values only (roots/nodes, not plain operands —
@@ -734,19 +745,21 @@ class TppGraph:
         # the reducing value or a post-reduce value
         if len(set(self.outputs)) != len(self.outputs):
             raise FusionLegalityError(
-                f"graph {self.name!r}: duplicate outputs {self.outputs}")
+                f"graph {self.name!r}: duplicate outputs {self.outputs}",
+                code="TPP211")
         computed = visible - set(names)
         for ref in self.outputs:
             if ref not in computed:
                 raise FusionLegalityError(
                     f"graph {self.name!r}: output {ref!r} names no root, "
-                    "node, or the 'acc' alias")
+                    "node, or the 'acc' alias", code="TPP208")
             if reduce_node is not None and ref not in post_visible:
                 raise FusionLegalityError(
                     f"graph {self.name!r}: output {ref!r} is not full-row "
                     f"resident when the reducing epilogue "
                     f"({reduce_node.op}) closes — outputs of a reducing "
-                    "graph must be the reducing value or post-reduce values")
+                    "graph must be the reducing value or post-reduce values",
+                    code="TPP208")
 
     # -- convenience builder --------------------------------------------
     @classmethod

@@ -68,29 +68,13 @@ def validate_epilogue_band(nest, graph: TppGraph, *, m_letter="b", n_letter="c")
     any N level sits outside (above) an M level, where the N loop is
     parallelized (statistics accumulate sequentially), or where N is sharded
     over a mesh axis (the row statistics would be partial per shard)."""
-    nd = graph.reducing_node()
-    if nd is None:
-        return
-    grid = [(p, l) for p, l in enumerate(nest.levels) if l.mesh_axis is None]
-    m_pos = [p for p, l in grid if l.letter == m_letter]
-    n_pos = [p for p, l in grid if l.letter == n_letter]
-    if m_pos and n_pos and max(m_pos) > min(n_pos):
-        raise FusionLegalityError(
-            f"graph {graph.name!r}: epilogue {nd.op!r} reduces over the N "
-            f"axis but spec {nest.spec.raw!r} places an N loop level (grid "
-            f"position {min(n_pos)}) outside the innermost band (deepest M "
-            f"level at {max(m_pos)}) — row statistics would close before the "
-            "row is complete. Use an N-inside-M order, e.g. 'bca'.")
-    if any(l.parallel for p, l in grid if l.letter == n_letter):
-        raise FusionLegalityError(
-            f"graph {graph.name!r}: epilogue {nd.op!r} reduces over N; the N "
-            f"loop in spec {nest.spec.raw!r} cannot take PARALLEL grid "
-            "semantics (row statistics accumulate sequentially).")
-    if any(l.letter == n_letter for l in nest.mesh_levels):
-        raise FusionLegalityError(
-            f"graph {graph.name!r}: epilogue {nd.op!r} reduces over N; "
-            f"sharding N over a mesh axis in {nest.spec.raw!r} would leave "
-            "per-shard partial row statistics (no cross-shard norm combine).")
+    from repro.analysis import footprint
+
+    footprint.enforce(
+        footprint.check_epilogue_band(nest, graph, m_letter=m_letter,
+                                      n_letter=n_letter),
+        exc=FusionLegalityError,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -116,7 +100,9 @@ def build_nest_inputs(graph: TppGraph, m: int, k: int, n: int,
     if m % bm or k % bk or n % bn:
         raise FusionLegalityError(
             f"graph {graph.name!r}: problem ({m},{k},{n}) not divisible by "
-            f"tiles ({bm},{bk},{bn})")
+            f"tiles ({bm},{bk},{bn}) — pick tiles dividing the problem "
+            "shape (pick_tiles chooses divisors automatically)",
+            code="TPP108")
     mb, kb, nb = m // bm, k // bk, n // bn
     block_steps = block_steps or {}
     loops = [
@@ -307,7 +293,7 @@ def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
             f"graph {graph.name!r}: contraction operand(s) {sorted(bad)} are "
             "referenced as epilogue values — the fused Pallas kernel only "
             "sees their K-indexed tiles at epilogue time; use the XLA path "
-            "for this graph")
+            "for this graph", code="TPP207")
     reducing = graph.reducing_node()
     red_idx = graph.nodes.index(reducing) if reducing is not None else None
     pre_nodes = graph.nodes if reducing is None else graph.nodes[:red_idx]
@@ -346,14 +332,10 @@ def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
         tl = ThreadedLoop(loops, spec_string, reduction_letters=("a",))
         validate_reduction_innermost(tl.nest, ("b", "c"), ("a",))
         validate_epilogue_band(tl.nest, graph)
-        if has_offset_ops and any(l.letter in ("b", "c")
-                                  for l in tl.nest.mesh_levels):
-            raise FusionLegalityError(
-                f"graph {graph.name!r}: an in-kernel PRNG epilogue keys its "
-                f"draw on global (M, N) element coordinates, but spec "
-                f"{tl.nest.spec.raw!r} shards an output loop over a mesh "
-                "axis — block coordinates inside a shard are local, so the "
-                "regenerated bits would repeat across shards.")
+        if has_offset_ops:
+            from repro.analysis import footprint
+            footprint.enforce(footprint.check_prng_mesh(tl.nest, graph),
+                              exc=FusionLegalityError)
         plan = plan_pallas(tl.nest, in_maps, out_map, reduction_letters=("a",))
 
         kb = k // bk
@@ -591,6 +573,10 @@ def compile(graph: TppGraph, *, path: str = "pallas", simplify: bool = True,
     XLA path takes ``out_dtype`` only.
     """
     lowered = simplify_graph(graph) if simplify else graph
+    # Two live same-kind PRNG draws sharing a salt would emit identical bits
+    # at both sites — a silent correctness bug; refuse to compile (TPP203).
+    from repro.fusion import rng
+    rng.assert_unique_salts(lowered)
     ignore = frozenset(graph.operand_names) - frozenset(lowered.operand_names)
     if path == "xla":
         allowed = {"out_dtype"}

@@ -48,6 +48,7 @@ from jax import lax
 __all__ = [
     "SCHEME", "threefry2x32", "derive_salt", "fold_in", "tile_bits",
     "keep_threshold", "keep_mask", "dropout", "hw_tile_bits",
+    "collect_salt_sites", "salt_collisions", "assert_unique_salts",
 ]
 
 # Identity of the bit-generation scheme; part of ``graph_signature`` so tune
@@ -140,6 +141,72 @@ def dropout(x, seed, salt, rate: float, *, offsets=(0, 0)):
     y = jnp.where(keep, x.astype(jnp.float32) * jnp.float32(
         1.0 / (1.0 - rate)), jnp.float32(0.0))
     return y.astype(x.dtype)
+
+
+def collect_salt_sites(graph):
+    """``[(node_name, op, salt, rate)]`` for every node of ``graph`` whose
+    attrs carry a static PRNG ``salt`` — the draw sites the uniqueness
+    guard reasons about."""
+    out = []
+    for nd in graph.nodes:
+        attrs = nd.attr_dict()
+        if "salt" in attrs:
+            out.append((nd.name, nd.op, attrs["salt"], attrs.get("rate")))
+    return out
+
+
+def salt_collisions(graph):
+    """``[(site_a, site_b, message)]`` for every illegal salt sharing.
+
+    The counter design *requires* certain pairs to share a salt: a derived
+    backward graph regenerates the forward draw, so one ``dropout_rng`` and
+    one ``dropout_rng_grad`` node keyed on the same salt (and the same
+    rate) are the recompute contract, not a bug.  What is always a bug:
+
+      * two **same-op** nodes on one salt — both sites draw identical bits
+        (correlated dropout masks, silently wrong statistics);
+      * a forward/grad pair on one salt with **different rates** — the
+        backward would regenerate a different keep set than the forward
+        applied.
+    """
+    by_salt: dict = {}
+    for name, op, salt, rate in collect_salt_sites(graph):
+        by_salt.setdefault(salt, []).append((name, op, rate))
+    out = []
+    for salt, sites in sorted(by_salt.items()):
+        seen_op: dict = {}
+        for name, op, rate in sites:
+            if op in seen_op:
+                other = seen_op[op]
+                out.append((other, name, (
+                    f"graph {graph.name!r}: nodes {other!r} and {name!r} "
+                    f"both draw {op!r} bits with salt {salt:#010x} — the "
+                    "two sites would apply identical masks. Derive a "
+                    "distinct salt per site (rng.derive_salt of a unique "
+                    "stable name).")))
+            else:
+                seen_op[op] = name
+        rates = {rate for _n, _o, rate in sites}
+        if len(sites) > 1 and len(rates) > 1:
+            a, b = sites[0][0], sites[1][0]
+            out.append((a, b, (
+                f"graph {graph.name!r}: nodes sharing salt {salt:#010x} "
+                f"disagree on rate ({sorted(map(str, rates))}) — a "
+                "backward regeneration would keep a different element set "
+                "than the forward applied.")))
+    return out
+
+
+def assert_unique_salts(graph) -> None:
+    """Standalone ``compile()``-time guard: raise ``FusionLegalityError``
+    (code ``TPP203``) on the first illegal salt sharing, naming both
+    colliding sites."""
+    collisions = salt_collisions(graph)
+    if collisions:
+        from repro.fusion.graph import FusionLegalityError
+        _a, _b, msg = collisions[0]
+        raise FusionLegalityError("TPP203 duplicate-prng-salt: " + msg,
+                                  code="TPP203")
 
 
 def hw_tile_bits(seed, salt, shape, *, offsets=(0, 0)):

@@ -600,17 +600,39 @@ class Engine:
 
 # -- jitted bodies ----------------------------------------------------------
 
+# Buffers the engine donates into its jitted bodies, BY NAME.  Both bodies
+# return fresh versions of these (the engine rebinds them every step), so
+# XLA may reuse their device memory for the outputs.  Donation is declared
+# by parameter name and resolved to positions via signature inspection —
+# the static analyzer (repro.analysis.invariance, TPP303) re-derives the
+# positions and rejects a declaration that would donate a live input such
+# as the weights.  BOUND_ARGS is the (cfg, ecfg) prefix partial-applied
+# before jit; donate_argnums are relative to the remaining parameters.
+DONATED_ARGS = ("caches", "state")
+BOUND_ARGS = 2
+
+
+def donation_argnums(fn, *, bound: int = BOUND_ARGS) -> tuple[int, ...]:
+    """Positions of :data:`DONATED_ARGS` in ``fn``'s signature, shifted by
+    the ``bound`` partial-applied leading parameters."""
+    import inspect
+    params = list(inspect.signature(fn).parameters)
+    return tuple(params.index(name) - bound for name in DONATED_ARGS)
+
+
 @functools.lru_cache(maxsize=None)
 def _jitted_fns(cfg: ModelConfig, ecfg: EngineConfig):
     """One (prefill, segment) jit pair per (model, engine) config — shared
     across Engine instances so a fresh engine reuses compiled code."""
     # donation saves a cache copy per call on accelerators; XLA:CPU warns
     # and ignores it, so only request it off-CPU
-    donate = () if jax.default_backend() == "cpu" else (1, 2)
-    segment = jax.jit(partial(_decode_segment, cfg, ecfg),
-                      donate_argnums=donate)
-    prefill = jax.jit(partial(_prefill_one, cfg, ecfg),
-                      donate_argnums=donate)
+    on_cpu = jax.default_backend() == "cpu"
+    segment = jax.jit(
+        partial(_decode_segment, cfg, ecfg),
+        donate_argnums=() if on_cpu else donation_argnums(_decode_segment))
+    prefill = jax.jit(
+        partial(_prefill_one, cfg, ecfg),
+        donate_argnums=() if on_cpu else donation_argnums(_prefill_one))
     return prefill, segment
 
 def _prefill_one(cfg, ecfg, params, caches, state, tokens, table_row, plen,

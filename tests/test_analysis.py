@@ -1,0 +1,415 @@
+"""repro.analysis: the static schedule/graph verifier.
+
+Two families of guarantees:
+
+  * **No false positives** (property): every schedule the tuner emits for
+    every library graph — forward and derived backward — re-verifies clean
+    through the footprint passes, and every constructed library graph lints
+    clean.  The analyzer must accept the entire legal frontier or the lint
+    gate would reject working configurations.
+  * **No false negatives** (mutation): seeded mutations of legal schedules
+    and graphs each fire their exact diagnostic code — the codes are pinned
+    (``exc.value.code`` / ``Diagnostic.code``), not string-matched.
+"""
+import json
+
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import AnalysisWarning, CATALOG, diagnostics, footprint
+from repro.analysis import graphlint, invariance
+from repro.core.loops import LegalityError, LoopSpec, ThreadedLoop
+from repro.fusion import cost, library, lowering, rng
+from repro.fusion.graph import (FusionLegalityError, Node, OperandSpec,
+                                TppGraph)
+
+M, K, N = 64, 64, 128
+TILES = (16, 32, 64)
+
+
+def _library_graphs():
+    return [
+        library.fused_output_graph(dropout_rate=0.1),
+        library.fused_output_graph(dropout_rate=0.1, rng_dropout=False),
+        library.fused_mlp_graph("gelu"),
+        library.fused_gated_mlp_graph("silu"),
+        library.fused_qkv_graph(),
+        library.fused_attn_out_graph(residual=True, norm="layernorm",
+                                     dropout_rate=0.1),
+    ]
+
+
+def _nest_for(graph, spec, *, block_steps=None):
+    sg = lowering.simplify_graph(graph)
+    loops, _im, _om = lowering.build_nest_inputs(sg, M, K, N, TILES,
+                                                 block_steps)
+    return ThreadedLoop(loops, spec, reduction_letters=("a",)).nest, sg
+
+
+# ---------------------------------------------------------------------------
+# Property: the tuner's legal frontier re-verifies clean (no false positives)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("graph", _library_graphs(), ids=lambda g: g.name)
+def test_analyzer_accepts_every_tuned_schedule(graph):
+    results = cost.autotune_graph(graph, M, K, N, tiles=TILES,
+                                  max_candidates=64, top_k=16,
+                                  use_cache=False)
+    assert results, "tuner found no legal schedule"
+    sg = lowering.simplify_graph(graph)
+    for r in results:
+        kw = cost.schedule_kwargs(r.candidate)
+        loops, _im, _om = lowering.build_nest_inputs(
+            sg, M, K, N, TILES, kw["block_steps"])
+        tl = ThreadedLoop(loops, kw["spec_string"], reduction_letters=("a",))
+        diags = footprint.verify_schedule(tl.nest, sg)
+        assert diags == [], (kw["spec_string"],
+                             [d.render() for d in diags])
+
+
+@pytest.mark.parametrize("graph", _library_graphs(), ids=lambda g: g.name)
+def test_analyzer_accepts_backward_graphs(graph):
+    from repro.fusion import autodiff
+    for bg in autodiff.backward_graphs(graph).values():
+        assert graphlint.lint_graph(bg) == []
+        results = cost.autotune_graph(bg, M, K, N, tiles=TILES,
+                                      max_candidates=32, top_k=4,
+                                      use_cache=False)
+        sg = lowering.simplify_graph(bg)
+        for r in results:
+            kw = cost.schedule_kwargs(r.candidate)
+            loops, _im, _om = lowering.build_nest_inputs(
+                sg, M, K, N, TILES, kw["block_steps"])
+            tl = ThreadedLoop(loops, kw["spec_string"],
+                              reduction_letters=("a",))
+            assert footprint.verify_schedule(tl.nest, sg) == []
+
+
+def test_library_graphs_lint_clean():
+    diags = graphlint.lint_graphs(_library_graphs())
+    assert diags == [], [d.render() for d in diags]
+
+
+def test_invariance_passes_clean():
+    diags = invariance.check_invariance()
+    assert [d for d in diags if d.severity == "error"] == [], \
+        [d.render() for d in diags]
+
+
+# ---------------------------------------------------------------------------
+# TPP1xx mutations: schedule-level diagnostics
+# ---------------------------------------------------------------------------
+
+def _gemm_loops():
+    return [LoopSpec(0, 4, 1, name="k"),
+            LoopSpec(0, 4, 1, name="m"),
+            LoopSpec(0, 4, 1, name="n")]
+
+
+def test_tpp101_parallel_reduction_letter():
+    with pytest.raises(LegalityError) as ei:
+        ThreadedLoop(_gemm_loops(), "Abc", reduction_letters=("a",))
+    assert ei.value.code == "TPP101"
+    assert "Abc" in str(ei.value) and "allow_races" in str(ei.value)
+
+
+def test_tpp101_mesh_sharded_reduction_letter():
+    loops = [LoopSpec(0, 4, 1, block_steps=(2,), name="k"),
+             LoopSpec(0, 4, 1, name="m"),
+             LoopSpec(0, 4, 1, name="n")]
+    with pytest.raises(LegalityError) as ei:
+        ThreadedLoop(loops, "bcA{model:2}a", reduction_letters=("a",))
+    assert ei.value.code == "TPP101"
+
+
+def test_allow_races_downgrades_to_warning():
+    # the mesh split-K escape: analysis still runs, finding demoted
+    with pytest.warns(AnalysisWarning, match="TPP101"):
+        tl = ThreadedLoop(_gemm_loops(), "Abc", reduction_letters=("a",),
+                          allow_races=True)
+    assert tl.nest is not None
+
+
+def test_tpp102_reduction_outside_innermost_band():
+    nest, _sg = _nest_for(library.fused_mlp_graph("gelu"), "abc")
+    with pytest.raises(LegalityError) as ei:
+        lowering.validate_reduction_innermost(nest, ("b", "c"), ("a",))
+    assert ei.value.code == "TPP102"
+
+
+def test_tpp103_epilogue_band_order():
+    g = library.fused_attn_out_graph(residual=True, norm="layernorm")
+    nest, sg = _nest_for(g, "cba")
+    with pytest.raises(FusionLegalityError) as ei:
+        lowering.validate_epilogue_band(nest, sg)
+    assert ei.value.code == "TPP103"
+
+
+def test_tpp104_parallel_n_under_reducing_epilogue():
+    g = library.fused_attn_out_graph(residual=True, norm="layernorm")
+    nest, sg = _nest_for(g, "bCa")
+    with pytest.raises(FusionLegalityError) as ei:
+        lowering.validate_epilogue_band(nest, sg)
+    assert ei.value.code == "TPP104"
+
+
+def test_tpp105_mesh_sharded_n_under_reducing_epilogue():
+    g = library.fused_attn_out_graph(residual=True, norm="layernorm")
+    nest, sg = _nest_for(g, "bC{model:2}ca", block_steps={"c": (1,)})
+    diags = footprint.check_epilogue_band(nest, sg)
+    assert [d.code for d in diags] == ["TPP105"]
+
+
+def test_tpp106_mesh_sharded_prng_coordinates():
+    g = library.fused_output_graph(dropout_rate=0.1)  # dropout_rng epilogue
+    nest, sg = _nest_for(g, "B{data:2}bca", block_steps={"b": (2,)})
+    diags = footprint.check_prng_mesh(nest, sg)
+    assert [d.code for d in diags] == ["TPP106"]
+    # the same schedule on a PRNG-free graph is clean
+    nest2, sg2 = _nest_for(library.fused_mlp_graph("gelu"), "B{data:2}bca",
+                           block_steps={"b": (2,)})
+    assert footprint.check_prng_mesh(nest2, sg2) == []
+
+
+def test_tpp107_spec_structure():
+    with pytest.raises(LegalityError) as ei:
+        ThreadedLoop(_gemm_loops(), "abcd")       # unknown letter
+    assert ei.value.code == "TPP107"
+    with pytest.raises(LegalityError) as ei:
+        ThreadedLoop(_gemm_loops(), "ab")         # c never appears
+    assert ei.value.code == "TPP107"
+
+
+def test_tpp108_imperfect_blocking():
+    loops = [LoopSpec(0, 6, 2, name="k"),
+             LoopSpec(0, 4, 1, block_steps=(3,), name="m"),  # 4 % 3 != 0
+             LoopSpec(0, 6, 1, name="n")]
+    with pytest.raises(LegalityError) as ei:
+        ThreadedLoop(loops, "abbc")
+    assert ei.value.code == "TPP108"
+    with pytest.raises(LegalityError) as ei:
+        ThreadedLoop(_gemm_loops(), "aabc")       # blocked, no block_steps
+    assert ei.value.code == "TPP108"
+
+
+def test_footprint_race_requires_non_indexing_letter():
+    # parallel output letters are race-free: footprints disjoint per sink
+    for spec in ("Bca", "bCa", "BCa"):
+        tl = ThreadedLoop(_gemm_loops(), spec, reduction_letters=("a",))
+        assert footprint.check_nest(
+            tl.nest.levels, spec_raw=spec, letters=tl.letters,
+            reduction_letters=("a",)) == []
+
+
+# ---------------------------------------------------------------------------
+# TPP2xx mutations: graph-level diagnostics
+# ---------------------------------------------------------------------------
+
+def _operands():
+    return [("x", "lhs"), ("w", "rhs")]
+
+
+def test_tpp201_dangling_value_reference():
+    with pytest.raises(FusionLegalityError) as ei:
+        TppGraph("bad", tuple(OperandSpec(n, k) for n, k in _operands()),
+                 nodes=(Node("n0", "relu", ("nope",), ()),))
+    assert ei.value.code == "TPP201"
+
+
+def test_tpp202_second_reducer():
+    with pytest.raises(FusionLegalityError) as ei:
+        TppGraph.chain("bad", [
+            ("layernorm", ("g1", "b1"), {}),
+            ("layernorm", ("g2", "b2"), {}),
+        ], _operands() + [("g1", "rowvec"), ("b1", "rowvec"),
+                          ("g2", "rowvec"), ("b2", "rowvec")])
+    assert ei.value.code == "TPP202"
+
+
+def test_tpp203_duplicate_salt_at_compile():
+    dup = TppGraph.chain("dup_salt", [
+        ("dropout_rng", ("seed",), {"rate": 0.1, "salt": 7}),
+        ("dropout_rng", ("seed",), {"rate": 0.1, "salt": 7}),
+    ], _operands() + [("seed", "scalar")])
+    with pytest.raises(FusionLegalityError) as ei:
+        lowering.compile(dup, path="xla")
+    assert ei.value.code == "TPP203"
+    # the lint pass reports the same finding without compiling
+    assert [d.code for d in graphlint.salt_diagnostics(dup)] == ["TPP203"]
+
+
+def test_tpp203_rate_disagreement_across_fwd_grad_pair():
+    g = TppGraph.chain("pair", [
+        ("dropout_rng", ("seed",), {"rate": 0.1, "salt": 7}),
+        ("dropout_rng_grad", ("seed",), {"rate": 0.2, "salt": 7}),
+    ], _operands() + [("seed", "scalar")])
+    assert rng.salt_collisions(g)  # rates disagree — regeneration mismatch
+
+
+def test_salt_sharing_fwd_grad_pair_is_legal():
+    g = TppGraph.chain("pair", [
+        ("dropout_rng", ("seed",), {"rate": 0.1, "salt": 7}),
+        ("dropout_rng_grad", ("seed",), {"rate": 0.1, "salt": 7}),
+    ], _operands() + [("seed", "scalar")])
+    rng.assert_unique_salts(g)  # the backward recompute contract
+
+
+def test_tpp204_arity_mismatch():
+    with pytest.raises(FusionLegalityError) as ei:
+        TppGraph.chain("bad", [("relu", ("x2",), {})],
+                       _operands() + [("x2", "tile")])
+    assert ei.value.code == "TPP204"
+
+
+def test_tpp205_mask_consumed_as_value():
+    g = TppGraph.chain("susp", [("add", ("mk",), {})],
+                       _operands() + [("mk", "mask")])
+    assert [d.code for d in graphlint.dtype_flow_diagnostics(g)] == ["TPP205"]
+    assert all(d.severity == "warning"
+               for d in graphlint.dtype_flow_diagnostics(g))
+
+
+def test_tpp208_invalid_output():
+    with pytest.raises(FusionLegalityError) as ei:
+        TppGraph("bad", tuple(OperandSpec(n, k) for n, k in _operands()),
+                 nodes=(Node("n0", "relu", ("acc",), ()),),
+                 outputs=("nothere",))
+    assert ei.value.code == "TPP208"
+
+
+def test_tpp209_unknown_epilogue_op():
+    with pytest.raises(FusionLegalityError) as ei:
+        TppGraph.chain("bad", ["not_an_op"], _operands())
+    assert ei.value.code == "TPP209"
+
+
+def test_tpp210_operand_kind_mismatch():
+    with pytest.raises(FusionLegalityError) as ei:
+        OperandSpec("x", "matrix")
+    assert ei.value.code == "TPP210"
+    with pytest.raises(FusionLegalityError) as ei:
+        # bias_add wants a rowvec in its operand slot, gets a tile
+        TppGraph.chain("bad", [("bias_add", ("t",), {})],
+                       _operands() + [("t", "tile")])
+    assert ei.value.code == "TPP210"
+
+
+def test_tpp211_duplicate_name():
+    with pytest.raises(FusionLegalityError) as ei:
+        TppGraph("bad", (OperandSpec("x", "lhs"), OperandSpec("x", "rhs")))
+    assert ei.value.code == "TPP211"
+
+
+def test_structural_diagnostics_surface_the_code():
+    g = library.fused_mlp_graph("gelu")
+    assert graphlint.structural_diagnostics(g) == []
+    broken = object.__new__(TppGraph)   # skip __post_init__ validation
+    for f, v in (("name", "bad"), ("operands", g.operands),
+                 ("nodes", (Node("n0", "relu", ("nope",), ()),)),
+                 ("roots", g.roots), ("outputs", ("n0",))):
+        object.__setattr__(broken, f, v)
+    diags = graphlint.structural_diagnostics(broken)
+    assert [d.code for d in diags] == ["TPP201"]
+
+
+# ---------------------------------------------------------------------------
+# TPP3xx mutations: invariance diagnostics
+# ---------------------------------------------------------------------------
+
+def test_tpp301_unencoded_ir_field():
+    import dataclasses as dc
+
+    @dc.dataclass(frozen=True)
+    class FatNode:
+        name: str
+        op: str
+        inputs: tuple
+        attrs: tuple
+        layout_hint: str = ""   # new field nobody told graph_signature about
+
+    diags = invariance.signature_coverage_diagnostics(
+        classes={"Node": FatNode})
+    assert [d.code for d in diags] == ["TPP301"]
+    assert "layout_hint" in diags[0].message
+
+
+def test_tpp301_unclassified_autotune_knob():
+    from repro.core import autotune
+    params = list(autotune.TUNE_KEY_PARAMS) + ["brand_new_knob"]
+    diags = invariance.tune_key_coverage_diagnostics(params=params)
+    assert any(d.code == "TPP301" and "brand_new_knob" in d.message
+               for d in diags)
+
+
+def test_tpp302_stale_cache_entry_flagged_and_fixed(tmp_path):
+    from types import SimpleNamespace
+    stale = tmp_path / "deadbeef.json"
+    stale.write_text(json.dumps({"results": []}))   # pre-schema entry
+    cache = SimpleNamespace(path=tmp_path)
+    diags = invariance.cache_schema_diagnostics(cache)
+    assert [d.code for d in diags] == ["TPP302"]
+    assert diags[0].severity == "warning" and stale.exists()
+    invariance.cache_schema_diagnostics(cache, fix=True)
+    assert not stale.exists()
+    # a current-schema entry passes
+    from repro.core.autotune import TUNE_KEY_SCHEMA
+    (tmp_path / "cafe.json").write_text(
+        json.dumps({"results": [], "key_schema": list(TUNE_KEY_SCHEMA)}))
+    assert invariance.cache_schema_diagnostics(cache) == []
+
+
+def test_tpp303_donating_the_weights():
+    diags = invariance.donation_diagnostics(donated=("params", "caches"))
+    assert any(d.code == "TPP303" and "params" in d.message for d in diags)
+
+
+def test_tpp303_unknown_and_duplicate_donation():
+    def fake_fn(cfg, ecfg, caches, state):
+        pass
+
+    diags = invariance.donation_diagnostics(donated=("nope",),
+                                            fns=(fake_fn,))
+    assert [d.code for d in diags] == ["TPP303"]
+    diags = invariance.donation_diagnostics(donated=("caches", "caches"),
+                                            fns=(fake_fn,))
+    assert any("twice" in d.message for d in diags)
+
+
+def test_engine_donation_declaration_matches_signatures():
+    from repro.serve import engine
+    assert invariance.donation_diagnostics() == []
+    assert engine.donation_argnums(engine._decode_segment) == (1, 2)
+    assert engine.donation_argnums(engine._prefill_one) == (1, 2)
+
+
+# ---------------------------------------------------------------------------
+# The taxonomy itself
+# ---------------------------------------------------------------------------
+
+def test_catalog_is_well_formed():
+    assert len(CATALOG) >= 20
+    for code, (name, sev, doc) in CATALOG.items():
+        assert code.startswith("TPP") and len(code) == 6, code
+        assert sev in ("error", "warning")
+        assert name == name.lower() and " " not in name
+        assert doc
+    d = diagnostics.diag("TPP101", "msg", site="spec")
+    assert d.render() == "TPP101 racy-parallel-reduction [spec]: msg"
+
+
+def test_enforce_raises_first_error_and_warns_warnings():
+    ds = [diagnostics.diag("TPP205", "m1", site="s"),
+          diagnostics.diag("TPP101", "m2", site="s")]
+    with pytest.warns(AnalysisWarning, match="TPP205"):
+        with pytest.raises(LegalityError) as ei:
+            diagnostics.enforce(ds, exc=LegalityError)
+    assert ei.value.code == "TPP101"
+    with pytest.warns(AnalysisWarning, match="TPP101"):
+        diagnostics.enforce(ds, exc=LegalityError, downgrade_errors=True)
+
+
+def test_lint_driver_runs_clean(capsys):
+    from repro.analysis import lint
+    n_errors = lint.run_lint(configs=("whisper_small",), m=64,
+                             max_candidates=16, top_k=2)
+    assert n_errors == 0
