@@ -19,6 +19,12 @@ against the in-kernel counter-PRNG graph (``dropout_rng`` — a scalar seed,
 zero mask traffic).  The wall/model/traffic deltas land in
 ``BENCH_fusion_dropout.json``.
 
+A fifth section runs the observability profiler (``repro.obs.profiler``)
+over the fused library graphs: warmup+median wall time beside the perf
+model's prediction per graph, with relative drift flags and the
+process-global fusion/tune counters, written to
+``BENCH_fusion_profile.json`` (see docs/observability.md).
+
 Row format matches the other benchmarks: ``name,usec,extras``.
 """
 import argparse
@@ -39,6 +45,8 @@ from repro.kernels.brgemm import pick_tiles
 DROPOUT_JSON_PATH = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
     "BENCH_fusion_dropout.json")
+PROFILE_JSON_PATH = os.path.join(os.path.dirname(DROPOUT_JSON_PATH),
+                                 "BENCH_fusion_profile.json")
 
 
 def _bench(fn, iters=10):
@@ -162,6 +170,52 @@ def run(smoke: bool = False):
     rows.extend(_dropout_rows(rng, smoke))
     rows.extend(_gated_mlp_rows(rng, smoke))
     rows.extend(_backward_rows(rng, smoke))
+    rows.extend(_profiler_rows(smoke))
+    return rows
+
+
+def _profiler_rows(smoke):
+    """Model-vs-measured attribution over the fused library graphs
+    (``repro.obs.profiler``): each graph gets a warmup+median wall-clock
+    measurement on the XLA reference path beside its perf-model prediction.
+    Records, relative drift flags, and the process-global ``fusion.*`` /
+    ``tune.*`` counters accumulated by this benchmark run land in
+    ``BENCH_fusion_profile.json``."""
+    from repro.obs import profiler
+    from repro.obs.metrics import default_registry
+
+    rows = []
+    m, k, n = (256, 512, 512) if smoke else (2048, 2048, 1024)
+    graphs = [
+        ("mlp_gelu", fusion.fused_mlp_graph("gelu")),
+        ("gated_mlp_silu", fusion.fused_gated_mlp_graph("silu")),
+        ("output_dropout", fusion.fused_output_graph(0.1)),
+    ]
+    records = []
+    for name, g in graphs:
+        rec = profiler.profile_graph(g, m, k, n, backend="xla",
+                                     iters=3 if smoke else 5, warmup=1)
+        records.append(rec)
+        rows.append((
+            f"fusion_profile_{name}_{m}x{k}x{n}",
+            rec.measured_s * 1e6,
+            f"predicted_us={rec.predicted_s * 1e6:.1f}"
+            f";drift={rec.drift:.1f};bound={rec.bound};spec={rec.spec}",
+        ))
+    flags = profiler.drift_flags(records)
+    snap = default_registry().snapshot()
+    counters = {key: val for key, val in snap.items()
+                if key.startswith(("fusion.", "tune."))}
+    report = {
+        "smoke": smoke,
+        "shape": [m, k, n],
+        "backend": "xla",
+        "records": [r.to_dict() for r in records],
+        "drift_flags": flags,
+        "counters": counters,
+    }
+    with open(PROFILE_JSON_PATH, "w") as f:
+        json.dump(report, f, indent=1)
     return rows
 
 

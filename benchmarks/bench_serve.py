@@ -17,10 +17,15 @@ replay fixture ``tests/data/serve_trace.json``).  Two ways to serve it:
 
 Tokens/sec counts only *requested* tokens (the baseline's overrun tokens
 are waste, not throughput).  The report (``BENCH_serve.json``) carries the
-engine's per-step tokens/sec trajectory and per-request TTFT / per-token
-latency histograms.  ``--smoke`` runs a reduced model and also gates
-engine-vs-loop greedy parity (same tokens on a uniform batch) — the CI
-hook in ``scripts/check.sh``.
+engine's per-step tokens/sec trajectory, per-request TTFT / per-token
+latency histograms, the engine's metrics-registry snapshot, and the per-step
+queue-depth / occupancy / preemption series read back from the flight
+recorder (``docs/observability.md``).  The timed engine run also exports a
+Chrome trace (``BENCH_serve_trace.json``) from the engine's tracing spans —
+``python -m repro.obs.trace --validate`` gates it in ``scripts/check.sh``.
+``--smoke`` runs a reduced model and also gates engine-vs-loop greedy
+parity (same tokens on a uniform batch) — the CI hook in
+``scripts/check.sh``.
 
 Row format matches the other benchmarks: ``name,usec,extras``.
 """
@@ -37,6 +42,8 @@ JSON_PATH = os.path.join(
     "BENCH_serve.json")
 FAULTS_JSON_PATH = os.path.join(os.path.dirname(JSON_PATH),
                                 "BENCH_serve_faults.json")
+TRACE_JSON_PATH = os.path.join(os.path.dirname(JSON_PATH),
+                               "BENCH_serve_trace.json")
 
 
 def synth_trace(seed: int, n: int, vocab: int, *, plen_lo=4, plen_hi=48,
@@ -58,24 +65,23 @@ def synth_trace(seed: int, n: int, vocab: int, *, plen_lo=4, plen_hi=48,
 
 
 def _run_engine(cfg, params, reqs, *, num_slots, max_seq, seed=0,
-                segment_len=8):
+                segment_len=8, tracer=None):
     from repro.serve import Engine, EngineConfig
     ecfg = EngineConfig(num_slots=num_slots, page_size=16, max_seq=max_seq,
                         segment_len=segment_len, seed=seed)
-    eng = Engine(cfg, params, ecfg)
+    # flight capacity sized to hold every step of the run so the per-step
+    # queue/occupancy series in the report covers the whole trace
+    eng = Engine(cfg, params, ecfg, tracer=tracer, flight_capacity=4096)
     for r in reqs:
         eng.submit(r["prompt"], r["max_new"], temperature=r["temperature"],
                    top_k=r["top_k"], top_p=r["top_p"], uid=r["uid"])
     t0 = time.perf_counter()
     trajectory = []   # (elapsed_s, cumulative_tokens)
-    tokens = 0
     while not eng.idle:
-        before = {u: len(v) for u, v in eng._out.items()}
         eng.step()
-        tokens += sum(len(v) - before.get(u, 0)
-                      for u, v in eng._out.items())
-        trajectory.append((time.perf_counter() - t0, tokens))
+        trajectory.append((time.perf_counter() - t0, eng.tokens_generated))
     wall = time.perf_counter() - t0
+    tokens = eng.tokens_generated
     ttft = [eng.metrics[r["uid"]]["first_token"]
             - eng.metrics[r["uid"]]["submitted"] for r in reqs]
     per_token = []
@@ -83,7 +89,24 @@ def _run_engine(cfg, params, reqs, *, num_slots, max_seq, seed=0,
         ts = eng.metrics[r["uid"]]["token_times"]
         per_token += list(np.diff(ts))
     outs = {r["uid"]: eng.collect(r["uid"]) for r in reqs}
-    return wall, tokens, trajectory, ttft, per_token, outs
+    return wall, tokens, trajectory, ttft, per_token, outs, eng
+
+
+def _step_series(eng):
+    """Per-step queue-depth / occupancy / free-page series from the engine's
+    flight recorder — the observability satellite's report columns."""
+    num_pages = eng.kv.num_pages
+    series = []
+    for rec in eng.flight.records():
+        free = rec.get("free_pages", num_pages)
+        series.append({
+            "step": rec.get("step"),
+            "queue_depth": rec.get("queue_depth"),
+            "running": rec.get("running"),
+            "occupancy": round((num_pages - free) / num_pages, 4),
+            "tokens_total": rec.get("tokens_total"),
+        })
+    return series
 
 
 def _run_static(cfg, params, reqs, *, num_slots, scfg):
@@ -152,9 +175,12 @@ def run(smoke: bool = False):
                  f"batch={num_slots};equal={parity}"))
 
     # -- throughput: warm both paths once, then time -----------------------
+    from repro.obs import trace as obs_trace
     _run_engine(cfg, params, reqs, num_slots=num_slots, max_seq=max_seq)
-    e_wall, e_tok, traj, ttft, per_tok, _ = _run_engine(
-        cfg, params, reqs, num_slots=num_slots, max_seq=max_seq)
+    tracer = obs_trace.Tracer()   # explicit tracer → exported Chrome trace
+    e_wall, e_tok, traj, ttft, per_tok, _, eng = _run_engine(
+        cfg, params, reqs, num_slots=num_slots, max_seq=max_seq,
+        tracer=tracer)
     _run_static(cfg, params, reqs, num_slots=num_slots, scfg=scfg_time)
     s_wall, s_tok = _run_static(cfg, params, reqs, num_slots=num_slots,
                                 scfg=scfg_time)
@@ -184,9 +210,18 @@ def run(smoke: bool = False):
         "ttft_hist": _hist(ttft),
         "per_token_hist": _hist(per_tok),
         "parity_engine_vs_loop": parity,
+        "registry_snapshot": eng.registry.snapshot(),
+        "step_series": _step_series(eng),
     }
     with open(JSON_PATH, "w") as f:
         json.dump(report, f, indent=1)
+
+    # Chrome trace of the timed engine run (chrome://tracing / Perfetto);
+    # scripts/check.sh validates its schema via `repro.obs.trace --validate`
+    chrome = obs_trace.chrome_trace(tracer.spans(), t0=tracer.t0,
+                                    process_name="bench_serve")
+    with open(TRACE_JSON_PATH, "w") as f:
+        json.dump(chrome, f, indent=1)
 
     # throughput gate: ragged continuous batching must beat static batching
     # (CI smoke allows a little scheduling noise on shared runners)
@@ -244,7 +279,7 @@ def run_faults(smoke: bool = False):
     submit_all(golden_eng)
     golden = golden_eng.run()
 
-    eng = Engine(cfg, params, ecfg, faults=plan)
+    eng = Engine(cfg, params, ecfg, faults=plan, flight_capacity=2048)
     submit_all(eng)
     t0 = time.perf_counter()
     steps = 0
@@ -257,6 +292,11 @@ def run_faults(smoke: bool = False):
     assert eng.kv.free_pages == eng.kv.num_pages, "page leak under faults"
     assert eng.status(poison_uid) == RequestStatus.FAILED
     assert eng.stats["preemptions"] >= 1
+    # the NaN poisoning must have tripped the flight recorder's black box
+    dump = eng.flight.last_dump
+    assert dump is not None and dump["reason"] == "nan_quarantine", (
+        "poisoned request did not produce a nan_quarantine flight dump")
+    assert poison_uid in dump["context"]["uids"]
 
     finished = [r for r in reqs
                 if eng.status(r["uid"]) == RequestStatus.FINISHED]
@@ -283,6 +323,10 @@ def run_faults(smoke: bool = False):
         "steps_to_drain": steps,
         "statuses": statuses,
         "engine_stats": eng.stats,
+        "registry_snapshot": eng.registry.snapshot(),
+        "step_series": _step_series(eng),
+        "flight_dump_reason": dump["reason"],
+        "flight_replay_tail": eng.flight.replay(8),
         "goodput_tokens": goodput_tok,
         "goodput_tokens_per_sec": goodput,
         "parity_with_fault_free_golden": True,

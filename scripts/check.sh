@@ -64,6 +64,23 @@ python benchmarks/bench_serve.py --smoke
 # bit-parity of unaffected requests vs a fault-free golden run (goodput
 # report: BENCH_serve_faults.json).
 python benchmarks/bench_serve.py --smoke --faults
+# observability gate (docs/observability.md): the serve smoke above must
+# have produced a schema-valid Chrome trace and a metrics-registry snapshot
+# with live counters, and the model-vs-measured drift report must run clean.
+# (Disable the whole layer with REPRO_OBS=0 — the gate then only checks the
+# artifacts exist with null contents, so it must run enabled here.)
+python -m repro.obs.trace --validate BENCH_serve_trace.json
+python - <<'PY'
+import json
+snap = json.load(open("BENCH_serve.json"))["registry_snapshot"]
+assert snap.get("serve.tokens", 0) > 0, f"empty registry snapshot: {snap}"
+assert "serve.step_s" in snap, "step-latency histogram missing from snapshot"
+series = json.load(open("BENCH_serve.json"))["step_series"]
+assert series and {"step", "queue_depth", "occupancy"} <= set(series[0])
+print(f"observability snapshot smoke: OK ({len(snap)} instruments, "
+      f"{len(series)} step records)")
+PY
+python -m repro.obs.report --smoke
 # grad-parity smoke: derived backward TppGraphs (fusion.autodiff) vs
 # jax.grad of the composed-TPP reference, plus the fused-training step.
 # The no-arg run above already executed the full autodiff suite — only

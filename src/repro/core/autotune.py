@@ -44,6 +44,7 @@ from typing import Callable, Optional, Sequence
 from repro.core.loops import LegalityError, LoopSpec, ThreadedLoop, loop_signature
 from repro.core.pallas_lowering import TensorMap
 from repro.core import perf_model, tunecache
+from repro.obs import metrics as obs_metrics, trace as obs_trace
 
 __all__ = [
     "prime_factors", "prefix_product_blockings", "generate_candidates",
@@ -918,21 +919,26 @@ def autotune_with_stats(
         max_candidates=max_candidates, seed=seed, top_k=top_k,
         validate_fn=validate_fn, stats=stats,
     )
-    if strategy == "exhaustive":
-        results = _search_exhaustive(loops, in_maps, out_map, **common)
-    elif strategy == "streaming":
-        if top_k is None:
-            # without a result bound there is no pruning threshold; fall back
-            # to scoring everything the stream yields
-            common["top_k"] = 1 << 30
-        results = _search_streaming(
-            loops, in_maps, out_map, batch_size=batch_size,
-            spec_filter=spec_filter, **common)
-    else:
-        raise ValueError(f"unknown search strategy {strategy!r}")
+    obs_metrics.default_registry().counter("tune.searches").inc()
+    with obs_trace.get_tracer().span(
+            "tune.search", cat="tune", strategy=strategy,
+            loops=loop_signature(loops), measured=measure_fn is not None) as sp:
+        if strategy == "exhaustive":
+            results = _search_exhaustive(loops, in_maps, out_map, **common)
+        elif strategy == "streaming":
+            if top_k is None:
+                # without a result bound there is no pruning threshold; fall
+                # back to scoring everything the stream yields
+                common["top_k"] = 1 << 30
+            results = _search_streaming(
+                loops, in_maps, out_map, batch_size=batch_size,
+                spec_filter=spec_filter, **common)
+        else:
+            raise ValueError(f"unknown search strategy {strategy!r}")
 
-    if measure_fn is not None:
-        results = _measure_rerank(results, measure_fn, measure_top_k)
+        if measure_fn is not None:
+            results = _measure_rerank(results, measure_fn, measure_top_k)
+        sp.set(results=len(results))
     stats.search_time_s = time.perf_counter() - t0
     if tc is not None and key is not None and results:
         tc.store(key, _entry_from_results(results, stats))

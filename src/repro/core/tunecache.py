@@ -31,6 +31,8 @@ import warnings
 from pathlib import Path
 from typing import Optional
 
+from repro.obs.metrics import default_registry
+
 __all__ = [
     "CACHE_VERSION", "TuneCache", "default_cache_dir", "default_cache",
     "cache_key",
@@ -72,11 +74,13 @@ class TuneCache:
         return self.path / f"{key}.json"
 
     def lookup(self, key: str) -> Optional[dict]:
+        reg = default_registry()
         path = self._file(key)
         try:
             with open(path) as f:
                 entry = json.load(f)
         except OSError:
+            reg.counter("tune.cache.misses").inc()
             return None                       # no entry — a plain miss
         except ValueError:
             # corrupted/truncated file (interrupted writer, disk fault):
@@ -89,9 +93,13 @@ class TuneCache:
                 os.unlink(path)
             except OSError:
                 pass
+            reg.counter("tune.cache.corrupt_recoveries").inc()
+            reg.counter("tune.cache.misses").inc()
             return None
         if not isinstance(entry, dict) or entry.get("version") != CACHE_VERSION:
+            reg.counter("tune.cache.misses").inc()
             return None
+        reg.counter("tune.cache.hits").inc()
         return entry
 
     def store(self, key: str, entry: dict) -> None:
@@ -104,6 +112,7 @@ class TuneCache:
             self.path.mkdir(parents=True, exist_ok=True)
             fd, tmp = tempfile.mkstemp(dir=self.path, suffix=".tmp")
         except OSError as exc:
+            default_registry().counter("tune.cache.store_failures").inc()
             warnings.warn(f"repro-tune: cannot write cache entry under "
                           f"{self.path} ({exc}); result not persisted",
                           RuntimeWarning)
@@ -118,6 +127,8 @@ class TuneCache:
             except OSError:
                 pass
             if isinstance(exc, OSError):
+                default_registry().counter(
+                    "tune.cache.store_failures").inc()
                 warnings.warn(f"repro-tune: failed writing cache entry "
                               f"{key[:12]}… ({exc}); result not persisted",
                               RuntimeWarning)

@@ -10,8 +10,8 @@ from repro.fusion.lowering import (DEFAULT_SPEC, clear_fallback_blocklist,
                                    fallback_blocklist, force_pallas_failure,
                                    validate_epilogue_band)
 from repro.fusion.cost import (autotune_graph, estimate_unfused, graph_cost,
-                               graph_signature, schedule_kwargs,
-                               UnfusedEstimate)
+                               graph_signature, measured_autotune_graph,
+                               schedule_kwargs, UnfusedEstimate)
 from repro.fusion.autodiff import (BackwardPlan, backward_graphs,
                                    compile_with_vjp, derive_vjp)
 from repro.fusion.library import (fused_attn_out_apply, fused_attn_out_graph,
@@ -27,7 +27,8 @@ __all__ = [
     "compile", "compile_for_backend", "validate_epilogue_band", "DEFAULT_SPEC",
     "fallback_blocklist", "clear_fallback_blocklist", "force_pallas_failure",
     "derive_vjp", "BackwardPlan", "backward_graphs", "compile_with_vjp",
-    "graph_cost", "autotune_graph", "estimate_unfused", "UnfusedEstimate",
+    "graph_cost", "autotune_graph", "measured_autotune_graph",
+    "estimate_unfused", "UnfusedEstimate",
     "schedule_kwargs", "graph_signature",
     "fused_output_graph", "fused_mlp_graph", "fused_gated_mlp_graph",
     "fused_qkv_graph", "fused_attn_out_graph",

@@ -27,8 +27,9 @@ from repro.core.loops import ThreadedLoop
 from repro.fusion import lowering
 from repro.fusion.graph import EPILOGUE_OPS, TppGraph, simplify_graph
 
-__all__ = ["graph_cost", "autotune_graph", "estimate_unfused",
-           "UnfusedEstimate", "schedule_kwargs", "graph_signature"]
+__all__ = ["graph_cost", "autotune_graph", "measured_autotune_graph",
+           "estimate_unfused", "UnfusedEstimate", "schedule_kwargs",
+           "graph_signature"]
 
 
 def schedule_kwargs(candidate: autotune.Candidate) -> dict:
@@ -267,6 +268,26 @@ def autotune_graph(
         cache_extra=("tppgraph", graph_signature(graph), m, k, n),
     )
     return (results, stats) if return_stats else results
+
+
+def measured_autotune_graph(graph, m, k, n, *, backend: str = "xla",
+                            measure_iters: int = 3, measure_warmup: int = 1,
+                            seed: int = 0, **kw):
+    """:func:`autotune_graph` with the model's top candidates re-ranked by
+    *real wall-clock measurement* (``repro.obs.profiler``'s warmup+median
+    discipline) — the model-plus-measurement loop the ROADMAP's fleet-scale
+    autotuning item calls for.  Measured times persist in the tune cache
+    (``measured_s``), so later processes inherit the re-ranking for free.
+    ``backend="pallas"``/``"pallas_interpret"`` compile each candidate's
+    schedule (schedule-sensitive); ``"xla"`` measures the graph once per
+    candidate under XLA's own schedule (a calibration signal only)."""
+    from repro.obs import profiler
+
+    measure_fn = profiler.make_measure_fn(
+        graph, m, k, n, dtype=kw.get("dtype", np.float32), backend=backend,
+        tiles=kw.get("tiles"), seed=seed, iters=measure_iters,
+        warmup=measure_warmup)
+    return autotune_graph(graph, m, k, n, measure_fn=measure_fn, **kw)
 
 
 # ---------------------------------------------------------------------------

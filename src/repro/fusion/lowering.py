@@ -43,6 +43,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import tpp
 from repro.core.autotune import _freeze as _freeze_kw
+from repro.obs import metrics as obs_metrics, trace as obs_trace
 from repro.core.loops import LoopSpec, ThreadedLoop
 from repro.core.pallas_lowering import (TensorMap, make_pallas_fn, plan_pallas,
                                         validate_reduction_innermost)
@@ -325,6 +326,15 @@ def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
     plan_cache: dict = {}  # (operand shapes/dtypes) -> pallas call
 
     def build_call(m, k, n, x_dtype, odt):
+        # every call here is one planned fused nest for a NEW operand shape —
+        # the recompile point the fusion.lowerings counter tracks
+        obs_metrics.default_registry().counter("fusion.lowerings").inc()
+        with obs_trace.get_tracer().span(
+                "fusion.lower", cat="fusion", graph=graph.name,
+                m=m, k=k, n=n, spec=spec_string):
+            return _build_call(m, k, n, x_dtype, odt)
+
+    def _build_call(m, k, n, x_dtype, odt):
         from repro.kernels.brgemm import pick_tiles
         bm, bk, bn = tiles or pick_tiles(m, k, n, x_dtype)
         loops, in_maps, out_map = build_nest_inputs(
@@ -644,6 +654,9 @@ def _note_fallback(graph: TppGraph, exc: BaseException) -> None:
     if graph not in _FALLBACK_BLOCKLIST:
         reason = f"{type(exc).__name__}: {exc}"
         _FALLBACK_BLOCKLIST[graph] = reason
+        obs_metrics.default_registry().counter("fusion.fallbacks").inc()
+        obs_trace.get_tracer().event("fusion.fallback", cat="fusion",
+                                     graph=graph.name, reason=reason)
         _LOG.warning(
             "fused Pallas lowering of graph %r failed (%s); falling back to "
             "the composed-TPP XLA reference for this graph (set "
@@ -715,6 +728,7 @@ def compile_for_backend(graph: TppGraph, backend: Optional[str] = None, **kw):
         kw.pop("spec_string", None)
         kw.pop("block_steps", None)
         kw.pop("hw_prng", None)
+    reg = obs_metrics.default_registry()
     try:
         key = (graph, backend,
                tuple(sorted((k, _freeze_kw(v)) for k, v in kw.items())))
@@ -722,11 +736,15 @@ def compile_for_backend(graph: TppGraph, backend: Optional[str] = None, **kw):
     except TypeError:   # unhashable kwarg (e.g. a live mesh object)
         key, hit = None, None
     if hit is not None:
+        reg.counter("fusion.compile_cache.hits").inc()
         return hit
-    if backend == "xla":
-        fn = compile(graph, path="xla", **kw)
-    else:
-        fn = _guarded_pallas(graph, backend, kw)
+    reg.counter("fusion.compile_cache.misses").inc()
+    with obs_trace.get_tracer().span("fusion.compile", cat="fusion",
+                                     graph=graph.name, backend=backend):
+        if backend == "xla":
+            fn = compile(graph, path="xla", **kw)
+        else:
+            fn = _guarded_pallas(graph, backend, kw)
     if key is not None:
         _COMPILE_CACHE[key] = fn
     return fn

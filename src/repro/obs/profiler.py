@@ -1,0 +1,238 @@
+"""Kernel profiler: wall-clock timing of compiled TppGraphs, recorded
+side-by-side with ``perf_model`` predictions.
+
+The paper's cost model ranks schedules *analytically*; PolyDL's finding (and
+the ROADMAP's fleet-scale-autotuning item) is that an analytic model plus a
+little real measurement beats either alone.  This module is the measurement
+half:
+
+* :func:`time_callable` — the timing discipline every number here goes
+  through: ``warmup`` untimed calls (jit compilation, caches), then the
+  **median** of ``iters`` timed calls, each synchronized via
+  ``jax.block_until_ready``.  The clock is injectable, so the drift-table
+  golden test scripts it.
+* :func:`profile_graph` — compile a graph on a backend, time it, pair the
+  measurement with ``fusion.graph_cost``'s prediction for the same schedule
+  → a :class:`ProfileRecord` carrying the drift ratio and roofline bound
+  class.
+* :func:`make_measure_fn` — adapt the profiler to ``autotune``'s
+  ``measure_fn(candidate) -> seconds`` hook: this is what the ROADMAP's
+  schedule-bank sweep plugs in.  On the ``"pallas"``/``"pallas_interpret"``
+  backends the candidate's schedule is compiled in, so measurement is
+  schedule-sensitive; on ``"xla"`` XLA picks its own schedule — the
+  measurement is then a *backend calibration* constant across candidates,
+  not a ranking signal (documented, not hidden).
+
+Drift = measured / predicted.  The model predicts an idealized TPU target,
+so on CPU hosts absolute drift is large and roughly constant per backend —
+the *relative* drift across graphs and schedules is the signal, and
+:func:`attribution_table` flags records whose drift strays from the set's
+median by more than ``threshold``×.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+__all__ = [
+    "time_callable", "synth_operands", "profile_graph", "make_measure_fn",
+    "ProfileRecord", "attribution_table", "drift_flags",
+]
+
+
+def time_callable(fn: Callable[[], object], *, iters: int = 5,
+                  warmup: int = 2, clock=None) -> tuple[float, list[float]]:
+    """(median seconds, all samples) of ``fn()`` after ``warmup`` untimed
+    calls.  Results are synchronized with ``jax.block_until_ready`` so async
+    dispatch cannot fake a fast kernel."""
+    import jax
+
+    if iters < 1:
+        raise ValueError("need iters >= 1")
+    clock = clock if clock is not None else time.perf_counter
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    samples = []
+    for _ in range(iters):
+        t0 = clock()
+        jax.block_until_ready(fn())
+        samples.append(clock() - t0)
+    return float(statistics.median(samples)), samples
+
+
+def synth_operands(graph, m: int, k: int, n: int, *, dtype=np.float32,
+                   seed: int = 0) -> dict:
+    """Deterministic random operands matching ``graph``'s operand specs
+    (post-simplification): lhs/rhs honor ``trans`` layouts, masks draw
+    bools, scalars draw a uint32 seed, rowvecs are (n,)."""
+    import jax.numpy as jnp
+    from repro.fusion.graph import simplify_graph
+
+    rng = np.random.default_rng(seed)
+    ops = {}
+    for spec in simplify_graph(graph).operands:
+        if spec.kind == "lhs":
+            shape = (k, m) if spec.trans else (m, k)
+        elif spec.kind == "rhs":
+            shape = (n, k) if spec.trans else (k, n)
+        elif spec.kind == "tile":
+            shape = (m, n)
+        elif spec.kind == "mask":
+            ops[spec.name] = jnp.asarray(rng.random((m, n)) < 0.9)
+            continue
+        elif spec.kind == "scalar":
+            ops[spec.name] = jnp.uint32(rng.integers(0, 2**31))
+            continue
+        elif spec.kind == "rowvec":
+            shape = (n,)
+        else:
+            raise ValueError(f"unknown operand kind {spec.kind!r}")
+        ops[spec.name] = jnp.asarray(
+            rng.normal(size=shape).astype(np.dtype(dtype)))
+    return ops
+
+
+@dataclasses.dataclass
+class ProfileRecord:
+    """One graph × shape × schedule × backend measurement next to its
+    prediction.  ``drift`` > 1 means slower than predicted."""
+    name: str
+    shape: tuple[int, int, int]
+    backend: str
+    spec: str
+    predicted_s: float
+    measured_s: float
+    bound: str                    # roofline class: compute|memory|collective
+    iters: int
+    warmup: int
+    samples: tuple[float, ...] = ()
+
+    @property
+    def drift(self) -> float:
+        return self.measured_s / self.predicted_s
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["shape"] = list(self.shape)
+        d["samples"] = list(self.samples)
+        d["drift"] = self.drift
+        return d
+
+
+def _build_fn(graph, backend: str, *, tiles, spec_string, block_steps):
+    import jax
+
+    from repro.fusion import lowering
+
+    if backend == "xla":
+        return jax.jit(lowering.compile(graph, path="xla"))
+    if backend in ("pallas", "pallas_interpret"):
+        return lowering.compile(
+            graph, path="pallas", tiles=tiles, spec_string=spec_string,
+            block_steps=block_steps, interpret=(backend == "pallas_interpret"))
+    raise ValueError(f"unknown profiling backend {backend!r}; "
+                     "use 'xla', 'pallas' or 'pallas_interpret'")
+
+
+def profile_graph(graph, m: int, k: int, n: int, *, dtype=np.float32,
+                  backend: str = "xla", tiles=None,
+                  spec_string: Optional[str] = None, block_steps=None,
+                  operands: Optional[dict] = None, seed: int = 0,
+                  iters: int = 5, warmup: int = 2, clock=None,
+                  target=None) -> ProfileRecord:
+    """Measure ``graph`` at (M, K, N) on ``backend`` and pair the wall time
+    with the perf model's prediction for the same tiles + schedule."""
+    import jax.numpy as jnp
+
+    from repro.core import perf_model
+    from repro.fusion import cost, lowering
+    from repro.kernels.brgemm import pick_tiles
+
+    spec_string = spec_string or lowering.DEFAULT_SPEC
+    tiles = tiles or pick_tiles(m, k, n, jnp.dtype(dtype))
+    target = target or perf_model.TpuTarget()
+    rep = cost.graph_cost(graph, m, k, n, tiles=tiles, dtype=dtype,
+                          spec_string=spec_string, block_steps=block_steps,
+                          target=target)
+    ops = operands if operands is not None else synth_operands(
+        graph, m, k, n, dtype=dtype, seed=seed)
+    fn = _build_fn(graph, backend, tiles=tiles, spec_string=spec_string,
+                   block_steps=block_steps)
+    measured, samples = time_callable(lambda: fn(**ops), iters=iters,
+                                      warmup=warmup, clock=clock)
+    return ProfileRecord(
+        name=graph.name, shape=(m, k, n), backend=backend, spec=rep.spec,
+        predicted_s=rep.total_time, measured_s=measured, bound=rep.bound,
+        iters=iters, warmup=warmup, samples=tuple(samples))
+
+
+def make_measure_fn(graph, m: int, k: int, n: int, *, dtype=np.float32,
+                    backend: str = "pallas_interpret", tiles=None,
+                    operands: Optional[dict] = None, seed: int = 0,
+                    iters: int = 3, warmup: int = 1, clock=None):
+    """An ``autotune``/``autotune_graph`` ``measure_fn``: candidate →
+    median wall seconds of the graph compiled under that candidate's
+    schedule.  Pass it straight in::
+
+        fusion.autotune_graph(g, m, k, n,
+                              measure_fn=obs.profiler.make_measure_fn(
+                                  g, m, k, n, backend="pallas_interpret"))
+
+    Schedule-sensitive only on the pallas backends (XLA ignores the spec
+    string — see the module docstring)."""
+    from repro.fusion import cost
+
+    ops = operands if operands is not None else synth_operands(
+        graph, m, k, n, dtype=dtype, seed=seed)
+
+    def measure(candidate) -> float:
+        kw = cost.schedule_kwargs(candidate)
+        fn = _build_fn(graph, backend, tiles=tiles,
+                       spec_string=kw["spec_string"],
+                       block_steps=kw["block_steps"])
+        measured, _ = time_callable(lambda: fn(**ops), iters=iters,
+                                    warmup=warmup, clock=clock)
+        return measured
+
+    return measure
+
+
+def drift_flags(records: Sequence[ProfileRecord],
+                threshold: float = 3.0) -> list[bool]:
+    """Flag records whose drift strays more than ``threshold``× from the
+    set's median drift.  Comparing to the median (not to 1.0) factors out
+    the constant host-vs-target offset: on a CPU host every measurement is
+    uniformly far from the TPU model, and the outliers — schedules the model
+    mispriced *relative to its peers* — are what the table must surface."""
+    if not records:
+        return []
+    med = statistics.median(r.drift for r in records)
+    flags = []
+    for r in records:
+        rel = r.drift / med if med > 0 else float("inf")
+        flags.append(rel > threshold or rel < 1.0 / threshold)
+    return flags
+
+
+def attribution_table(records: Sequence[ProfileRecord],
+                      threshold: float = 3.0) -> str:
+    """The model-vs-measured table ``python -m repro.obs.report`` prints:
+    one row per record — predicted s, measured s, drift ratio, roofline
+    bound class — with a ``DRIFT`` marker on flagged rows."""
+    flags = drift_flags(records, threshold)
+    header = (f"{'graph':<28} {'shape':<16} {'backend':<16} {'spec':<8} "
+              f"{'predicted_s':>12} {'measured_s':>12} {'drift':>9} "
+              f"{'bound':<8} flag")
+    lines = [header, "-" * len(header)]
+    for r, flagged in zip(records, flags):
+        shape = "x".join(str(d) for d in r.shape)
+        lines.append(
+            f"{r.name:<28} {shape:<16} {r.backend:<16} {r.spec:<8} "
+            f"{r.predicted_s:>12.3e} {r.measured_s:>12.3e} "
+            f"{r.drift:>9.2f} {r.bound:<8} "
+            f"{'DRIFT' if flagged else 'ok'}")
+    return "\n".join(lines)

@@ -1,0 +1,114 @@
+"""Engine flight recorder: a bounded ring buffer of recent step records,
+dumped automatically when something goes wrong.
+
+Every ``Engine.step`` appends one record — the step's scheduler decisions
+(admissions, preemptions, page grows, retirements, quarantines, injected
+faults), the per-slot states after the step, and the queue/pool gauges.
+The buffer is bounded (``capacity`` records), so a long-serving engine keeps
+only the recent past — exactly the part a postmortem needs.
+
+Dump triggers (wired in ``serve.engine``):
+
+* ``EngineDrainError`` — ``run()`` hit ``max_steps``; the dump rides the
+  exception as ``.flight``;
+* ``Engine.validate()`` failure — the invariant that broke plus the steps
+  that led to it;
+* NaN quarantine — a request's logits went non-finite.
+
+``dump_on_fault`` always keeps the dump in memory (``last_dump`` — chaos
+tests assert on it) and, when ``REPRO_OBS_DUMP_DIR`` is set, also writes
+``flight_<reason>_<n>.json`` there for offline inspection.  ``replay()``
+renders the final N steps' decisions as human-readable lines.
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import logging
+import os
+import time
+from collections import deque
+from typing import Optional
+
+__all__ = ["FlightRecorder"]
+
+_LOG = logging.getLogger("repro.obs")
+
+_DUMP_SEQ = itertools.count()
+
+
+class FlightRecorder:
+    """Bounded ring of per-step engine records + fault-dump bookkeeping."""
+
+    def __init__(self, capacity: int = 256):
+        if capacity < 1:
+            raise ValueError("flight recorder needs capacity >= 1")
+        self.capacity = capacity
+        self._buf: deque[dict] = deque(maxlen=capacity)
+        self.steps_recorded = 0
+        self.last_dump: Optional[dict] = None
+
+    def record(self, **fields) -> None:
+        """Append one step record (plain JSON-able values only)."""
+        self._buf.append(fields)
+        self.steps_recorded += 1
+
+    def records(self) -> list[dict]:
+        """Oldest-first view of the retained window."""
+        return list(self._buf)
+
+    def clear(self) -> None:
+        self._buf.clear()
+        self.steps_recorded = 0
+
+    # -- fault dumps ---------------------------------------------------------
+
+    def dump_on_fault(self, reason: str, **context) -> dict:
+        """Snapshot the ring into a dump: kept on ``last_dump``, logged, and
+        written to ``$REPRO_OBS_DUMP_DIR`` when that is set.  Never raises —
+        a failing dump must not mask the fault being reported."""
+        dump = {
+            "reason": reason,
+            "context": context,
+            "captured_at": time.time(),
+            "steps_recorded": self.steps_recorded,
+            "records": self.records(),
+        }
+        self.last_dump = dump
+        _LOG.warning(
+            "flight recorder: dumping last %d step records on fault %r",
+            len(dump["records"]), reason)
+        dump_dir = os.environ.get("REPRO_OBS_DUMP_DIR")
+        if dump_dir:
+            try:
+                os.makedirs(dump_dir, exist_ok=True)
+                path = os.path.join(
+                    dump_dir, f"flight_{reason}_{next(_DUMP_SEQ)}.json")
+                with open(path, "w") as f:
+                    json.dump(dump, f, indent=1, default=str)
+                dump["path"] = path
+            except OSError as exc:
+                _LOG.warning("flight recorder: could not write dump (%s)", exc)
+        return dump
+
+    # -- replay --------------------------------------------------------------
+
+    def replay(self, n: Optional[int] = None) -> list[str]:
+        """The final ``n`` steps' scheduler decisions as readable lines —
+        what a postmortem reads first.  ``n=None`` replays the whole ring."""
+        recs = self.records()
+        if n is not None:
+            recs = recs[-n:]
+        lines = []
+        for r in recs:
+            evs = "; ".join(
+                ev[0] + "(" + ",".join(f"{k}={v}" for k, v in ev[1].items())
+                + ")"
+                for ev in r.get("events", ())) or "no decisions"
+            lines.append(
+                f"step {r.get('step', '?')}: {evs} | "
+                f"queue={r.get('queue_depth', '?')} "
+                f"running={r.get('running', '?')} "
+                f"free_pages={r.get('free_pages', '?')} "
+                f"tokens={r.get('tokens_total', '?')}")
+        return lines

@@ -1,0 +1,376 @@
+"""Tracing spans — the timeline view of engine steps, fusion compiles and
+autotune searches, exportable as Chrome-trace/Perfetto JSON.
+
+A :class:`Tracer` records nestable, thread-safe :class:`Span`\\ s on an
+injectable clock (the golden tests drive a fake one).  Nesting is tracked
+per thread: a span opened while another is live on the same thread records
+it as parent, so the exported timeline shows prefill inside admit inside
+step.  Instant events (``Tracer.event``) mark zero-duration occurrences —
+preemptions, fallbacks, fault injections.
+
+Span *names* form a stable taxonomy (``docs/observability.md``):
+``engine.step`` / ``engine.admit`` / ``engine.prefill`` /
+``engine.decode_segment`` / ``engine.grow`` / ``engine.preempt`` /
+``engine.retire`` / ``fusion.compile`` / ``fusion.lower`` /
+``fusion.fallback`` / ``tune.search``.
+
+Export/convert/validate from the shell::
+
+    python -m repro.obs.trace spans.json -o trace.json   # raw dump → Chrome
+    python -m repro.obs.trace --validate trace.json      # schema check (CI)
+
+Load the Chrome JSON in ``chrome://tracing`` or https://ui.perfetto.dev.
+When observability is disabled (``REPRO_OBS=0``) :func:`get_tracer` returns
+the :data:`NULL_TRACER`, whose ``span``/``event`` are allocation-free no-ops.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+import threading
+import time
+from typing import Optional
+
+__all__ = [
+    "Span", "Tracer", "NullTracer", "NULL_TRACER", "get_tracer",
+    "set_tracer", "chrome_trace", "validate_chrome_trace",
+]
+
+
+@dataclasses.dataclass
+class Span:
+    """One closed (or in-flight) interval.  Times are the tracer clock's
+    seconds; ``end`` is None while the span is open."""
+    sid: int
+    name: str
+    cat: str
+    start: float
+    end: Optional[float] = None
+    tid: int = 0
+    parent: Optional[int] = None
+    args: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def duration(self) -> float:
+        return (self.end - self.start) if self.end is not None else 0.0
+
+    def set(self, **args) -> "Span":
+        """Attach/overwrite args after opening (e.g. counts known at exit)."""
+        self.args.update(args)
+        return self
+
+    def to_dict(self) -> dict:
+        return {"sid": self.sid, "name": self.name, "cat": self.cat,
+                "start": self.start, "end": self.end, "tid": self.tid,
+                "parent": self.parent, "args": self.args}
+
+
+class _SpanHandle:
+    """Context manager closing one span; proxies ``set`` for exit-time args."""
+
+    __slots__ = ("_tracer", "span")
+
+    def __init__(self, tracer: "Tracer", span: Span):
+        self._tracer = tracer
+        self.span = span
+
+    def set(self, **args) -> "_SpanHandle":
+        self.span.set(**args)
+        return self
+
+    def __enter__(self) -> "_SpanHandle":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._tracer._close(self.span)
+
+
+class Tracer:
+    """Thread-safe span recorder on an injectable clock.
+
+    ``max_spans`` bounds memory: past the cap new spans are counted as
+    dropped rather than recorded (the trace notes the drop count on
+    export) — a long-lived engine cannot grow a trace without bound."""
+
+    def __init__(self, clock=None, *, max_spans: int = 200_000):
+        self._clock = clock if clock is not None else time.perf_counter
+        self._spans: list[Span] = []
+        self._lock = threading.Lock()
+        self._ids = itertools.count()
+        self._stack = threading.local()      # per-thread open-span stack
+        self._tids: dict[int, int] = {}      # real thread ident → small tid
+        self.max_spans = max_spans
+        self.dropped = 0
+        self.t0 = self._clock()
+
+    @property
+    def enabled(self) -> bool:
+        return True
+
+    def _tid(self) -> int:
+        ident = threading.get_ident()
+        tid = self._tids.get(ident)
+        if tid is None:
+            with self._lock:
+                tid = self._tids.setdefault(ident, len(self._tids))
+        return tid
+
+    def _parent(self) -> Optional[int]:
+        stack = getattr(self._stack, "open", None)
+        return stack[-1] if stack else None
+
+    def span(self, name: str, cat: str = "engine", **args) -> _SpanHandle:
+        """Open a span: ``with tracer.span("engine.step", step=3) as sp:``.
+        ``sp.set(...)`` attaches exit-time args."""
+        sp = Span(sid=next(self._ids), name=name, cat=cat,
+                  start=self._clock(), tid=self._tid(),
+                  parent=self._parent(), args=dict(args))
+        stack = getattr(self._stack, "open", None)
+        if stack is None:
+            stack = self._stack.open = []
+        stack.append(sp.sid)
+        return _SpanHandle(self, sp)
+
+    def _close(self, sp: Span) -> None:
+        sp.end = self._clock()
+        stack = getattr(self._stack, "open", None)
+        if stack and stack[-1] == sp.sid:
+            stack.pop()
+        elif stack and sp.sid in stack:     # out-of-order close: still pop
+            stack.remove(sp.sid)
+        with self._lock:
+            if len(self._spans) < self.max_spans:
+                self._spans.append(sp)
+            else:
+                self.dropped += 1
+
+    def event(self, name: str, cat: str = "engine", **args) -> None:
+        """Record an instant (zero-duration) event."""
+        t = self._clock()
+        sp = Span(sid=next(self._ids), name=name, cat=cat, start=t, end=t,
+                  tid=self._tid(), parent=self._parent(), args=dict(args))
+        with self._lock:
+            if len(self._spans) < self.max_spans:
+                self._spans.append(sp)
+            else:
+                self.dropped += 1
+
+    def spans(self) -> list[Span]:
+        with self._lock:
+            return list(self._spans)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._spans.clear()
+            self.dropped = 0
+
+    def save(self, path) -> None:
+        """Write the raw span dump (``python -m repro.obs.trace`` converts it
+        to Chrome format)."""
+        with open(path, "w") as f:
+            json.dump({"clock_t0": self.t0, "dropped": self.dropped,
+                       "spans": [s.to_dict() for s in self.spans()]},
+                      f, indent=1)
+
+
+class _NullSpanHandle:
+    """Shared no-op handle: enter/exit/set all do nothing."""
+
+    __slots__ = ()
+    span = None
+
+    def set(self, **args) -> "_NullSpanHandle":
+        return self
+
+    def __enter__(self) -> "_NullSpanHandle":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        pass
+
+
+_NULL_SPAN = _NullSpanHandle()
+
+
+class NullTracer:
+    """The disabled backend — ``span``/``event`` are allocation-free."""
+
+    t0 = 0.0
+    dropped = 0
+
+    @property
+    def enabled(self) -> bool:
+        return False
+
+    def span(self, name: str, cat: str = "engine", **args) -> _NullSpanHandle:
+        return _NULL_SPAN
+
+    def event(self, name: str, cat: str = "engine", **args) -> None:
+        pass
+
+    def spans(self) -> list:
+        return []
+
+    def clear(self) -> None:
+        pass
+
+    def save(self, path) -> None:
+        with open(path, "w") as f:
+            json.dump({"clock_t0": 0.0, "dropped": 0, "spans": []}, f)
+
+
+NULL_TRACER = NullTracer()
+
+_default_lock = threading.Lock()
+_default: "Tracer | NullTracer | None" = None
+
+
+def get_tracer():
+    """Process-default tracer: a real :class:`Tracer` when observability is
+    enabled, else :data:`NULL_TRACER`.  Engines accept an explicit tracer;
+    owner-less code (fusion compiles, tune searches) records here."""
+    global _default
+    if _default is None:
+        with _default_lock:
+            if _default is None:
+                from repro.obs import enabled
+                _default = Tracer() if enabled() else NULL_TRACER
+    return _default
+
+
+def set_tracer(tracer) -> "Tracer | NullTracer | None":
+    """Swap the process-default tracer; returns the previous value."""
+    global _default
+    with _default_lock:
+        prev = _default
+        _default = tracer
+    return prev
+
+
+# -- Chrome-trace export ----------------------------------------------------
+
+def chrome_trace(spans, *, t0: Optional[float] = None,
+                 process_name: str = "repro") -> dict:
+    """Render spans as Chrome Trace Event Format (the subset Perfetto and
+    chrome://tracing both load): closed spans → complete ``"X"`` events,
+    instants → ``"i"``, timestamps in microseconds relative to ``t0``."""
+    spans = list(spans)
+    if t0 is None:
+        t0 = min((s.start for s in spans), default=0.0)
+    events = [{
+        "ph": "M", "pid": 1, "tid": 0, "name": "process_name",
+        "args": {"name": process_name},
+    }]
+    for s in spans:
+        base = {
+            "name": s.name,
+            "cat": s.cat,
+            "ts": (s.start - t0) * 1e6,
+            "pid": 1,
+            "tid": s.tid,
+            "args": dict(s.args),
+        }
+        if s.end is not None and s.end > s.start:
+            base["ph"] = "X"
+            base["dur"] = (s.end - s.start) * 1e6
+        else:
+            base["ph"] = "i"
+            base["s"] = "t"         # thread-scoped instant
+        events.append(base)
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+_REQUIRED_EVENT_KEYS = ("name", "ph", "ts", "pid", "tid")
+
+
+def validate_chrome_trace(obj) -> list[str]:
+    """Schema check for the subset :func:`chrome_trace` emits.  Returns a
+    list of problems (empty = valid); CI gates on emptiness."""
+    errors = []
+    if not isinstance(obj, dict) or "traceEvents" not in obj:
+        return ["top level must be an object with a 'traceEvents' list"]
+    events = obj["traceEvents"]
+    if not isinstance(events, list):
+        return ["'traceEvents' must be a list"]
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            errors.append(f"event {i}: not an object")
+            continue
+        if ev.get("ph") == "M":
+            continue                         # metadata events are free-form
+        for key in _REQUIRED_EVENT_KEYS:
+            if key not in ev:
+                errors.append(f"event {i}: missing key {key!r}")
+        if not isinstance(ev.get("ts"), (int, float)):
+            errors.append(f"event {i}: 'ts' must be numeric")
+        elif ev["ts"] < 0:
+            errors.append(f"event {i}: negative timestamp {ev['ts']}")
+        ph = ev.get("ph")
+        if ph == "X":
+            if not isinstance(ev.get("dur"), (int, float)) or ev["dur"] < 0:
+                errors.append(f"event {i}: complete event needs dur >= 0")
+        elif ph == "i":
+            pass
+        elif ph is not None:
+            errors.append(f"event {i}: unsupported phase {ph!r}")
+        if "args" in ev and not isinstance(ev["args"], dict):
+            errors.append(f"event {i}: 'args' must be an object")
+    try:
+        json.dumps(obj)
+    except (TypeError, ValueError) as exc:
+        errors.append(f"not JSON-serializable: {exc}")
+    return errors
+
+
+def _spans_from_dump(dump: dict) -> list[Span]:
+    return [Span(sid=d["sid"], name=d["name"], cat=d["cat"],
+                 start=d["start"], end=d["end"], tid=d["tid"],
+                 parent=d["parent"], args=d.get("args", {}))
+            for d in dump["spans"]]
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.trace",
+        description="Convert a raw Tracer dump to Chrome-trace JSON, or "
+                    "validate an existing Chrome trace (CI gate).")
+    ap.add_argument("input", nargs="?", help="raw span dump (Tracer.save)")
+    ap.add_argument("-o", "--output", default=None,
+                    help="Chrome-trace output path (default: stdout)")
+    ap.add_argument("--validate", metavar="TRACE", default=None,
+                    help="validate a Chrome-trace JSON file and exit")
+    args = ap.parse_args(argv)
+
+    if args.validate is not None:
+        with open(args.validate) as f:
+            obj = json.load(f)
+        errors = validate_chrome_trace(obj)
+        n = len([e for e in obj.get("traceEvents", ())
+                 if isinstance(e, dict) and e.get("ph") != "M"])
+        if errors:
+            for e in errors:
+                print(f"INVALID: {e}")
+            return 1
+        print(f"valid Chrome trace: {n} events")
+        return 0
+
+    if args.input is None:
+        ap.error("need a raw span dump to convert (or --validate)")
+    with open(args.input) as f:
+        dump = json.load(f)
+    trace = chrome_trace(_spans_from_dump(dump))
+    out = json.dumps(trace, indent=1)
+    if args.output:
+        with open(args.output, "w") as f:
+            f.write(out)
+        print(f"wrote {args.output} ({len(trace['traceEvents'])} events)")
+    else:
+        print(out)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

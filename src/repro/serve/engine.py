@@ -51,8 +51,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.obs as obs
 from repro.configs.base import ModelConfig
 from repro.models import lm
+from repro.obs.recorder import FlightRecorder
 from repro.serve.faults import NO_FAULTS, POISON_OFF, FaultPlan
 from repro.serve.kvcache import PagedKvCache, pages_needed
 from repro.serve.sampling import sample_tokens
@@ -149,7 +151,10 @@ def _next_bucket(n: int, lo: int, cap: int) -> int:
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig, *,
-                 faults: Optional[FaultPlan] = None, clock=None):
+                 faults: Optional[FaultPlan] = None, clock=None,
+                 registry=None, tracer=None,
+                 flight: Optional[FlightRecorder] = None,
+                 flight_capacity: int = 256):
         if cfg.is_encdec:
             raise NotImplementedError(
                 "the serving engine does not support encoder-decoder models")
@@ -191,11 +196,45 @@ class Engine:
         self._max_new: dict[int, int] = {}        # uid → original budget
         self._terminal: set[int] = set()
         self.metrics: dict[int, dict] = {}       # uid → latency + status
-        self.stats = {"preemptions": 0, "page_grows": 0, "timeouts": 0,
-                      "failures": 0, "cancellations": 0,
-                      "fallback_to_reserve_step": None}
         self._preempt_log: list[int] = []        # step idx of preemptions
+        self._fallback_step: Optional[int] = None
         self._next_uid = 0
+
+        # -- observability (docs/observability.md) ---------------------------
+        # Each engine owns its registry so two engines in one process never
+        # mix counts; the tracer defaults to the process-wide one so engine
+        # spans interleave with fusion/tune spans on a single timeline.  The
+        # flight recorder is NOT gated by REPRO_OBS — it is the black box.
+        if registry is not None:
+            self.registry = registry
+        else:
+            self.registry = (obs.metrics.Registry() if obs.enabled()
+                             else obs.metrics.NULL_REGISTRY)
+        self.tracer = tracer if tracer is not None else obs.get_tracer()
+        self.flight = flight if flight is not None \
+            else FlightRecorder(flight_capacity)
+        reg = self.registry
+        self._c_tokens = reg.counter("serve.tokens")
+        self._c_preempt = reg.counter("serve.preemptions")
+        self._c_grows = reg.counter("serve.page_grows")
+        self._c_dumps = reg.counter("serve.flight_dumps")
+        self._c_submitted = reg.counter("serve.requests.submitted")
+        self._term_counters = {
+            RequestStatus.FINISHED: reg.counter("serve.requests.finished"),
+            RequestStatus.FAILED: reg.counter("serve.requests.failed"),
+            RequestStatus.CANCELLED: reg.counter("serve.requests.cancelled"),
+            RequestStatus.TIMED_OUT: reg.counter("serve.requests.timed_out"),
+        }
+        self._g_queue = reg.gauge("serve.queue_depth")
+        self._g_slots = reg.gauge("serve.slots.active")
+        self._g_pages_used = reg.gauge("serve.pages.used")
+        self._g_pages_total = reg.gauge("serve.pages.total")
+        self._g_pages_total.set(num_pages)
+        self._h_ttft = reg.histogram("serve.ttft_s")
+        self._h_tok = reg.histogram("serve.token_interval_s")
+        self._h_step = reg.histogram("serve.step_s")
+        self._step_events: list[tuple[str, dict]] = []
+        self._tokens_harvested = 0
 
         self._prefill, self._segment = _jitted_fns(cfg, ecfg)
 
@@ -242,11 +281,43 @@ class Engine:
                              "preemptions": 0,
                              "ttft_deadline": ttft_deadline,
                              "deadline": deadline}
+        self._c_submitted.inc()
+        self._g_queue.set(self.sched.num_waiting)
         return uid
+
+    @property
+    def stats(self) -> dict:
+        """Aggregate counts — a read-through view over the engine's metrics
+        registry (plain JSON-able dict, same keys as the pre-registry ad-hoc
+        dict plus live ``waiting``/``in_flight``).  ``waiting`` counts the
+        scheduler's queue *including PREEMPTED requeues* and ``in_flight``
+        counts only slots actually running — a preempted request is back in
+        line, not in flight (the old ad-hoc bookkeeping lumped it with the
+        running set until re-admission).  With observability disabled
+        (``REPRO_OBS=0``) the counter-backed keys read 0."""
+        return {
+            "preemptions": int(self._c_preempt.value),
+            "page_grows": int(self._c_grows.value),
+            "timeouts": int(self._term_counters[
+                RequestStatus.TIMED_OUT].value),
+            "failures": int(self._term_counters[RequestStatus.FAILED].value),
+            "cancellations": int(self._term_counters[
+                RequestStatus.CANCELLED].value),
+            "fallback_to_reserve_step": self._fallback_step,
+            "waiting": self.sched.num_waiting,
+            "in_flight": len(self.sched.running),
+        }
 
     @property
     def idle(self) -> bool:
         return self.sched.idle
+
+    @property
+    def tokens_generated(self) -> int:
+        """Total tokens harvested across all requests so far.  Backed by a
+        plain int (not the registry counter) so it reads correctly even with
+        observability disabled."""
+        return self._tokens_harvested
 
     def status(self, uid: int) -> RequestStatus:
         return self.metrics[uid]["status"]
@@ -264,21 +335,48 @@ class Engine:
                         if r.uid == uid)
             self._evict(slot)
         self._set_terminal(uid, RequestStatus.CANCELLED)
-        self.stats["cancellations"] += 1
         return True
 
     def step(self) -> list[int]:
         """One continuous-batching iteration.  Returns the uids that
-        reached a terminal status during this step."""
+        reached a terminal status during this step.
+
+        Each step opens an ``engine.step`` span, updates the queue/pool
+        gauges, and appends one record (this step's scheduler decisions) to
+        the flight recorder."""
+        idx = self._step_idx
+        t0 = self._clock()
+        self._step_events = []
+        with self.tracer.span("engine.step", step=idx) as sp:
+            newly = self._step_inner()
+            sp.set(terminal=len(newly))
+        self._h_step.observe(self._clock() - t0)
+        self._g_queue.set(self.sched.num_waiting)
+        self._g_slots.set(len(self.sched.running))
+        self._g_pages_used.set(self.kv.num_pages - self.kv.free_pages)
+        self.flight.record(
+            step=idx, events=self._step_events, terminal=list(newly),
+            queue_depth=self.sched.num_waiting,
+            running=len(self.sched.running),
+            free_pages=self.kv.free_pages,
+            tokens_total=self._tokens_harvested)
+        return newly
+
+    def _step_inner(self) -> list[int]:
         plan, idx = self._faults, self._step_idx
         self._step_idx += 1
         self._skew += plan.clock_skew(idx)
         newly = self._expire_deadlines()
         if plan.force_preempt(idx) and self.sched.running:
+            self.tracer.event("engine.fault", kind="force_preempt", step=idx)
             self._preempt(self.sched.youngest_running())
         if self.sched.idle:
             return newly
         blocked = plan.allocator_exhausted(idx)
+        if blocked:
+            self.tracer.event("engine.fault", kind="allocator_exhausted",
+                              step=idx)
+            self._step_events.append(("fault_exhausted", {}))
         if not blocked:
             newly += self._fail_impossible_heads()
             for slot, req in self.sched.admit():
@@ -313,17 +411,30 @@ class Engine:
             self.step()
         results = {uid: self.collect(uid) for uid in sorted(self._terminal)}
         if not self.idle:
-            raise EngineDrainError(
+            err = EngineDrainError(
                 f"engine did not drain within {max_steps} steps "
                 f"({self.sched.num_waiting} waiting, "
                 f"{len(self.sched.running)} running); partial results for "
                 f"{len(results)} finished requests attached", results)
+            err.flight = self._flight_dump(
+                "engine_drain", max_steps=max_steps,
+                waiting=self.sched.num_waiting,
+                running=len(self.sched.running))
+            raise err
         return results
 
     def validate(self) -> None:
         """Invariant checker (chaos tests run it after every step):
         allocator freelist + page tables + scheduler slots + DecodeState +
-        host mirrors all agree."""
+        host mirrors all agree.  A failure dumps the flight recorder before
+        re-raising — the broken invariant plus the steps that led to it."""
+        try:
+            self._validate_inner()
+        except AssertionError as exc:
+            self._flight_dump("validate_failure", error=str(exc))
+            raise
+
+    def _validate_inner(self) -> None:
         self.sched.check_invariants()
         st = jax.device_get(self._state)
         running = set(self.sched.running)
@@ -367,11 +478,32 @@ class Engine:
     def _now(self) -> float:
         return self._clock() + self._skew
 
+    def _flight_dump(self, reason: str, **context) -> dict:
+        # flush the in-progress step's decisions first: faults fire mid-step,
+        # and the partial record is exactly what the postmortem needs (the
+        # completed record for this step still lands when step() returns)
+        if self._step_events:
+            self.flight.record(
+                step=self._step_idx - 1, partial=True,
+                events=list(self._step_events),
+                queue_depth=self.sched.num_waiting,
+                running=len(self.sched.running),
+                free_pages=self.kv.free_pages,
+                tokens_total=self._tokens_harvested)
+        self._c_dumps.inc()
+        return self.flight.dump_on_fault(reason, **context)
+
     def _set_terminal(self, uid: int, status: RequestStatus) -> None:
         m = self.metrics[uid]
         m["status"] = status
         m["finished"] = self._now()
         self._terminal.add(uid)
+        counter = self._term_counters.get(status)
+        if counter is not None:
+            counter.inc()
+        times = m["token_times"]
+        for prev, cur in zip(times, times[1:]):
+            self._h_tok.observe(cur - prev)
 
     def _deactivate_slot(self, slot: int) -> None:
         self._state = self._state._replace(
@@ -405,8 +537,10 @@ class Engine:
         m = self.metrics[uid]
         m["status"] = RequestStatus.PREEMPTED
         m["preemptions"] += 1
-        self.stats["preemptions"] += 1
+        self._c_preempt.inc()
         self._preempt_log.append(self._step_idx)
+        self.tracer.event("engine.preempt", uid=uid, slot=slot)
+        self._step_events.append(("preempt", {"uid": uid, "slot": slot}))
 
     def _expire_deadlines(self) -> list[int]:
         now = self._now()
@@ -420,7 +554,7 @@ class Engine:
                     or (total is not None and waited > total)):
                 self.sched.remove_waiting(req.uid)
                 self._set_terminal(req.uid, RequestStatus.TIMED_OUT)
-                self.stats["timeouts"] += 1
+                self._step_events.append(("timeout", {"uid": req.uid}))
                 expired.append(req.uid)
         for slot, req in list(self.sched.running.items()):
             m = self.metrics[req.uid]
@@ -428,7 +562,7 @@ class Engine:
             if total is not None and now - m["submitted"] > total:
                 self._evict(slot)
                 self._set_terminal(req.uid, RequestStatus.TIMED_OUT)
-                self.stats["timeouts"] += 1
+                self._step_events.append(("timeout", {"uid": req.uid}))
                 expired.append(req.uid)
         return expired
 
@@ -449,7 +583,7 @@ class Engine:
                 break
             self.sched.waiting.popleft()
             self._set_terminal(req.uid, RequestStatus.FAILED)
-            self.stats["failures"] += 1
+            self._step_events.append(("fail_head", {"uid": req.uid}))
             failed.append(req.uid)
         return failed
 
@@ -463,29 +597,36 @@ class Engine:
         tokens = np.zeros((1, bucket), np.int32)
         tokens[0, :plen] = req.prompt
         table = self.kv.table()
-        tok_bad, self.caches, self._state = self._prefill(
-            self.params, self.caches, self._state, jnp.asarray(tokens),
-            jnp.asarray(table[slot:slot + 1]), jnp.int32(plen),
-            jnp.int32(slot), self._seed,
-            jnp.uint32(req.uid), jnp.float32(req.temperature),
-            jnp.int32(req.top_k), jnp.float32(req.top_p),
-            jnp.int32(req.max_new), self._poison_uid, self._poison_pos)
-        self._table_dirty = True
-        first, was_bad = (int(v) for v in jax.device_get(tok_bad))
+        with self.tracer.span("engine.prefill", uid=req.uid, slot=slot,
+                              plen=plen, bucket=bucket):
+            tok_bad, self.caches, self._state = self._prefill(
+                self.params, self.caches, self._state, jnp.asarray(tokens),
+                jnp.asarray(table[slot:slot + 1]), jnp.int32(plen),
+                jnp.int32(slot), self._seed,
+                jnp.uint32(req.uid), jnp.float32(req.temperature),
+                jnp.int32(req.top_k), jnp.float32(req.top_p),
+                jnp.int32(req.max_new), self._poison_uid, self._poison_pos)
+            self._table_dirty = True
+            first, was_bad = (int(v) for v in jax.device_get(tok_bad))
         uid = req.uid
+        self._step_events.append(("admit", {"uid": uid, "slot": slot,
+                                            "plen": plen}))
         self._uids[slot] = uid
         self._prior[slot] = len(self._out[uid])
         self._gen[slot] = 1
         if was_bad:
             self._evict(slot)
             self._set_terminal(uid, RequestStatus.FAILED)
-            self.stats["failures"] += 1
+            self._step_events.append(("prefill_nan", {"uid": uid}))
             return uid
         now = self._now()
         self._out[uid].append(first)
+        self._tokens_harvested += 1
+        self._c_tokens.inc()
         m = self.metrics[uid]
         if m["first_token"] is None:
             m["first_token"] = now
+            self._h_ttft.observe(now - m["submitted"])
         m["token_times"].append(now)
         m["status"] = RequestStatus.RUNNING
         eos_hit = (self.ecfg.eos_token is not None
@@ -521,7 +662,9 @@ class Engine:
                     self._preempt(slot)
                     break
                 if self.kv.grow(slot, need):
-                    self.stats["page_grows"] += need
+                    self._c_grows.inc(need)
+                    self._step_events.append(("grow", {"slot": slot,
+                                                       "pages": need}))
                     self._table_dirty = True
                     break
                 victim = self.sched.youngest_running()
@@ -542,13 +685,16 @@ class Engine:
             self._table_dirty = False
         refill = jnp.bool_(self.ecfg.stop_on_finish
                            and self.sched.num_waiting > 0)
-        self.caches, self._state, out = self._segment(
-            self.params, self.caches, self._state, self._table_dev,
-            self._seed, refill, self._poison_uid, self._poison_pos)
-        # ONE host sync per segment: everything the host bookkeeping needs
-        gen_after, still_active, bad, out = jax.device_get(
-            (self._state.gen, self._state.active, self._state.bad, out))
+        with self.tracer.span("engine.decode_segment",
+                              slots=len(self.sched.running)) as sp:
+            self.caches, self._state, out = self._segment(
+                self.params, self.caches, self._state, self._table_dev,
+                self._seed, refill, self._poison_uid, self._poison_pos)
+            # ONE host sync per segment: everything the host bookkeeping needs
+            gen_after, still_active, bad, out = jax.device_get(
+                (self._state.gen, self._state.active, self._state.bad, out))
         now = self._now()
+        harvested = 0
         for slot in self.sched.running:
             n_new = int(gen_after[slot] - self._gen[slot])
             if n_new:
@@ -556,6 +702,10 @@ class Engine:
                 toks = [int(t) for t in out[slot, :n_new]]
                 self._out[uid].extend(toks)
                 self.metrics[uid]["token_times"].extend([now] * n_new)
+                harvested += n_new
+        sp.set(tokens=harvested)
+        self._tokens_harvested += harvested
+        self._c_tokens.inc(harvested)
         self._gen = gen_after.copy()
         self._done |= running & ~still_active & ~bad
         return running & bad
@@ -568,8 +718,13 @@ class Engine:
             if bad[slot]:
                 req = self._evict(slot)
                 self._set_terminal(req.uid, RequestStatus.FAILED)
-                self.stats["failures"] += 1
+                self.tracer.event("engine.quarantine", uid=req.uid, slot=slot)
+                self._step_events.append(("quarantine", {"uid": req.uid,
+                                                         "slot": slot}))
                 failed.append(req.uid)
+        if failed:
+            self._flight_dump("nan_quarantine", uids=failed,
+                              step=self._step_idx)
         return failed
 
     def _retire_done(self) -> list[int]:
@@ -580,6 +735,8 @@ class Engine:
                 self._done[slot] = False
                 self._table_dirty = True
                 self._set_terminal(req.uid, RequestStatus.FINISHED)
+                self._step_events.append(("retire", {"uid": req.uid,
+                                                     "slot": slot}))
                 finished.append(req.uid)
         return finished
 
@@ -595,7 +752,10 @@ class Engine:
         self._preempt_log = [s for s in self._preempt_log if s > floor]
         if len(self._preempt_log) >= self.ecfg.thrash_preemptions:
             self.sched.mode = "reserve"
-            self.stats["fallback_to_reserve_step"] = self._step_idx
+            self._fallback_step = self._step_idx
+            self.tracer.event("engine.fallback_reserve", step=self._step_idx)
+            self._step_events.append(("fallback_reserve",
+                                      {"step": self._step_idx}))
 
 
 # -- jitted bodies ----------------------------------------------------------

@@ -63,6 +63,16 @@ class PagedKvCache:
     def free_pages(self) -> int:
         return len(self._free)
 
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - len(self._free)
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of the pool currently owned by slots (the
+        ``serve.pages.used`` / ``serve.pages.total`` gauge ratio)."""
+        return self.used_pages / self.num_pages
+
     def can_fit(self, num_tokens: int) -> bool:
         n = pages_needed(num_tokens, self.page_size)
         return n <= self.max_pages_per_slot and n <= self.free_pages

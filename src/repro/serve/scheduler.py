@@ -184,6 +184,20 @@ class Scheduler:
             return None
         return max(self.running, key=self.admitted_seq.__getitem__)
 
+    def snapshot(self) -> dict:
+        """JSON-able occupancy view for the flight recorder / benchmarks:
+        queue + slot occupancy at this instant.  ``waiting_uids`` lists the
+        queue in admission order — a PREEMPTED requeue shows up here (it is
+        waiting, not in flight)."""
+        return {
+            "waiting_uids": [r.uid for r in self.waiting],
+            "running": {slot: req.uid
+                        for slot, req in sorted(self.running.items())},
+            "free_pages": self.kv.free_pages,
+            "used_pages": self.kv.used_pages,
+            "mode": self.mode,
+        }
+
     def check_invariants(self) -> None:
         self.kv.check_invariants()
         assert len(self.running) <= self.num_slots

@@ -1,0 +1,426 @@
+"""Observability layer tests: tracer spans + Chrome export, metrics
+registry + kill switch, kernel-profiler drift goldens (scripted clock),
+flight-recorder fault dumps (chaos + drain + validate), tunecache counters,
+and the ``Engine.stats`` preemption-skew regression.
+
+The engine-backed tests reuse the shapes of ``test_serve_faults`` so the
+lru-cached jitted step functions compile once per session.
+"""
+import dataclasses
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro.obs as obs
+from repro.obs import metrics as obs_metrics
+from repro.obs import profiler as obs_profiler
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import (METRIC_CATALOG, NULL_REGISTRY, NullRegistry,
+                               Registry, default_registry,
+                               set_default_registry)
+from repro.obs.recorder import FlightRecorder
+from repro.obs.trace import (NULL_TRACER, Tracer, chrome_trace, get_tracer,
+                             set_tracer, validate_chrome_trace)
+
+
+class FakeClock:
+    """Deterministic monotonic clock: each call advances by ``tick``."""
+
+    def __init__(self, tick=1.0, t=0.0):
+        self.tick, self.t = tick, t
+
+    def __call__(self):
+        self.t += self.tick
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# Tracer
+# ---------------------------------------------------------------------------
+
+def test_tracer_nesting_and_fake_clock():
+    tr = Tracer(clock=FakeClock())
+    with tr.span("outer", cat="t", a=1) as sp:
+        with tr.span("inner", cat="t"):
+            pass
+        sp.set(b=2)
+    spans = tr.spans()
+    assert [s.name for s in spans] == ["inner", "outer"]  # close order
+    inner, outer = spans
+    assert inner.parent == outer.sid
+    assert outer.parent is None
+    assert outer.args == {"a": 1, "b": 2}
+    # fake clock: every open/close consumed exactly one tick
+    assert outer.duration == pytest.approx(3.0)
+    assert inner.duration == pytest.approx(1.0)
+    tr.event("mark", cat="t")
+    ev = tr.spans()[-1]
+    assert ev.start == ev.end
+
+
+def test_tracer_threads_get_distinct_tids():
+    tr = Tracer(clock=FakeClock())
+    barrier = threading.Barrier(2)   # both workers alive at once, so the OS
+                                     # cannot reuse one thread ident for both
+    def work():
+        with tr.span("w"):
+            barrier.wait(timeout=10)
+    ts = [threading.Thread(target=work) for _ in range(2)]
+    with tr.span("main"):
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+    tids = {s.tid for s in tr.spans()}
+    assert len(tids) == 3
+    # cross-thread spans never inherit the main thread's parent stack
+    assert all(s.parent is None for s in tr.spans())
+
+
+def test_tracer_bounded_and_clear():
+    tr = Tracer(clock=FakeClock(), max_spans=2)
+    for i in range(5):
+        tr.event(f"e{i}")
+    assert len(tr.spans()) == 2 and tr.dropped == 3
+    tr.clear()
+    assert tr.spans() == [] and tr.dropped == 0
+
+
+def test_chrome_trace_schema():
+    tr = Tracer(clock=FakeClock(tick=0.5))
+    with tr.span("engine.step", step=0):
+        tr.event("engine.preempt", uid=3)
+    doc = chrome_trace(tr.spans(), t0=tr.t0, process_name="test")
+    assert validate_chrome_trace(doc) == []
+    phs = {e["ph"] for e in doc["traceEvents"]}
+    assert {"X", "i", "M"} <= phs
+    json.dumps(doc)                              # schema is JSON-serializable
+    # corrupt one required field → validator reports it
+    bad = json.loads(json.dumps(doc))
+    x_ev = next(e for e in bad["traceEvents"] if e["ph"] == "X")
+    del x_ev["ts"]
+    assert validate_chrome_trace(bad)
+
+
+def test_trace_cli_roundtrip(tmp_path):
+    tr = Tracer(clock=FakeClock())
+    with tr.span("a"):
+        pass
+    raw = tmp_path / "raw.json"
+    out = tmp_path / "chrome.json"
+    tr.save(raw)
+    assert obs_trace.main([str(raw), "-o", str(out)]) == 0
+    assert obs_trace.main(["--validate", str(out)]) == 0
+    (tmp_path / "broken.json").write_text('{"traceEvents": [{"ph": "X"}]}')
+    assert obs_trace.main(["--validate", str(tmp_path / "broken.json")]) == 1
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+
+def test_registry_instruments_and_snapshot():
+    reg = Registry()
+    reg.counter("serve.tokens").inc(3)
+    reg.counter("serve.tokens").inc()
+    reg.gauge("serve.queue_depth").set(7)
+    h = reg.histogram("serve.step_s")
+    for v in (0.01, 0.02, 0.03):
+        h.observe(v)
+    snap = reg.snapshot()
+    assert snap["serve.tokens"] == 4
+    assert snap["serve.queue_depth"] == 7.0
+    assert snap["serve.step_s"]["count"] == 3
+    json.dumps(snap)
+    assert reg.enabled
+    with pytest.raises(TypeError):
+        reg.gauge("serve.tokens")            # name already bound to a counter
+
+
+def test_histogram_quantile():
+    h = obs_metrics.Histogram("x")
+    for v in [0.001] * 90 + [1.0] * 10:
+        h.observe(v)
+    assert h.quantile(0.5) <= 0.01
+    assert h.quantile(0.99) >= 0.5
+
+
+def test_null_registry_is_inert():
+    assert not NULL_REGISTRY.enabled
+    NULL_REGISTRY.counter("anything").inc(5)
+    assert NULL_REGISTRY.counter("anything").value == 0
+    assert NULL_REGISTRY.snapshot() == {}
+
+
+def test_kill_switch_reevaluation(monkeypatch):
+    monkeypatch.setenv("REPRO_OBS", "0")
+    assert not obs.enabled()
+    old_reg = set_default_registry(None)       # force lazy re-evaluation
+    old_tr = set_tracer(None)
+    try:
+        assert default_registry() is NULL_REGISTRY
+        assert get_tracer() is NULL_TRACER
+        monkeypatch.setenv("REPRO_OBS", "1")
+        set_default_registry(None)
+        set_tracer(None)
+        assert isinstance(default_registry(), Registry)
+        assert isinstance(get_tracer(), Tracer)
+    finally:
+        set_default_registry(old_reg)
+        set_tracer(old_tr)
+
+
+def test_metric_catalog_covers_every_emitted_name():
+    """Append-only contract: every metric name instrumented anywhere in the
+    source tree must be declared in METRIC_CATALOG."""
+    import pathlib
+    import re
+    root = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
+    pat = re.compile(r"\b(?:counter|gauge|histogram)\(\s*['\"]([a-z0-9_.]+)")
+    used = set()
+    for path in root.rglob("*.py"):
+        used |= set(pat.findall(path.read_text()))
+    missing = used - set(METRIC_CATALOG)
+    assert not missing, f"metric names missing from METRIC_CATALOG: {missing}"
+
+
+def test_null_backend_overhead_smoke():
+    """The disabled path must be cheap: a million no-op instrument hits in
+    well under the generous bound (guards against accidentally putting work
+    on the null path)."""
+    c = NULL_REGISTRY.counter("serve.tokens")
+    t0 = time.perf_counter()
+    for _ in range(200_000):
+        c.inc()
+        with NULL_TRACER.span("s"):
+            pass
+    assert time.perf_counter() - t0 < 5.0
+
+
+# ---------------------------------------------------------------------------
+# Kernel profiler: drift goldens on a scripted clock
+# ---------------------------------------------------------------------------
+
+def test_time_callable_median_with_fake_clock():
+    clock = FakeClock(tick=1.0)
+    med, samples = obs_profiler.time_callable(
+        lambda: 0, iters=3, warmup=1, clock=clock)
+    # each timed call consumes exactly two ticks (t0 read + t1 read)
+    assert samples == [1.0, 1.0, 1.0] and med == 1.0
+    with pytest.raises(ValueError):
+        obs_profiler.time_callable(lambda: 0, iters=0)
+
+
+def _rec(name, predicted, measured):
+    return obs_profiler.ProfileRecord(
+        name=name, shape=(8, 8, 8), backend="xla", spec="bca",
+        predicted_s=predicted, measured_s=measured, bound="compute",
+        iters=1, warmup=0, samples=[measured])
+
+
+def test_drift_flags_relative_to_median():
+    # constant 100x host-vs-model offset → nothing flagged
+    uniform = [_rec(f"g{i}", 1e-6, 1e-4) for i in range(3)]
+    assert obs_profiler.drift_flags(uniform) == [False, False, False]
+    # one schedule mispriced relative to its peers → only it is flagged
+    recs = uniform + [_rec("outlier", 1e-6, 1e-2)]
+    assert obs_profiler.drift_flags(recs) == [False, False, False, True]
+    table = obs_profiler.attribution_table(recs)
+    assert "DRIFT" in table and "outlier" in table
+    assert table.count("DRIFT") == 1
+
+
+def test_profile_graph_smoke():
+    from repro import fusion
+    g = fusion.fused_mlp_graph("gelu")
+    rec = obs_profiler.profile_graph(g, 32, 64, 64, backend="xla",
+                                     iters=2, warmup=1)
+    assert rec.measured_s > 0 and rec.predicted_s > 0
+    assert rec.bound in ("compute", "memory", "collective")
+    assert rec.shape == (32, 64, 64)
+    json.dumps(rec.to_dict())
+
+
+def test_make_measure_fn_feeds_autotune():
+    from repro import fusion
+    g = fusion.fused_mlp_graph("gelu")
+    results = fusion.measured_autotune_graph(
+        g, 32, 64, 64, backend="xla", max_candidates=4, top_k=2,
+        use_cache=False, measure_iters=1, measure_warmup=0)
+    assert results and results[0].measured_s is not None
+
+
+# ---------------------------------------------------------------------------
+# Flight recorder
+# ---------------------------------------------------------------------------
+
+def test_flight_recorder_ring_and_replay():
+    fr = FlightRecorder(capacity=3)
+    for i in range(5):
+        fr.record(step=i, events=[("admit", {"uid": i})], queue_depth=5 - i,
+                  running=1, free_pages=2, tokens_total=i)
+    recs = fr.records()
+    assert [r["step"] for r in recs] == [2, 3, 4]     # oldest two evicted
+    assert fr.steps_recorded == 5
+    lines = fr.replay(2)
+    assert len(lines) == 2
+    assert "admit(uid=4)" in lines[-1] and "queue=1" in lines[-1]
+    fr.clear()
+    assert fr.records() == [] and fr.steps_recorded == 0
+    with pytest.raises(ValueError):
+        FlightRecorder(capacity=0)
+
+
+def test_flight_dump_writes_file(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_OBS_DUMP_DIR", str(tmp_path))
+    fr = FlightRecorder(capacity=4)
+    fr.record(step=0, events=[], queue_depth=1, running=0, free_pages=4,
+              tokens_total=0)
+    dump = fr.dump_on_fault("unit_test", detail="x")
+    assert fr.last_dump is dump
+    assert dump["reason"] == "unit_test"
+    assert dump["context"] == {"detail": "x"}
+    assert len(dump["records"]) == 1
+    on_disk = json.loads(open(dump["path"]).read())
+    assert on_disk["reason"] == "unit_test"
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: dumps under chaos, stats skew, scheduler snapshot
+# ---------------------------------------------------------------------------
+
+def _engine(**over):
+    import jax
+    from repro.configs import get_config
+    from repro.models import lm
+    from repro.serve import Engine, EngineConfig
+    cfg = get_config("minicpm_2b").reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    ecfg = EngineConfig(num_slots=3, page_size=4, max_seq=64, segment_len=4,
+                        seed=7)
+    return Engine(cfg, params, ecfg, **over)
+
+
+@pytest.mark.slow
+def test_engine_chaos_dump_and_stats_skew():
+    from repro.serve import FaultPlan, RequestStatus
+    plan = FaultPlan(preempt_steps=frozenset({1, 3}), poison_uid=1,
+                     poison_pos=5)
+    tracer = Tracer()
+    eng = _engine(faults=plan, tracer=tracer)
+    rng = np.random.default_rng(0)
+    for uid in range(5):
+        eng.submit(rng.integers(1, 50, size=4).tolist(), 6, uid=uid)
+    preempted_seen = False
+    steps = 0
+    while not eng.idle and steps < 200:
+        eng.step()
+        steps += 1
+        st = eng.stats
+        # regression: a preempted request is waiting, not in flight — the
+        # live view must always agree with the scheduler
+        assert st["in_flight"] == len(eng.sched.running)
+        assert st["waiting"] == eng.sched.num_waiting
+        snap = eng.sched.snapshot()
+        assert len(snap["running"]) == st["in_flight"]
+        assert len(snap["waiting_uids"]) == st["waiting"]
+        if st["preemptions"] and st["waiting"]:
+            preempted_seen = True
+    assert eng.idle and steps > 1
+    assert eng.stats["preemptions"] >= 2
+    assert preempted_seen, "never observed a preempted request in the queue"
+    # the poisoned request tripped the NaN-quarantine black box
+    assert eng.status(1) == RequestStatus.FAILED
+    dump = eng.flight.last_dump
+    assert dump is not None and dump["reason"] == "nan_quarantine"
+    assert 1 in dump["context"]["uids"]
+    assert dump["records"], "dump carried no step records"
+    assert eng.registry.snapshot()["serve.flight_dumps"] >= 1
+    # spans made it to the engine's tracer and export cleanly
+    names = {s.name for s in tracer.spans()}
+    assert "engine.step" in names and "engine.prefill" in names
+    assert validate_chrome_trace(chrome_trace(tracer.spans())) == []
+    # drained engine: corrupting host state must dump on validate()
+    eng._done[0] = True
+    with pytest.raises(AssertionError):
+        eng.validate()
+    assert eng.flight.last_dump["reason"] == "validate_failure"
+    eng._done[0] = False
+
+
+@pytest.mark.slow
+def test_engine_drain_error_carries_flight_dump():
+    from repro.serve import EngineDrainError
+    eng = _engine()
+    eng.submit([1, 2, 3], 8, uid=0)
+    with pytest.raises(EngineDrainError) as ei:
+        eng.run(max_steps=1)
+    dump = ei.value.flight
+    assert dump["reason"] == "engine_drain"
+    assert dump["context"]["max_steps"] == 1
+    assert eng.flight.last_dump is dump
+    eng.run()                                  # drains cleanly afterwards
+
+
+@pytest.mark.slow
+def test_engine_obs_disabled_still_serves(monkeypatch):
+    """REPRO_OBS=0: engine runs on the null backend — stats read zeros but
+    serving, token accounting, and the flight recorder still work."""
+    monkeypatch.setenv("REPRO_OBS", "0")
+    old_tr = set_tracer(None)
+    try:
+        eng = _engine()
+        assert isinstance(eng.registry, NullRegistry)
+        eng.submit([1, 2, 3, 4], 5, uid=0)
+        out = eng.run()
+        assert len(out[0]) == 4 + 5            # prompt + generated
+        assert eng.tokens_generated == 5       # plain-int path, not gated
+        assert eng.stats["preemptions"] == 0
+        assert eng.flight.steps_recorded > 0   # black box is never gated
+    finally:
+        set_tracer(old_tr)
+
+
+def test_kvcache_occupancy_and_scheduler_snapshot():
+    from repro.serve import PagedKvCache, Request, Scheduler
+    kv = PagedKvCache(num_slots=2, num_pages=8, page_size=4,
+                      max_pages_per_slot=4)
+    assert kv.used_pages == 0 and kv.occupancy == 0.0
+    kv.allocate_pages(0, 2)
+    assert kv.used_pages == 2 and kv.occupancy == pytest.approx(0.25)
+    sched = Scheduler(2, kv)
+    sched.submit(Request(uid=5, prompt=[1, 2], max_new=3))
+    snap = sched.snapshot()
+    assert snap["waiting_uids"] == [5]
+    assert snap["running"] == {}
+    assert snap["free_pages"] == kv.free_pages
+    json.dumps(snap)
+
+
+# ---------------------------------------------------------------------------
+# Tunecache counters
+# ---------------------------------------------------------------------------
+
+def test_tunecache_counters(tmp_path):
+    from repro.core.tunecache import TuneCache
+    reg = Registry()
+    old = set_default_registry(reg)
+    try:
+        tc = TuneCache(tmp_path)
+        key = "k" * 64
+        assert tc.lookup(key) is None
+        assert reg.counter("tune.cache.misses").value == 1
+        tc.store(key, {"specs": ["bca"]})
+        assert tc.lookup(key)["specs"] == ["bca"]
+        assert reg.counter("tune.cache.hits").value == 1
+        # corrupt entry → recovered (deleted) and counted
+        tc._file(key).write_text("{not json")
+        assert tc.lookup(key) is None
+        assert reg.counter("tune.cache.corrupt_recoveries").value == 1
+        assert reg.counter("tune.cache.misses").value == 2
+        assert not tc._file(key).exists()
+    finally:
+        set_default_registry(old)
