@@ -169,8 +169,103 @@ def run(smoke: bool = False):
 
     rows.extend(_dropout_rows(rng, smoke))
     rows.extend(_gated_mlp_rows(rng, smoke))
+    rows.extend(_attention_rows(rng, smoke))
     rows.extend(_backward_rows(rng, smoke))
     rows.extend(_profiler_rows(smoke))
+    return rows
+
+
+ATTENTION_JSON_PATH = os.path.join(os.path.dirname(DROPOUT_JSON_PATH),
+                                   "BENCH_fusion_attention.json")
+
+
+def _attention_rows(rng, smoke):
+    """Derived chained-root attention vs the reference and the retired
+    hand-written kernel: wall on the XLA path (fused graph vs
+    ``ops.attention``), perf-model cost of the chained nest, and (smoke)
+    interpret-mode parity of the fused Pallas kernel against both
+    ``ops.attention`` and ``_legacy_flash_attention_pallas`` in fp32 *and*
+    bf16, causal and sliding-window.  Writes
+    ``BENCH_fusion_attention.json``."""
+    from repro.kernels import ops as kops
+    from repro.kernels.flash_attention import _legacy_flash_attention_pallas
+
+    rows = []
+    b, h, hk, s, d = (1, 2, 1, 128, 64) if smoke else (2, 8, 2, 1024, 64)
+    dt = np.float32
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)).astype(dt))
+    k = jnp.asarray(rng.normal(size=(b, hk, s, d)).astype(dt))
+    v = jnp.asarray(rng.normal(size=(b, hk, s, d)).astype(dt))
+    iters = 5 if smoke else 10
+    report = {"smoke": smoke, "shape": [b, h, hk, s, d], "variants": []}
+
+    for variant, window in (("causal", None), ("window", s // 4)):
+        fused_fn = jax.jit(lambda q_, k_, v_, _w=window: fusion.fused_attention_apply(
+            q_, k_, v_, causal=True, window=_w, backend="xla", vjp=False))
+        ref_fn = jax.jit(lambda q_, k_, v_, _w=window: kops.attention(
+            q_, k_, v_, causal=True, window=_w, backend="xla"))
+        t_fused = _bench(lambda: fused_fn(q, k, v), iters=iters)
+        t_ref = _bench(lambda: ref_fn(q, k, v), iters=iters)
+
+        # perf model of the chained nest at the per-(B, H) problem shape
+        graph = fusion.fused_attention_graph(
+            causal=True, window=window or 0, scale=1.0 / np.sqrt(d))
+        tiles = pick_tiles(s, d, s, jnp.float32)
+        rep = fusion.graph_cost(graph, s, d, s, tiles=tiles, dtype=dt)
+
+        rows.append((
+            f"fusion_attention_{variant}_{b}x{h}x{s}x{d}",
+            t_fused * 1e6,
+            f"wall_fused_vs_ref={t_ref / t_fused:.2f}"
+            f";model_us_per_head={rep.total_time * 1e6:.1f}"
+            f";spec={rep.spec};bound={rep.bound}",
+        ))
+        report["variants"].append({
+            "variant": variant, "window": window,
+            "wall_fused_us": t_fused * 1e6, "wall_ref_us": t_ref * 1e6,
+            "model_us_per_head": rep.total_time * 1e6,
+            "spec": rep.spec, "bound": rep.bound,
+        })
+
+        if smoke:
+            # parity gate: derived graph (both backends) vs ops.attention vs
+            # the retired hand-written kernel, fp32 and bf16
+            want = np.asarray(ref_fn(q, k, v), np.float32)
+            pal = fusion.fused_attention_apply(
+                q, k, v, causal=True, window=window,
+                backend="pallas_interpret", vjp=False)
+            legacy = _legacy_flash_attention_pallas(
+                q, k, v, causal=True, window=window, interpret=True)
+            err_x = float(np.max(np.abs(np.asarray(fused_fn(q, k, v),
+                                                   np.float32) - want)))
+            err_p = float(np.max(np.abs(np.asarray(pal, np.float32) - want)))
+            err_l = float(np.max(np.abs(np.asarray(legacy, np.float32)
+                                        - want)))
+            assert err_x < 1e-4, f"attention {variant} xla parity: {err_x}"
+            assert err_p < 1e-4, f"attention {variant} pallas parity: {err_p}"
+            assert err_l < 1e-4, f"attention {variant} legacy parity: {err_l}"
+
+            qb, kb, vb = (t.astype(jnp.bfloat16) for t in (q, k, v))
+            pal_b = fusion.fused_attention_apply(
+                qb, kb, vb, causal=True, window=window,
+                backend="pallas_interpret", vjp=False)
+            want_b = np.asarray(kops.attention(
+                qb, kb, vb, causal=True, window=window, backend="xla"),
+                np.float32)
+            err_b = float(np.max(np.abs(np.asarray(pal_b, np.float32)
+                                        - want_b)))
+            assert err_b < 2e-2, f"attention {variant} bf16 parity: {err_b}"
+            rows.append((
+                f"fusion_attention_parity_{variant}_{b}x{h}x{s}x{d}", 0.0,
+                f"max_err_xla={err_x:.2e};max_err_pallas={err_p:.2e}"
+                f";max_err_vs_legacy={err_l:.2e};max_err_bf16={err_b:.2e}",
+            ))
+            report["variants"][-1].update(
+                parity_err_xla=err_x, parity_err_pallas=err_p,
+                parity_err_legacy=err_l, parity_err_bf16=err_b)
+
+    with open(ATTENTION_JSON_PATH, "w") as f:
+        json.dump(report, f, indent=1)
     return rows
 
 

@@ -121,6 +121,21 @@ CATALOG: dict[str, tuple[str, str, str]] = {
     "TPP211": ("duplicate-name", "error",
                "two operands, roots, nodes, or outputs share a name, or a "
                "definition shadows an earlier one"),
+    "TPP212": ("invalid-chain", "error",
+               "a chained contraction root is malformed: more than one "
+               "chain, no base root, its lhs is not the graph's (online) "
+               "reducing node, post-reduce nodes exist, a node reads the "
+               "chain accumulator, or the chained root is not the sole "
+               "output"),
+    "TPP213": ("chained-operand-misuse", "error",
+               "a crhs operand is used outside a chained root's rhs slot "
+               "(consumed as an epilogue value, attached to a non-chained "
+               "root, or declared with no chained consumer), or its array "
+               "shape disagrees with the chain contraction"),
+    "TPP214": ("fused-projection-width-mismatch", "error",
+               "the fused QKV projection weights disagree on shape: q/k/v "
+               "must share the input (K) width, k and v must match, and the "
+               "q width must be a positive multiple of the kv width (GQA)"),
     # --- TPP3xx: cross-subsystem invariance ----------------------------
     "TPP301": ("tune-key-incompleteness", "error",
                "an attribute the lowering or search branches on is missing "

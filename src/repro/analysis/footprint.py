@@ -65,6 +65,23 @@ def graph_sinks(graph, *, m_letter: str = "b",
     reducing = graph.reducing_node()
     if reducing is None:
         return (WriteSink("output", frozenset((m_letter, n_letter))),)
+    chained = getattr(graph, "chained_root", lambda: None)()
+    if chained is not None:
+        # the chained lowering stages NO row panels: the reduced value
+        # streams straight into the (M, N2) chain accumulator, rescaled via
+        # the (running max, running sum) strip — both indexed by M only,
+        # both carried across every N visit of a row.
+        return (
+            WriteSink("output", frozenset((m_letter,)),
+                      detail=f"chained-root close ({chained.name} = "
+                             f"{reducing.op!r} panel @ {chained.rhs})"),
+            WriteSink("chain-accumulator", frozenset((m_letter,)),
+                      detail="(M, N2) partial products, rescaled on each "
+                             "new running max"),
+            WriteSink("stats-strip", frozenset((m_letter,)),
+                      detail="(running max, running sum) accumulated over "
+                             "N tiles"),
+        )
     sinks = [WriteSink("output", frozenset((m_letter,)),
                        detail=f"full-row close of reducing op {reducing.op!r}")]
     for v in sorted(graph.staged_values()):
@@ -193,9 +210,10 @@ def check_epilogue_band(nest, graph, *, m_letter: str = "b",
 
 def check_prng_mesh(nest, graph, *, m_letter: str = "b",
                     n_letter: str = "c") -> list[Diagnostic]:
-    """``TPP106``: counter-PRNG epilogues key their draw on *global* (M, N)
-    element coordinates; a mesh-sharded output loop makes block coordinates
-    shard-local, so the regenerated bits would repeat across shards."""
+    """``TPP106``: coordinate-keyed epilogues (counter-PRNG dropout, the
+    attention mask) regenerate their pattern from *global* (M, N) element
+    coordinates; a mesh-sharded output loop makes block coordinates
+    shard-local, so the regenerated pattern would repeat across shards."""
     from repro.fusion.graph import EPILOGUE_OPS
     if not any(EPILOGUE_OPS[nd.op].wants_offsets for nd in graph.nodes):
         return []
@@ -206,11 +224,12 @@ def check_prng_mesh(nest, graph, *, m_letter: str = "b",
     lvl = sharded[0]
     return [diag(
         "TPP106",
-        f"graph {graph.name!r}: an in-kernel PRNG epilogue keys its "
-        f"draw on global (M, N) element coordinates, but spec "
-        f"{nest.spec.raw!r} shards the output loop {lvl.letter!r} over "
-        f"mesh axis {lvl.mesh_axis!r} — block coordinates inside a shard "
-        "are local, so the regenerated bits would repeat across shards.",
+        f"graph {graph.name!r}: a coordinate-keyed epilogue (PRNG draw or "
+        f"attention mask) keys its pattern on global (M, N) element "
+        f"coordinates, but spec {nest.spec.raw!r} shards the output loop "
+        f"{lvl.letter!r} over mesh axis {lvl.mesh_axis!r} — block "
+        "coordinates inside a shard are local, so the regenerated pattern "
+        "would repeat across shards.",
         site=f"{graph.name}:{nest.spec.raw}")]
 
 

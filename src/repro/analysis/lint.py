@@ -24,6 +24,7 @@ invocations::
 from __future__ import annotations
 
 import argparse
+import math
 import sys
 import time
 
@@ -44,6 +45,9 @@ def _library_defaults():
         library.fused_qkv_graph(),
         library.fused_attn_out_graph(residual=True, norm="layernorm",
                                      dropout_rate=0.1),
+        # chained-root attention at head_dim 64 (scale = 1/sqrt(64))
+        library.fused_attention_graph(causal=True, scale=0.125),
+        library.fused_attention_graph(causal=True, window=128, scale=0.125),
     ]
 
 
@@ -67,6 +71,10 @@ def config_graphs(cfg, notes: list) -> list:
     norm = cfg.norm if cfg.norm in ("layernorm", "rmsnorm") else ""
     graphs.append(library.fused_attn_out_graph(
         residual=True, norm=norm, dropout_rate=rate))
+    if cfg.head_dim > 0:
+        graphs.append(library.fused_attention_graph(
+            causal=True, window=cfg.sliding_window or 0,
+            scale=1.0 / math.sqrt(cfg.head_dim)))
     return graphs
 
 
@@ -82,6 +90,10 @@ def config_shapes(cfg, graphs, *, m: int) -> list:
             out.append((g, (m, cfg.d_model, d_ff)))
         elif g.name.startswith("fused_qkv"):
             out.append((g, (m, cfg.d_model, qdim)))
+        elif g.name.startswith("fused_attention"):
+            # chained attention: (M, K, N) = (Sq, head_dim, Skv); the
+            # chained output restores K columns (N2 == head_dim)
+            out.append((g, (m, cfg.head_dim, m)))
         elif g.name.startswith("fused_attn_out"):
             out.append((g, (m, qdim, cfg.d_model)))
         else:  # fused_output: the d_ff -> d_model down projection

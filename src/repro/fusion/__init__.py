@@ -12,9 +12,11 @@ from repro.fusion.lowering import (DEFAULT_SPEC, clear_fallback_blocklist,
 from repro.fusion.cost import (autotune_graph, estimate_unfused, graph_cost,
                                graph_signature, measured_autotune_graph,
                                schedule_kwargs, UnfusedEstimate)
-from repro.fusion.autodiff import (BackwardPlan, backward_graphs,
-                                   compile_with_vjp, derive_vjp)
-from repro.fusion.library import (fused_attn_out_apply, fused_attn_out_graph,
+from repro.fusion.autodiff import (BackwardPlan, ChainedBackwardPlan,
+                                   backward_graphs, compile_with_vjp,
+                                   derive_vjp)
+from repro.fusion.library import (fused_attention_apply, fused_attention_graph,
+                                  fused_attn_out_apply, fused_attn_out_graph,
                                   fused_gated_mlp_apply, fused_gated_mlp_graph,
                                   fused_mlp_apply, fused_mlp_graph,
                                   fused_output_apply, fused_output_graph,
@@ -26,12 +28,13 @@ __all__ = [
     "simplify_graph", "rng",
     "compile", "compile_for_backend", "validate_epilogue_band", "DEFAULT_SPEC",
     "fallback_blocklist", "clear_fallback_blocklist", "force_pallas_failure",
-    "derive_vjp", "BackwardPlan", "backward_graphs", "compile_with_vjp",
+    "derive_vjp", "BackwardPlan", "ChainedBackwardPlan", "backward_graphs",
+    "compile_with_vjp",
     "graph_cost", "autotune_graph", "measured_autotune_graph",
     "estimate_unfused", "UnfusedEstimate",
     "schedule_kwargs", "graph_signature",
     "fused_output_graph", "fused_mlp_graph", "fused_gated_mlp_graph",
-    "fused_qkv_graph", "fused_attn_out_graph",
+    "fused_qkv_graph", "fused_attn_out_graph", "fused_attention_graph",
     "fused_output_apply", "fused_mlp_apply", "fused_gated_mlp_apply",
-    "fused_qkv_apply", "fused_attn_out_apply",
+    "fused_qkv_apply", "fused_attn_out_apply", "fused_attention_apply",
 ]

@@ -72,8 +72,8 @@ from repro.fusion.graph import (EPILOGUE_OPS, ContractionRoot,
 from repro.fusion.lowering import (compile_for_backend,
                                    contraction_operand_values)
 
-__all__ = ["derive_vjp", "BackwardPlan", "backward_graphs",
-           "compile_with_vjp"]
+__all__ = ["derive_vjp", "BackwardPlan", "ChainedBackwardPlan",
+           "backward_graphs", "compile_with_vjp"]
 
 
 # ---------------------------------------------------------------------------
@@ -228,6 +228,191 @@ def _group_refs(graph: TppGraph, nodes: list[Node], dy_names) -> tuple:
     return roots, tuple(opnames), dys
 
 
+# ---------------------------------------------------------------------------
+# Chained-root backward (flash attention derived)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ChainedBackwardPlan:
+    """Backward plan of a *chained* graph (``o = softmax_online(...) @ v``).
+
+    The forward never materializes the softmax panel P, so the backward is
+    the classic flash-attention recompute decomposition — six derived
+    TppGraphs that ride the same lowering / cost model / tune cache:
+
+      * ``p``  — recompute P = softmax(mask(scale(q @ kᵀ))) as a standard
+                 reducing graph (the same forward nodes, minus the chain);
+      * ``dp`` — dP = dy @ vᵀ (trans load of the stored (N, N2) operand);
+      * ``dz`` — the epilogue backward: recompute the base contraction and
+                 run the reverse sweep seeded with dP.  Its reducing node is
+                 ``softmax_grad(dP, z)``, whose row reduction rowsum(dP ∘ P)
+                 IS the flash-attention ``D = rowsum(dO ∘ O)`` term — derived
+                 from the registered grad rule, not hand-written;
+      * ``dq`` — dQ = dZ @ k (read through the *opposite* of the forward
+                 trans so the stored array is reused in place);
+      * ``dk`` — dK = dZᵀ @ q (shape of the stored forward operand);
+      * ``dv`` — dV = Pᵀ @ dy.
+
+    API-compatible with :class:`BackwardPlan` where the autotune / lint
+    drivers need it (``fused_graphs`` / ``graph_role`` / ``problem_shape``).
+    """
+
+    forward: TppGraph
+    policy: str                       # always "recompute"
+    graphs: dict                      # role -> TppGraph
+    names: dict                       # "lhs"/"rhs"/"crhs"/"dy"/"dp"/"dz"/"p"
+    rhs_trans: bool                   # forward rhs stored transposed?
+    aug_forward: Optional[TppGraph] = None
+    aug_index: Optional[dict] = None
+
+    def fused_graphs(self) -> dict:
+        return {g.name: g for g in self.graphs.values()}
+
+    def graph_role(self, name: str) -> str:
+        for role, g in self.graphs.items():
+            if g.name == name:
+                return role
+        raise KeyError(name)
+
+    def problem_shape(self, name: str, m: int, k: int, n: int):
+        """(M', K', N') of a derived graph given the *forward* problem
+        (M, K, N).  The chain width N2 equals K for attention (the head
+        dim), which is the shape the cost model prices."""
+        role = self.graph_role(name)
+        if role == "dk":
+            return (n, m, k) if self.rhs_trans else (k, m, n)
+        return {"p": (m, k, n), "dp": (m, k, n), "dz": (m, k, n),
+                "dq": (m, n, k), "dv": (n, m, k)}[role]
+
+
+def _derive_chained(graph: TppGraph) -> ChainedBackwardPlan:
+    """Derive the backward of a chained graph (see
+    :class:`ChainedBackwardPlan`)."""
+    chain = graph.chained_root()
+    base = graph.base_roots
+    if len(base) != 1:
+        raise FusionLegalityError(
+            f"graph {graph.name!r}: VJP of a chained graph supports exactly "
+            f"one base root, got {[r.name for r in base]}")
+    if graph.epilogue_operands:
+        raise FusionLegalityError(
+            f"graph {graph.name!r}: VJP of a chained graph with epilogue "
+            f"operands ({[o.name for o in graph.epilogue_operands]}) is not "
+            "supported — the mask/dropout ops it uses regenerate their "
+            "pattern from attrs + coordinates instead")
+    root = base[0]
+    lhs_spec = graph.operand(root.lhs)
+    rhs_spec = graph.operand(root.rhs)
+    if lhs_spec.trans:
+        raise FusionLegalityError(
+            f"graph {graph.name!r}: VJP through transposed lhs operand "
+            f"{lhs_spec.name!r} of a chained graph is not supported")
+    red = graph.reducing_node()
+    qn, kn, vn = lhs_spec.name, rhs_spec.name, chain.rhs
+
+    sweep = _Sweep(graph)
+    dy_n = sweep.fresh_name("dy")
+    dp_n = sweep.fresh_name("dp")
+    dz_n = sweep.fresh_name("dz")
+    p_n = sweep.fresh_name("p")
+
+    # P recompute: the forward graph minus the chain — a standard reducing
+    # graph whose output is the full softmax panel
+    p_graph = TppGraph(
+        name=f"{graph.name}@bwd_p", operands=(lhs_spec, rhs_spec),
+        nodes=graph.nodes, roots=base, outputs=(red.name,))
+
+    # dP = dy @ vᵀ: the stored (N, N2) chain operand read transposed
+    dp_graph = TppGraph(
+        name=f"{graph.name}@bwd_dp",
+        operands=(OperandSpec(dy_n, "lhs"), OperandSpec(vn, "rhs", trans=True)),
+        roots=(ContractionRoot("t_dp", dy_n, vn),))
+
+    # dZ: recompute the base contraction, replay the pre-reduce nodes, and
+    # run the reverse sweep seeded with contribs[reducer] = dP.  The
+    # reducer's grad rule emits softmax_grad(dP, z) — a reducing node whose
+    # rowsum(dP ∘ softmax(z)) is the D = rowsum(dO ∘ O) recompute.
+    contribs: dict[str, list[str]] = {}
+
+    def add_contrib(ref: str, val: str):
+        contribs.setdefault(graph.resolve_acc(ref), []).append(val)
+
+    add_contrib(red.name, dp_n)
+    for nd in reversed(graph.nodes):
+        clist = contribs.pop(nd.name, [])
+        if not clist:
+            continue
+        dv = clist[0] if len(clist) == 1 else _sum_values(sweep, clist)
+        op = EPILOGUE_OPS[nd.op]
+        if op.grad is None:
+            raise FusionLegalityError(
+                f"graph {graph.name!r}: epilogue op {nd.op!r} (node "
+                f"{nd.name!r}) has no grad rule — register one via the "
+                "EpilogueOp.grad field to differentiate through it")
+        if isinstance(op.grad, str):
+            pairs = ([(nd.inputs[0], dv)] if op.grad == "identity"
+                     else _named_grad(sweep, nd, dv))
+        else:
+            pairs = op.grad(sweep, nd, dv)
+        for ref, val in pairs:
+            if val is not None:
+                add_contrib(ref, val)
+    stray = [r for r in contribs if r != root.name
+             and r in graph.operand_names]
+    if stray:
+        raise FusionLegalityError(
+            f"graph {graph.name!r}: chained VJP — epilogue cotangents flow "
+            f"to contraction operands {stray}, which the chained backward "
+            "decomposition does not carry")
+    clist = contribs.get(root.name, [])
+    if not clist:
+        raise FusionLegalityError(
+            f"graph {graph.name!r}: chained VJP — no cotangent reaches base "
+            f"root {root.name!r}")
+    ds_ref = clist[0] if len(clist) == 1 else _sum_values(sweep, clist)
+    dz_nodes = _closure(sweep.pool, [ds_ref])
+    dz_graph = TppGraph(
+        name=f"{graph.name}@bwd_dz",
+        operands=(lhs_spec, rhs_spec, OperandSpec(dp_n, "tile")),
+        nodes=tuple(dz_nodes), roots=base, outputs=(ds_ref,))
+
+    # dQ = dZ @ k — opposite trans reuses the stored forward array in place
+    dq_graph = TppGraph(
+        name=f"{graph.name}@bwd_dq",
+        operands=(OperandSpec(dz_n, "lhs"),
+                  OperandSpec(kn, "rhs", trans=not rhs_spec.trans)),
+        roots=(ContractionRoot("t_dq", dz_n, kn),))
+
+    # dK in the forward operand's storage layout
+    if rhs_spec.trans:       # stored (N, K): dK = dZᵀ @ q over (N, M, K)
+        dk_graph = TppGraph(
+            name=f"{graph.name}@bwd_dk",
+            operands=(OperandSpec(dz_n, "lhs", trans=True),
+                      OperandSpec(qn, "rhs")),
+            roots=(ContractionRoot("t_dk", dz_n, qn),))
+    else:                    # stored (K, N): dK = qᵀ @ dZ over (K, M, N)
+        dk_graph = TppGraph(
+            name=f"{graph.name}@bwd_dk",
+            operands=(OperandSpec(qn, "lhs", trans=True),
+                      OperandSpec(dz_n, "rhs")),
+            roots=(ContractionRoot("t_dk", qn, dz_n),))
+
+    # dV = Pᵀ @ dy over (N, M, N2)
+    dv_graph = TppGraph(
+        name=f"{graph.name}@bwd_dv",
+        operands=(OperandSpec(p_n, "lhs", trans=True),
+                  OperandSpec(dy_n, "rhs")),
+        roots=(ContractionRoot("t_dv", p_n, dy_n),))
+
+    return ChainedBackwardPlan(
+        forward=graph, policy="recompute",
+        graphs={"p": p_graph, "dp": dp_graph, "dz": dz_graph,
+                "dq": dq_graph, "dk": dk_graph, "dv": dv_graph},
+        names={"lhs": qn, "rhs": kn, "crhs": vn,
+               "dy": dy_n, "dp": dp_n, "dz": dz_n, "p": p_n},
+        rhs_trans=rhs_spec.trans)
+
+
 def derive_vjp(graph: TppGraph, *, policy: str = "recompute") -> BackwardPlan:
     """Derive the backward pass of ``graph`` as new TppGraphs (see module
     docstring).  ``graph`` is simplified first, so rate-0 dropout masks and
@@ -236,6 +421,10 @@ def derive_vjp(graph: TppGraph, *, policy: str = "recompute") -> BackwardPlan:
         raise ValueError(f"unknown residual policy {policy!r}; "
                          "use 'recompute' or 'saved'")
     graph = simplify_graph(graph)
+    if graph.chained_root() is not None:
+        # chained graphs have their own recompute decomposition (and their
+        # forward rhs is legitimately trans — skip the refusal below)
+        return _derive_chained(graph)
     for o in graph.operands:
         if o.trans:
             raise FusionLegalityError(
@@ -497,11 +686,35 @@ def _eval_composed(graph: TppGraph, grp: _Stage1Group, ops_env: dict,
     return [env[o] for o in grp.outputs]
 
 
-def _run_backward(plan: BackwardPlan, backend: Optional[str], ops_env: dict,
+def _run_backward_chained(plan: ChainedBackwardPlan, backend: Optional[str],
+                          ops_env: dict, dy):
+    """Evaluate a chained backward plan: p → dp → dz → dq/dk/dv, each a
+    fused graph on ``backend``.  Returns {operand name: fp32 cotangent}."""
+    nm = plan.names
+    q, k, v = ops_env[nm["lhs"]], ops_env[nm["rhs"]], ops_env[nm["crhs"]]
+
+    def run(role: str, feed: dict):
+        fn = compile_for_backend(plan.graphs[role], backend,
+                                 out_dtype=jnp.float32)
+        return fn(**feed)
+
+    p = run("p", {nm["lhs"]: q, nm["rhs"]: k})
+    dp = run("dp", {nm["dy"]: dy, nm["crhs"]: v})
+    dzv = run("dz", {nm["lhs"]: q, nm["rhs"]: k, nm["dp"]: dp})
+    dq = run("dq", {nm["dz"]: dzv, nm["rhs"]: k})
+    dk = (run("dk", {nm["dz"]: dzv, nm["lhs"]: q}) if plan.rhs_trans
+          else run("dk", {nm["lhs"]: q, nm["dz"]: dzv}))
+    dvc = run("dv", {nm["p"]: p, nm["dy"]: dy})
+    return {nm["lhs"]: dq, nm["rhs"]: dk, nm["crhs"]: dvc}
+
+
+def _run_backward(plan, backend: Optional[str], ops_env: dict,
                   accs: Optional[dict], dy):
     """Evaluate the backward plan: stage-1 dz values, stage-2 contraction
     cotangents, rowvec column sums.  Returns {operand name: fp32 cotangent}
     (``None`` for masks)."""
+    if isinstance(plan, ChainedBackwardPlan):
+        return _run_backward_chained(plan, backend, ops_env, dy)
     graph = plan.forward
     n_out = len(graph.outputs)
     dy_vals = {d: (dy[i] if n_out > 1 else dy)
@@ -559,8 +772,22 @@ def _run_backward(plan: BackwardPlan, backend: Optional[str], ops_env: dict,
         elif recipe[0] == "dlhs":
             g, root_names = plan.dlhs[o.name]
             feed = {f"dz_{r}": dz[r] for r in root_names}
-            feed.update({s.name: ops_env[s.name] for s in g.operands
-                         if s.name not in feed})
+            # dz cotangents carry the stacked (zero-padded) width; a narrow
+            # forward rhs (per-root N widths, e.g. GQA kv projections) is
+            # zero-padded up to it — the pad columns of dz meet zero weight
+            # rows, contributing nothing, exactly matching the forward pad
+            kmax = max(int(feed[f"dz_{r}"].shape[1]) for r in root_names)
+            for s in g.operands:
+                if s.name in feed:
+                    continue
+                arr = ops_env[s.name]
+                if (s.kind == "rhs" and s.trans
+                        and int(arr.shape[1]) < kmax):
+                    arr = jnp.concatenate(
+                        [arr, jnp.zeros((arr.shape[0],
+                                         kmax - arr.shape[1]), arr.dtype)],
+                        axis=1)
+                feed[s.name] = arr
             fn = compile_for_backend(g, backend, out_dtype=jnp.float32)
             c = fn(**feed)
             if recipe[2] is not None:   # epilogue-value term (shapes match)
@@ -577,6 +804,12 @@ def _run_backward(plan: BackwardPlan, backend: Optional[str], ops_env: dict,
                 drhs_out = fn(**feed)
             oi = index[o.name]
             c = drhs_out[oi] if len(g.outputs) > 1 else drhs_out
+            w = int(ops_env[o.name].shape[1])
+            if int(c.shape[1]) > w:
+                # narrow forward rhs (per-root N widths): the dW columns
+                # beyond the stored width differentiate the forward's zero
+                # padding — slice back to the operand's own shape
+                c = c[:, :w]
             if recipe[2] is not None:   # epilogue-value term (shapes match)
                 c = c + value_of(recipe[2])
             out[o.name] = c

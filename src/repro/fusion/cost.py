@@ -60,7 +60,7 @@ SIGNATURE_FIELDS = {
     "TppGraph": frozenset({"name", "operands", "roots", "nodes", "outputs"}),
     "OperandSpec": frozenset({"name", "kind", "trans"}),
     "Node": frozenset({"name", "op", "inputs", "attrs"}),
-    "ContractionRoot": frozenset({"name", "lhs", "rhs"}),
+    "ContractionRoot": frozenset({"name", "lhs", "rhs", "chained"}),
 }
 
 
@@ -73,7 +73,12 @@ def graph_signature(graph: TppGraph) -> str:
     parts = [graph.name]
     parts += [f"{o.name}:{o.kind}" + ("^T" if o.trans else "")
               for o in graph.operands]
-    parts += [f"{r.name}<-{r.lhs}@{r.rhs}" for r in graph.roots]
+    # chained roots lower to a different kernel (chain accumulator +
+    # streaming maxsum strip) — the "~chain" marker keys them apart; plain
+    # roots keep their historical encoding, so existing cache entries stay
+    # valid and no CACHE_VERSION bump is needed
+    parts += [f"{r.name}<-{r.lhs}@{r.rhs}" + ("~chain" if r.chained else "")
+              for r in graph.roots]
     parts += [
         f"{nd.name}={nd.op}({','.join(nd.inputs)};{sorted(nd.attrs)})"
         for nd in graph.nodes
@@ -90,25 +95,44 @@ def graph_signature(graph: TppGraph) -> str:
     return "|".join(parts)
 
 
-def _epilogue_flops(graph: TppGraph, m: int, n: int) -> float:
-    return graph.epilogue_flops_per_elem() * m * n
+def _epilogue_flops(graph: TppGraph, m: int, n: int, k: int = 0) -> float:
+    f = graph.epilogue_flops_per_elem() * m * n
+    if graph.chained_root() is not None and k:
+        # the chained GEMM streams inside the epilogue band: one (bm, bn) x
+        # (bn, N2) MXU issue per N visit, 2·M·N·N2 flops total.  N2 is not
+        # known at cost time; K is the attention default (the chain restores
+        # the lhs width) and exact for fused_attention_graph.
+        f += 2.0 * m * n * k
+    return f
 
 
-def _scratch_bytes(graph: TppGraph, nest, tiles, n: int) -> int:
+def _acc_scratch(graph: TppGraph, acc_m: int, acc_n: int, n: int,
+                 k: int) -> int:
+    """Shared tail of the scratch estimates: base-root accumulators plus the
+    chain accumulator/strip (chained) or staged panels + strip (reducing) —
+    mirrors ``lowering._compile_pallas``."""
+    sb = len(graph.base_roots) * acc_m * acc_n * 4
+    if graph.chained_root() is not None:
+        sb += acc_m * max(k, 1) * 4     # chain accumulator (N2 ≈ K)
+        sb += acc_m * 2 * 4             # (running max, running sum)
+    elif graph.reducing_node() is not None:
+        sb += max(1, len(graph.staged_values())) * acc_m * n * 4
+        sb += acc_m * 2 * 4
+    return sb
+
+
+def _scratch_bytes(graph: TppGraph, nest, tiles, n: int, k: int = 0) -> int:
     """VMEM scratch the fused kernel allocates: one fp32 accumulator tile per
     contraction root plus, for normalizing epilogues, one full-row panel per
     staged value and the stats strip (mirrors ``lowering._compile_pallas``)."""
     bm, bk, bn = tiles
     acc_m = nest.innermost_step("b") * bm
     acc_n = nest.innermost_step("c") * bn
-    sb = len(graph.roots) * acc_m * acc_n * 4
-    if graph.reducing_node() is not None:
-        sb += max(1, len(graph.staged_values())) * acc_m * n * 4
-        sb += acc_m * 2 * 4
-    return sb
+    return _acc_scratch(graph, acc_m, acc_n, n, k)
 
 
-def _scratch_bytes_static(graph: TppGraph, loops, tiles, n: int) -> int:
+def _scratch_bytes_static(graph: TppGraph, loops, tiles, n: int,
+                          k: int = 0) -> int:
     """``_scratch_bytes`` without a planned nest: the innermost occurrence of
     a letter always advances by the loop's base step, so the accumulator
     footprint is schedule-invariant (loops are [K, M, N] from
@@ -116,11 +140,7 @@ def _scratch_bytes_static(graph: TppGraph, loops, tiles, n: int) -> int:
     bm, bk, bn = tiles
     acc_m = loops[1].step * bm
     acc_n = loops[2].step * bn
-    sb = len(graph.roots) * acc_m * acc_n * 4
-    if graph.reducing_node() is not None:
-        sb += max(1, len(graph.staged_values())) * acc_m * n * 4
-        sb += acc_m * 2 * 4
-    return sb
+    return _acc_scratch(graph, acc_m, acc_n, n, k)
 
 
 def graph_cost(
@@ -149,12 +169,12 @@ def graph_cost(
     return perf_model.predict(
         tl.nest, in_maps, out_map,
         dtype=dtype,
-        flops_per_body=2.0 * bm * bn * bk * len(graph.roots),
+        flops_per_body=2.0 * bm * bn * bk * len(graph.base_roots),
         tile_mnk=(bm, bn, bk),
         target=target,
         reduction_letters=("a",),
-        epilogue_flops=_epilogue_flops(graph, m, n),
-        scratch_bytes=_scratch_bytes(graph, tl.nest, tiles, n),
+        epilogue_flops=_epilogue_flops(graph, m, n, k),
+        scratch_bytes=_scratch_bytes(graph, tl.nest, tiles, n, k),
         mode=mode,
     )
 
@@ -246,11 +266,11 @@ def autotune_graph(
     results, stats = autotune.autotune_with_stats(
         loops, in_maps, out_map,
         dtype=dtype,
-        flops_per_body=2.0 * bm * bn * bk * len(graph.roots),
+        flops_per_body=2.0 * bm * bn * bk * len(graph.base_roots),
         tile_mnk=(bm, bn, bk),
         reduction_letters=("a",),
-        epilogue_flops=_epilogue_flops(graph, m, n),
-        scratch_bytes=_scratch_bytes_static(graph, loops, tiles, n),
+        epilogue_flops=_epilogue_flops(graph, m, n, k),
+        scratch_bytes=_scratch_bytes_static(graph, loops, tiles, n, k),
         max_blockings=list(max_blockings) if max_blockings else None,
         parallel_letters=parallel_letters,
         target=target,

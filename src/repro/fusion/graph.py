@@ -20,6 +20,7 @@ The IR is deliberately tiny:
       - ``mask``   (M, N)   boolean epilogue operand (legacy dropout mask)
       - ``rowvec`` (N,)     row-broadcast vector (bias, gamma, beta)
       - ``scalar`` ()       traced scalar (the ``dropout_rng`` PRNG seed)
+      - ``crhs``   (N, N2)  a *chained* contraction's rhs (see below)
     ``lhs``/``rhs`` operands may set ``trans=True``: the array is *stored*
     transposed relative to its contraction role (a trans lhs has array shape
     (K, M), a trans rhs (N, K)) and the lowering reads it with a transposed
@@ -41,6 +42,16 @@ The IR is deliberately tiny:
     rmsnorm / softmax over the N axis); it must be the last node and the
     graph must be single-output — the lowering handles it with the row-panel
     statistics trick.
+
+A **chained root** (``ContractionRoot(..., chained=True)``) consumes the
+reduced epilogue of the base roots as its lhs and a ``crhs`` operand
+(stored (N, N2)) as its rhs: ``O = reduce(epilogue(S)) @ V``.  The reducer
+must be an *online* one (``ONLINE_REDUCERS`` — ``softmax_online`` carries a
+streaming (running max, running sum) recurrence), so the reduced (M, N)
+panel is never materialized: the Pallas lowering streams each tile into an
+(M, N2) chain accumulator rescaled through a statistics strip.  This is
+flash attention as IR — structural rules are ``TPP212``/``TPP213``, the
+full story is in ``docs/fusion_attention.md``.
 
 Epilogue TPPs are drawn from a fixed registry (``EPILOGUE_OPS``) whose
 ``apply`` functions operate on fp32 values — the same functions run in the XLA
@@ -67,11 +78,11 @@ from repro.core.loops import LegalityError
 
 __all__ = [
     "FusionLegalityError", "OperandSpec", "ContractionRoot", "Node",
-    "TppGraph", "EpilogueOp", "EPILOGUE_OPS", "register_epilogue",
-    "simplify_graph",
+    "TppGraph", "EpilogueOp", "EPILOGUE_OPS", "ONLINE_REDUCERS",
+    "register_epilogue", "simplify_graph",
 ]
 
-OPERAND_KINDS = ("lhs", "rhs", "tile", "mask", "rowvec", "scalar")
+OPERAND_KINDS = ("lhs", "rhs", "crhs", "tile", "mask", "rowvec", "scalar")
 
 
 class FusionLegalityError(LegalityError):
@@ -105,11 +116,21 @@ class ContractionRoot:
     """One GEMM root ``name = lhs @ rhs``: ``lhs``/``rhs`` are operand names
     of the matching kinds, ``name`` is the accumulator value visible to the
     epilogue DAG.  Roots may share an ``lhs`` operand (fused QKV / gated MLP
-    read the activation once)."""
+    read the activation once).
+
+    A **chained** root (``chained=True``) consumes a *computed value* instead
+    of an lhs operand: its ``lhs`` names the graph's reducing node (which
+    must be an online reducer — ``softmax_online``), and its ``rhs`` names a
+    ``crhs`` operand of array shape (N, N2) contracted over the base roots'
+    N axis.  The lowering never materializes the reduced (M, N) panel:
+    partial products accumulate into an (M, N2) chain accumulator, rescaled
+    by the streaming (running max, running sum) statistics strip as new N
+    tiles arrive — online softmax as IR, i.e. flash attention derived."""
 
     name: str
     lhs: str
     rhs: str
+    chained: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -271,6 +292,53 @@ def _softmax_apply(v):
     m = jnp.max(v, axis=-1, keepdims=True)
     e = jnp.exp(v - m)
     return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+# Masked-out attention scores are filled with a large-negative finite value
+# (not -inf: exp(-inf - -inf) = nan on a fully masked row).  The streaming
+# chained lowering treats anything below _MASK_FLOOR as masked when forming
+# exp(z - m_new) — without the floor, a fully-masked tile whose running max
+# is still _NEG_INF would contribute exp(0) = 1 per masked element.
+_NEG_INF = -1e30
+_MASK_FLOOR = -1e29
+
+
+def _attn_mask_apply(v, *, causal: bool = True, window: int = 0,
+                     offset: int = 0, _offsets=(0, 0)):
+    """Causal / sliding-window score mask keyed on *global* element
+    coordinates: row ``i`` (query, shifted by ``offset`` = S_kv - S_q so the
+    last query row sees the full key range) may attend to column ``j`` (key)
+    iff ``j <= i + offset`` (causal) and ``j > i + offset - window`` (when
+    ``window > 0``).  Masked scores become ``_NEG_INF``.  Like the PRNG ops,
+    the same function runs on full arrays (offsets (0, 0)) and on tiles (the
+    Pallas lowering injects the tile's global offsets)."""
+    r0, c0 = _offsets
+    shape = jnp.shape(v)
+    rows = r0 + offset + jax.lax.broadcasted_iota(jnp.int32, shape, 0)
+    cols = c0 + jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+    keep = jnp.ones(shape, dtype=jnp.bool_)
+    if causal:
+        keep = jnp.logical_and(keep, cols <= rows)
+    if window:
+        keep = jnp.logical_and(keep, cols > rows - window)
+    return jnp.where(keep, v, jnp.float32(_NEG_INF))
+
+
+def _attn_mask_grad_apply(dv, *, causal: bool = True, window: int = 0,
+                          offset: int = 0, _offsets=(0, 0)):
+    """Cotangent of ``attn_mask``: dv flows only through kept positions (a
+    dv-substitution grad, like dropout — the keep pattern is regenerated from
+    the same attrs + coordinates, nothing is saved)."""
+    r0, c0 = _offsets
+    shape = jnp.shape(dv)
+    rows = r0 + offset + jax.lax.broadcasted_iota(jnp.int32, shape, 0)
+    cols = c0 + jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+    keep = jnp.ones(shape, dtype=jnp.bool_)
+    if causal:
+        keep = jnp.logical_and(keep, cols <= rows)
+    if window:
+        keep = jnp.logical_and(keep, cols > rows - window)
+    return jnp.where(keep, dv, jnp.float32(0.0))
 
 
 # --- derivative TPP semantics (fp32, full-row for the reducing ones) -------
@@ -440,6 +508,34 @@ register_epilogue(EpilogueOp(
     "softmax", 1, (), _softmax_apply, reduces="n", flops_per_elem=7.0,
     grad=_grad_softmax))
 
+# Online softmax — the reducer a *chained* contraction root consumes.  Same
+# full-row semantics as ``softmax`` (the XLA path and the standard row-panel
+# lowering apply it to the finished row), but membership in ONLINE_REDUCERS
+# licenses the streaming chained lowering: instead of staging the (M, N)
+# row panel, the kernel carries a (running max, running sum) statistics
+# strip and rescales the chain accumulator by exp(m_prev - m_new) whenever a
+# new N tile raises the max — flash attention's online-softmax recurrence as
+# a reusable IR-level reducer.
+register_epilogue(EpilogueOp(
+    "softmax_online", 1, (), _softmax_apply, reduces="n", flops_per_elem=9.0,
+    grad=_grad_softmax, stats_input=0))
+
+# Coordinate-keyed attention score mask (causal / sliding window).  Like the
+# counter-PRNG dropout, it regenerates its pattern from global element
+# coordinates (wants_offsets) so every tile of every schedule — forward or
+# backward — masks identically with no (M, N) mask operand.
+register_epilogue(EpilogueOp(
+    "attn_mask", 1, (), _attn_mask_apply, flops_per_elem=4.0,
+    grad="attn_mask_grad", wants_offsets=True))
+register_epilogue(EpilogueOp(
+    "attn_mask_grad", 1, (), _attn_mask_grad_apply, flops_per_elem=4.0,
+    wants_offsets=True))
+
+#: Reducing ops whose recurrence the chained Pallas lowering knows how to
+#: stream (running max + running sum).  A chained root's lhs must name a
+#: node using one of these.
+ONLINE_REDUCERS = frozenset({"softmax_online"})
+
 # Derivative TPPs (fusion.autodiff's backward epilogue DAGs).  The pointwise
 # ones take (dv, primal-input); the reducing ones recompute the row
 # statistics of their primal input via the same row-panel strip the forward
@@ -547,18 +643,35 @@ class TppGraph:
 
     @property
     def contraction_operands(self) -> tuple[OperandSpec, ...]:
-        """lhs/rhs operands in canonical (root-declaration) order, shared
-        operands listed once — the packing order of the lowering."""
+        """lhs/rhs/crhs operands in canonical (root-declaration) order,
+        shared operands listed once — the packing order of the lowering.  A
+        chained root contributes only its rhs (its lhs is a computed
+        value)."""
         seen: dict[str, OperandSpec] = {}
         for r in self.roots:
-            for nm in (r.lhs, r.rhs):
+            for nm in ((r.rhs,) if r.chained else (r.lhs, r.rhs)):
                 if nm not in seen:
                     seen[nm] = self.operand(nm)
         return tuple(seen.values())
 
     @property
     def epilogue_operands(self) -> tuple[OperandSpec, ...]:
-        return tuple(o for o in self.operands if o.kind not in ("lhs", "rhs"))
+        return tuple(o for o in self.operands
+                     if o.kind not in ("lhs", "rhs", "crhs"))
+
+    def chained_root(self) -> Optional[ContractionRoot]:
+        """The graph's chained root, or None (validation allows at most
+        one)."""
+        for r in self.roots:
+            if r.chained:
+                return r
+        return None
+
+    @property
+    def base_roots(self) -> tuple[ContractionRoot, ...]:
+        """Non-chained roots — the GEMMs the shared (M, K, N) nest carries
+        directly."""
+        return tuple(r for r in self.roots if not r.chained)
 
     def reducing_node(self) -> Optional[Node]:
         for nd in self.nodes:
@@ -647,12 +760,17 @@ class TppGraph:
             raise FusionLegalityError(
                 f"graph {self.name!r}: duplicate root names {root_names}",
                 code="TPP211")
+        chained = [r for r in self.roots if r.chained]
         for r in self.roots:
             if r.name in names or (r.name == "acc" and len(self.roots) > 1):
                 raise FusionLegalityError(
                     f"graph {self.name!r}: root name {r.name!r} shadows an "
                     "operand or the single-root 'acc' alias", code="TPP211")
-            for side, nm, kind in (("lhs", r.lhs, "lhs"), ("rhs", r.rhs, "rhs")):
+            # a chained root's lhs is a computed value (validated against the
+            # reducing node below, once nodes are known), not an operand
+            sides = ((("rhs", r.rhs, "crhs"),) if r.chained
+                     else (("lhs", r.lhs, "lhs"), ("rhs", r.rhs, "rhs")))
+            for side, nm, kind in sides:
                 try:
                     spec = self.operand(nm)
                 except KeyError:
@@ -663,13 +781,29 @@ class TppGraph:
                     raise FusionLegalityError(
                         f"graph {self.name!r}: root {r.name!r} {side} operand "
                         f"{nm!r} must have kind {kind!r}, got {spec.kind!r}",
-                        code="TPP210")
-        rooted = {nm for r in self.roots for nm in (r.lhs, r.rhs)}
+                        code="TPP213" if kind == "crhs" else "TPP210")
+        if len(chained) > 1:
+            raise FusionLegalityError(
+                f"graph {self.name!r}: at most one chained root per graph "
+                f"(one chain accumulator + statistics strip), got "
+                f"{[r.name for r in chained]}", code="TPP212")
+        if chained and len(self.roots) == len(chained):
+            raise FusionLegalityError(
+                f"graph {self.name!r}: a chained root needs at least one "
+                "base root to consume — nothing produces the reduced panel",
+                code="TPP212")
+        rooted = {nm for r in self.roots
+                  for nm in ((r.rhs,) if r.chained else (r.lhs, r.rhs))}
         for o in self.operands:
             if o.kind in ("lhs", "rhs") and o.name not in rooted:
                 raise FusionLegalityError(
                     f"graph {self.name!r}: {o.kind} operand {o.name!r} is not "
                     "referenced by any contraction root", code="TPP201")
+            if o.kind == "crhs" and o.name not in rooted:
+                raise FusionLegalityError(
+                    f"graph {self.name!r}: crhs operand {o.name!r} is not "
+                    "consumed by any chained root — crhs operands exist only "
+                    "as chained-contraction rhs", code="TPP213")
 
         visible = set(names) | set(root_names)
         if len(self.roots) == 1:
@@ -739,6 +873,60 @@ class TppGraph:
                     "earlier value", code="TPP211")
             visible.add(nd.name)
 
+        # crhs operands feed chained roots only — a node consuming one as a
+        # value would read the (N, N2) chain operand at (M, N) tile shape
+        for nd in self.nodes:
+            op = EPILOGUE_OPS[nd.op]
+            for ref in nd.inputs[:op.value_arity]:
+                try:
+                    spec = self.operand(ref)
+                except KeyError:
+                    continue
+                if spec.kind == "crhs":
+                    raise FusionLegalityError(
+                        f"graph {self.name!r}: node {nd.name!r} consumes "
+                        f"crhs operand {ref!r} as a value — crhs operands "
+                        "are chained-contraction rhs only", code="TPP213")
+
+        ch = chained[0] if chained else None
+        if ch is not None:
+            if self.roots[-1] is not ch:
+                raise FusionLegalityError(
+                    f"graph {self.name!r}: chained root {ch.name!r} must be "
+                    "declared after every base root — it consumes their "
+                    "reduced panel", code="TPP212")
+            if reduce_node is None or ch.lhs != reduce_node.name:
+                raise FusionLegalityError(
+                    f"graph {self.name!r}: chained root {ch.name!r} lhs "
+                    f"{ch.lhs!r} must name the graph's reducing node"
+                    + (f" ({reduce_node.name!r})" if reduce_node is not None
+                       else " — the graph has none"), code="TPP212")
+            if reduce_node.op not in ONLINE_REDUCERS:
+                raise FusionLegalityError(
+                    f"graph {self.name!r}: chained root {ch.name!r} consumes "
+                    f"reducer {reduce_node.op!r}, which has no streaming "
+                    f"(running max, running sum) recurrence — online "
+                    f"reducers: {sorted(ONLINE_REDUCERS)}", code="TPP212")
+            if self.nodes[-1] is not reduce_node:
+                raise FusionLegalityError(
+                    f"graph {self.name!r}: chained root {ch.name!r} — no "
+                    "post-reduce nodes allowed: the reduced panel is never "
+                    "materialized, it streams straight into the chain "
+                    "accumulator", code="TPP212")
+            if self.outputs != (ch.name,):
+                raise FusionLegalityError(
+                    f"graph {self.name!r}: a chained graph's only output is "
+                    f"the chained root ({ch.name!r}); base accumulators and "
+                    f"the reduced panel are never materialized — got outputs "
+                    f"{self.outputs}", code="TPP212")
+            for nd in self.nodes:
+                if ch.name in nd.inputs:
+                    raise FusionLegalityError(
+                        f"graph {self.name!r}: node {nd.name!r} reads chained "
+                        f"root {ch.name!r} — the chain accumulator closes "
+                        "only at the final N visit, after every node has "
+                        "run", code="TPP212")
+
         # outputs: computed values only (roots/nodes, not plain operands —
         # the lowering's output write has no operand fallback); in a reducing
         # graph every output is written in the close branch, so it must be
@@ -753,6 +941,8 @@ class TppGraph:
                 raise FusionLegalityError(
                     f"graph {self.name!r}: output {ref!r} names no root, "
                     "node, or the 'acc' alias", code="TPP208")
+            if ch is not None and ref == ch.name:
+                continue    # the chained close IS the full-row-final write
             if reduce_node is not None and ref not in post_visible:
                 raise FusionLegalityError(
                     f"graph {self.name!r}: output {ref!r} is not full-row "
@@ -788,8 +978,12 @@ class TppGraph:
         out = [f"TppGraph {self.name!r}:"]
         for r in self.roots:
             def t(nm):
-                return nm + "^T" if self.operand(nm).trans else nm
-            out.append(f"  {r.name} = gemm({t(r.lhs)}, {t(r.rhs)})")
+                try:
+                    return nm + "^T" if self.operand(nm).trans else nm
+                except KeyError:
+                    return nm   # chained lhs: a computed value
+            kind = "chain_gemm" if r.chained else "gemm"
+            out.append(f"  {r.name} = {kind}({t(r.lhs)}, {t(r.rhs)})")
         for nd in self.nodes:
             attrs = ", ".join(f"{k}={v}" for k, v in nd.attrs)
             out.append(

@@ -19,7 +19,20 @@ Multi-root graphs (the paper's multi-GEMM fused blocks):
   * ``fused_gated_mlp_graph`` — act(x @ wg) * (x @ wu): two GEMMs sharing the
     activation lhs, combined by a ``mul`` epilogue in one nest.
   * ``fused_qkv_graph``       — x @ wq / x @ wk / x @ wv: one lhs, three rhs,
-    output stacked (3, M, N).
+    output stacked (3, M, N).  Per-root N widths: GQA kv projections lower
+    at their own (narrower) width — no padding to MHA.
+
+Chained-root graphs (flash attention derived):
+
+  * ``fused_attention_graph`` — softmax_online(mask(scale(q @ kᵀ))) @ v as a
+    chained contraction: the softmax panel never materializes, the lowering
+    streams it through the (running max, running sum) statistics strip into
+    the chain accumulator.  Causal / sliding-window masking is the
+    coordinate-keyed ``attn_mask`` epilogue op.  ``jax.grad`` through
+    ``fused_attention_apply`` runs the six derived backward graphs of
+    ``fusion.autodiff.ChainedBackwardPlan`` (the flash-attention recompute
+    decomposition, including the D = rowsum(dO ∘ O) pattern) — nothing about
+    attention is hand-written at the kernel layer anymore.
 
 Graphs are cached by their static parameters so repeated layer construction
 (inside jit traces) reuses the same graph object; the ``fused_*_apply``
@@ -33,12 +46,15 @@ XLA composition.  Pass ``vjp=False`` to get the plain forward compilation
 from __future__ import annotations
 
 import functools
+import math
 
+import jax
 import jax.numpy as jnp
 
 from repro.fusion import rng
 from repro.fusion.autodiff import compile_with_vjp
-from repro.fusion.graph import ContractionRoot, Node, OperandSpec, TppGraph
+from repro.fusion.graph import (ContractionRoot, FusionLegalityError, Node,
+                                OperandSpec, TppGraph)
 from repro.fusion.lowering import compile_for_backend
 
 # Default per-site PRNG salts: the fused graph node and any unfused
@@ -55,9 +71,9 @@ def _dispatch(graph, backend, vjp, kw):
 
 __all__ = [
     "fused_output_graph", "fused_mlp_graph", "fused_gated_mlp_graph",
-    "fused_qkv_graph", "fused_attn_out_graph",
+    "fused_qkv_graph", "fused_attn_out_graph", "fused_attention_graph",
     "fused_output_apply", "fused_mlp_apply", "fused_gated_mlp_apply",
-    "fused_qkv_apply", "fused_attn_out_apply",
+    "fused_qkv_apply", "fused_attn_out_apply", "fused_attention_apply",
 ]
 
 
@@ -127,8 +143,10 @@ def fused_gated_mlp_graph(activation: str = "silu") -> TppGraph:
 @functools.lru_cache(maxsize=None)
 def fused_qkv_graph() -> TppGraph:
     """x @ wq, x @ wk, x @ wv — one lhs, three rhs, three roots, output
-    stacked (3, M, N).  Requires equal head widths (N) per projection —
-    MHA-style attention, or GQA padded to it."""
+    stacked (3, M, Nmax).  The projections may have different widths (GQA:
+    wk/wv at ``num_kv_heads * head_dim`` < the wq width): the lowering
+    carries each root at its own N width and zero-pads the narrow stack
+    slices — no padding of the *weights* to MHA, no wasted FLOPs."""
     return TppGraph(
         name="fused_qkv",
         operands=(OperandSpec("x", "lhs"), OperandSpec("wq", "rhs"),
@@ -137,6 +155,42 @@ def fused_qkv_graph() -> TppGraph:
                ContractionRoot("k", "x", "wk"),
                ContractionRoot("v", "x", "wv")),
         outputs=("q", "k", "v"),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def fused_attention_graph(*, causal: bool = True, window: int = 0,
+                          scale: float = 1.0, offset: int = 0) -> TppGraph:
+    """softmax_online(attn_mask(scale(q @ kᵀ))) @ v — flash attention as a
+    chained-root TppGraph over 2D operands q (Sq, D), k (Skv, D) (stored
+    transposed, read as kᵀ without a copy), v (Skv, D).
+
+    ``offset`` is the query-row shift (S_kv - S_q) that end-aligns the
+    causal diagonal; ``window > 0`` adds sliding-window masking.  With
+    neither, the mask node is omitted entirely (plain cross-attention
+    softmax).  The reduced panel is never materialized: the chained Pallas
+    lowering streams it into an (Sq, D) chain accumulator rescaled via the
+    (running max, running sum) statistics strip."""
+    nodes = [Node("n0_scale", "scale", ("s",), (("s", float(scale)),))]
+    prev = "n0_scale"
+    if causal or window:
+        nodes.append(Node("n1_mask", "attn_mask", (prev,),
+                          tuple(sorted({"causal": bool(causal),
+                                        "offset": int(offset),
+                                        "window": int(window)}.items()))))
+        prev = "n1_mask"
+    nodes.append(Node("n2_softmax", "softmax_online", (prev,)))
+    name = ("fused_attention" + ("_causal" if causal else "")
+            + (f"_w{window}" if window else "")
+            + (f"_off{offset}" if offset else ""))
+    return TppGraph(
+        name=name,
+        operands=(OperandSpec("q", "lhs"), OperandSpec("k", "rhs", trans=True),
+                  OperandSpec("v", "crhs")),
+        roots=(ContractionRoot("s", "q", "k"),
+               ContractionRoot("o", "n2_softmax", "v", chained=True)),
+        nodes=tuple(nodes),
+        outputs=("o",),
     )
 
 
@@ -224,11 +278,66 @@ def fused_gated_mlp_apply(x, wg, wu, *, activation: str = "silu",
 
 
 def fused_qkv_apply(x, wq, wk, wv, *, backend=None, vjp: bool = True, **kw):
-    """Backend-dispatched fused QKV projection.  Returns the (3, M, N) stack;
-    unpack with ``q, k, v = fused_qkv_apply(...)``."""
+    """Backend-dispatched fused QKV projection: one three-root nest computes
+    ``x @ wq``, ``x @ wk``, ``x @ wv`` sharing the activation load.
+
+    Returns the tuple ``(q, k, v)``, each at its projection's own width:
+    q is (M, Nq), k and v are (M, Nkv).  GQA weights (Nkv < Nq) lower at
+    their narrow width inside the nest — the internal (3, M, Nq) stack is
+    zero-padded and the k/v slices are cut back before returning.  Weight
+    shapes are validated up front (same input width K, k and v matching,
+    Nq a positive multiple of Nkv) with the stable ``TPP214`` diagnostic
+    instead of a trace-time shape error."""
+    shapes = {nm: jnp.shape(w) for nm, w in
+              (("wq", wq), ("wk", wk), ("wv", wv))}
+    bad = [nm for nm, s in shapes.items() if len(s) != 2]
+    if bad:
+        raise FusionLegalityError(
+            f"fused_qkv_apply: projection weights must be 2D (K, N); got "
+            f"{ {nm: shapes[nm] for nm in bad} }", code="TPP214")
+    (kq, nq), (kk, nk), (kv_, nv) = shapes["wq"], shapes["wk"], shapes["wv"]
+    if not (kq == kk == kv_) or nk != nv or nk <= 0 or nq % nk:
+        raise FusionLegalityError(
+            "fused_qkv_apply: inconsistent projection widths — wq "
+            f"{shapes['wq']}, wk {shapes['wk']}, wv {shapes['wv']}: q/k/v "
+            "must share the input (K) width, k and v must match, and the q "
+            "width must be a positive multiple of the kv width (GQA)",
+            code="TPP214")
     g = fused_qkv_graph()
     fn = _dispatch(g, backend, vjp, kw)
-    return fn(x=x, wq=wq, wk=wk, wv=wv)
+    out = fn(x=x, wq=wq, wk=wk, wv=wv)
+    return out[0], out[1][:, :nk], out[2][:, :nv]
+
+
+def fused_attention_apply(q, k, v, *, causal: bool = True, window=None,
+                          scale=None, backend=None, vjp: bool = True,
+                          out_dtype=None, **kw):
+    """Backend-dispatched fused attention through the chained-root graph —
+    drop-in for ``kernels.ops.attention``: q (B, H, Sq, D); k/v
+    (B, Hk, Skv, D) with H % Hk == 0 (GQA kv heads broadcast).
+
+    Forward and backward both run derived TppGraphs: the forward streams
+    online softmax through the chain accumulator (never materializing the
+    (Sq, Skv) score panel on the Pallas paths), and ``jax.grad`` (with
+    ``vjp=True``) runs the six-graph flash-attention recompute decomposition
+    of ``fusion.autodiff``.  Schedule kwargs pass through to the forward
+    compilation."""
+    b, h, sq, d = q.shape
+    _, hk, skv, _ = k.shape
+    if h % hk:
+        raise FusionLegalityError(
+            f"fused_attention_apply: query heads ({h}) must be a multiple "
+            f"of kv heads ({hk})", code="TPP214")
+    if hk != h:
+        k = jnp.repeat(k, h // hk, axis=1)
+        v = jnp.repeat(v, h // hk, axis=1)
+    g = fused_attention_graph(
+        causal=bool(causal), window=int(window or 0),
+        scale=float(scale) if scale is not None else 1.0 / math.sqrt(d),
+        offset=skv - sq)
+    fn = _dispatch(g, backend, vjp, kw)
+    o = jax.vmap(jax.vmap(lambda q2, k2, v2: fn(q=q2, k=k2, v=v2)))(q, k, v)
+    return o.astype(out_dtype or q.dtype)
 
 
 def fused_attn_out_apply(o, wo, *, residual=None, gamma=None, beta=None,

@@ -48,7 +48,7 @@ from repro.core.loops import LoopSpec, ThreadedLoop
 from repro.core.pallas_lowering import (TensorMap, make_pallas_fn, plan_pallas,
                                         validate_reduction_innermost)
 from repro.fusion.graph import (EPILOGUE_OPS, FusionLegalityError, TppGraph,
-                                simplify_graph)
+                                _MASK_FLOOR, _NEG_INF, simplify_graph)
 
 __all__ = [
     "compile", "compile_for_backend", "validate_epilogue_band",
@@ -84,7 +84,9 @@ def validate_epilogue_band(nest, graph: TppGraph, *, m_letter="b", n_letter="c")
 
 def build_nest_inputs(graph: TppGraph, m: int, k: int, n: int,
                       tiles: tuple[int, int, int],
-                      block_steps: Optional[dict] = None):
+                      block_steps: Optional[dict] = None, *,
+                      rhs_widths: Optional[dict] = None,
+                      chain_n2: Optional[int] = None):
     """LoopSpecs + TensorMaps for lowering ``graph`` at problem size
     (M, K, N) with base tiles (bm, bk, bn).  Operand order is
     ``[*contraction_operands, *epilogue_operands]`` (shared lhs operands
@@ -96,7 +98,15 @@ def build_nest_inputs(graph: TppGraph, m: int, k: int, n: int,
     (transposed) layout — lhs (K, M), rhs (N, K) — and the kernel issues the
     MXU op with swapped contraction dims instead of materializing a
     transpose.  A multi-output graph's out map carries a leading unindexed
-    stacking axis of extent R (array shape ``(R, M, N)``)."""
+    stacking axis of extent R (array shape ``(R, M, N)``).
+
+    ``rhs_widths`` maps rhs operand names to a *narrow* N width ``w < n``
+    (per-root widths — GQA's K/V projections): the whole stored array is
+    VMEM-resident every call (``(bk·steps, w)`` blocks, no ``c`` letter) and
+    the kernel slices the live N tile out of it, skipping tiles past ``w``.
+    ``chain_n2`` is the chained contraction's output width: crhs operands
+    map as ``(bn·steps, n2)`` blocks walked by ``c``, and the (single)
+    output of a chained graph maps full-width ``(bm, n2)`` rows."""
     bm, bk, bn = tiles
     if m % bm or k % bk or n % bn:
         raise FusionLegalityError(
@@ -106,6 +116,9 @@ def build_nest_inputs(graph: TppGraph, m: int, k: int, n: int,
             code="TPP108")
     mb, kb, nb = m // bm, k // bk, n // bn
     block_steps = block_steps or {}
+    rhs_widths = rhs_widths or {}
+    if graph.chained_root() is not None and chain_n2 is None:
+        chain_n2 = k   # attention default: the chain restores the lhs width
     loops = [
         LoopSpec(0, kb, 1, block_steps=tuple(block_steps.get("a", ())), name="K"),
         LoopSpec(0, mb, 1, block_steps=tuple(block_steps.get("b", ())), name="M"),
@@ -118,6 +131,16 @@ def build_nest_inputs(graph: TppGraph, m: int, k: int, n: int,
             in_maps.append(TensorMap(("a", "b"), (bk, bm), layout="flat")
                            if spec.trans
                            else TensorMap(("b", "a"), (bm, bk), layout="flat"))
+        elif spec.kind == "crhs":
+            # stored (N, N2), walked by the N loop, full chain width visible
+            in_maps.append(TensorMap(("c", None), (bn, chain_n2),
+                                     layout="flat"))
+        elif spec.name in rhs_widths:
+            # narrow rhs: whole stored array resident, no N-loop indexing
+            w = rhs_widths[spec.name]
+            in_maps.append(TensorMap((None, "a"), (w, bk), layout="flat")
+                           if spec.trans
+                           else TensorMap(("a", None), (bk, w), layout="flat"))
         else:
             in_maps.append(TensorMap(("c", "a"), (bn, bk), layout="flat")
                            if spec.trans
@@ -133,7 +156,10 @@ def build_nest_inputs(graph: TppGraph, m: int, k: int, n: int,
         else:  # rowvec — whole vector visible every call (norms need full N)
             in_maps.append(TensorMap((None, None), (1, n), layout="flat"))
     n_out = len(graph.outputs)
-    if graph.reducing_node() is not None:
+    if graph.chained_root() is not None:
+        # single output (validated), full chain width per row block
+        out_map = TensorMap(("b", None), (bm, chain_n2), layout="flat")
+    elif graph.reducing_node() is not None:
         out_map = (TensorMap((None, "b", None), (n_out, bm, n), layout="flat")
                    if n_out > 1
                    else TensorMap(("b", None), (bm, n), layout="flat"))
@@ -175,9 +201,10 @@ def _pack_operands(graph: TppGraph, operands: dict, ignore=frozenset()):
 def _compile_xla(graph: TppGraph, *, out_dtype=None, ignore=frozenset()):
     def fn(**operands):
         _pack_operands(graph, operands, ignore)  # validates the operand set
-        x = operands[graph.roots[0].lhs]
+        base = graph.base_roots
+        x = operands[base[0].lhs]
         env = {}
-        for root in graph.roots:
+        for root in base:
             a, b = operands[root.lhs], operands[root.rhs]
             if graph.operand(root.lhs).trans:
                 a = a.T
@@ -201,9 +228,25 @@ def _compile_xla(graph: TppGraph, *, out_dtype=None, ignore=frozenset()):
             # coordinates ARE the local ones, so the (0, 0) default applies
             env[nd.name] = op.apply(*(value(r) for r in nd.inputs),
                                     **nd.attr_dict())
+        # a chained root consumes the reduced panel, so it evaluates AFTER
+        # the epilogue DAG: the composed reference is softmax-then-matmul,
+        # mathematically identical to the streamed online recurrence
+        for root in graph.roots:
+            if root.chained:
+                env[root.name] = tpp.gemm(env[root.lhs],
+                                          operands[root.rhs].astype(
+                                              jnp.float32),
+                                          beta=0.0, out_dtype=jnp.float32)
         odt = out_dtype or x.dtype
         if len(graph.outputs) > 1:
-            return jnp.stack([env[o] for o in graph.outputs]).astype(odt)
+            outs = [env[o] for o in graph.outputs]
+            # per-root N widths (GQA): narrow roots zero-pad to the stack
+            # width, matching the Pallas kernel's never-touched acc columns
+            wmax = max(o.shape[-1] for o in outs)
+            outs = [o if o.shape[-1] == wmax
+                    else jnp.pad(o, ((0, 0), (0, wmax - o.shape[-1])))
+                    for o in outs]
+            return jnp.stack(outs).astype(odt)
         return env[graph.outputs[0]].astype(odt)
 
     return fn
@@ -299,7 +342,11 @@ def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
     red_idx = graph.nodes.index(reducing) if reducing is not None else None
     pre_nodes = graph.nodes if reducing is None else graph.nodes[:red_idx]
     post_nodes = graph.post_reduce_nodes()
-    staged = graph.staged_values()
+    chain = graph.chained_root()
+    base_roots = graph.base_roots
+    # a chained graph stages NOTHING: the reduced value streams straight
+    # into the chain accumulator under the (running max, running sum) strip
+    staged = () if chain is not None else graph.staged_values()
     row_res = graph.row_resident_operands()
     con_specs = graph.contraction_operands
     ep_specs = graph.epilogue_operands
@@ -317,28 +364,45 @@ def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
         and reducing.op in _STATS_CLOSE
         and reducing.inputs[red_op.stats_input] in staged)
     stats_name = (reducing.inputs[red_op.stats_input] if use_stats else None)
+    # the chained recurrence streams the reducer's stats input (the masked
+    # score tile): max/sum update + rescale, never a materialized panel
+    chain_in = (reducing.inputs[red_op.stats_input]
+                if chain is not None else None)
     # counter-PRNG ops key their draw on global element coordinates; the
     # hardware generator (opt-in, real TPU only — interpret mode has no HW
     # PRNG) trades that schedule invariance for throughput
     has_offset_ops = any(EPILOGUE_OPS[nd.op].wants_offsets
                          for nd in graph.nodes)
     use_hw_bits = bool(hw_prng) and not interpret
+    # root accumulators consumed by the epilogue DAG: those roots must carry
+    # the full N width — only output-only roots may be narrow (their pad
+    # columns are never read, just stacked as zeros)
+    consumed_roots = {graph.resolve_acc(ref)
+                      for nd in graph.nodes for ref in nd.inputs}
     plan_cache: dict = {}  # (operand shapes/dtypes) -> pallas call
 
-    def build_call(m, k, n, x_dtype, odt):
+    def build_call(m, k, n, x_dtype, odt, rhs_widths, chain_n2):
         # every call here is one planned fused nest for a NEW operand shape —
         # the recompile point the fusion.lowerings counter tracks
         obs_metrics.default_registry().counter("fusion.lowerings").inc()
         with obs_trace.get_tracer().span(
                 "fusion.lower", cat="fusion", graph=graph.name,
                 m=m, k=k, n=n, spec=spec_string):
-            return _build_call(m, k, n, x_dtype, odt)
+            return _build_call(m, k, n, x_dtype, odt, rhs_widths, chain_n2)
 
-    def _build_call(m, k, n, x_dtype, odt):
+    def _build_call(m, k, n, x_dtype, odt, rhs_widths, chain_n2):
+        import math
+
         from repro.kernels.brgemm import pick_tiles
         bm, bk, bn = tiles or pick_tiles(m, k, n, x_dtype)
+        if rhs_widths and tiles is None:
+            # shrink the N tile so every narrow width is a whole number of
+            # tiles (gcd still divides n); explicitly passed tiles are the
+            # caller's contract and stay untouched — the check below rejects
+            bn = math.gcd(bn, *rhs_widths.values())
         loops, in_maps, out_map = build_nest_inputs(
-            graph, m, k, n, (bm, bk, bn), block_steps)
+            graph, m, k, n, (bm, bk, bn), block_steps,
+            rhs_widths=rhs_widths, chain_n2=chain_n2)
         tl = ThreadedLoop(loops, spec_string, reduction_letters=("a",))
         validate_reduction_innermost(tl.nest, ("b", "c"), ("a",))
         validate_epilogue_band(tl.nest, graph)
@@ -354,9 +418,21 @@ def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
         c_step = tl.nest.innermost_step("c")
         acc_m = tl.nest.innermost_step("b") * bm
         acc_n = c_step * bn
+        for nm, w in rhs_widths.items():
+            if w % acc_n:
+                raise FusionLegalityError(
+                    f"graph {graph.name!r}: narrow rhs operand {nm!r} width "
+                    f"{w} is not a whole number of N blocks (block {acc_n}) "
+                    "— pass tiles/block_steps whose N block divides every "
+                    "per-root width", code="TPP108")
         n_con = len(con_specs)
         n_ep = len(ep_specs)
         n_out = len(outputs)
+        # width of each base root's accumulator band (n unless its rhs is
+        # narrow); accumulation for tiles past the band is skipped, leaving
+        # the zero-initialized columns in place — the stacked output is
+        # therefore zero-padded, exactly like the XLA path
+        root_w = {r.name: rhs_widths.get(r.rhs, n) for r in base_roots}
 
         def body(ind, *refs):
             con_refs = refs[:n_con]
@@ -364,11 +440,17 @@ def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
                        for s, r in zip(ep_specs, refs[n_con:n_con + n_ep])}
             o_ref = refs[n_con + n_ep]
             scratch = refs[n_con + n_ep + 1:]
-            acc_refs = {r.name: scratch[i] for i, r in enumerate(roots)}
-            panel_refs = {nm: scratch[len(roots) + i]
-                          for i, nm in enumerate(staged)}
-            stats_ref = (scratch[len(roots) + len(staged)]
-                         if use_stats else None)
+            acc_refs = {r.name: scratch[i] for i, r in enumerate(base_roots)}
+            n_acc = len(base_roots)
+            if chain is not None:
+                chain_ref, cstats_ref = scratch[n_acc], scratch[n_acc + 1]
+                panel_refs, stats_ref = {}, None
+            else:
+                chain_ref = cstats_ref = None
+                panel_refs = {nm: scratch[n_acc + i]
+                              for i, nm in enumerate(staged)}
+                stats_ref = (scratch[n_acc + len(staged)]
+                             if use_stats else None)
             ik = ind["a"]
             jc = ind["c"]
             ib = ind["b"]
@@ -389,30 +471,56 @@ def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
                 def _():
                     stats_ref[...] = jnp.zeros_like(stats_ref)
 
+            if chain is not None:
+                # chain accumulator + (running max, running sum) strip live
+                # across EVERY N visit of a row — reset only at row start
+                @pl.when(jnp.logical_and(jc == 0, ik == 0))
+                def _():
+                    chain_ref[...] = tpp.zero(chain_ref.shape, chain_ref.dtype)
+                    cstats_ref[:, 0] = jnp.full((acc_m,), _NEG_INF,
+                                                jnp.float32)
+                    cstats_ref[:, 1] = jnp.zeros((acc_m,), jnp.float32)
+
             @pl.when(ik == 0)
             def _():
                 for acc_ref in acc_refs.values():
                     acc_ref[...] = tpp.zero(acc_ref.shape, acc_ref.dtype)
 
-            # one MXU issue per root; a shared lhs tile is read from its
-            # (single) VMEM ref once per root, fetched from HBM once.  A
+            # one MXU issue per base root; a shared lhs tile is read from
+            # its (single) VMEM ref once per root, fetched from HBM once.  A
             # trans operand's tile arrives in stored (transposed) layout —
             # the dot_general contracts over the matching dim instead of
-            # materializing a transpose.
-            for root in roots:
+            # materializing a transpose.  A narrow rhs (per-root N width,
+            # GQA) is wholly resident: slice the live N tile out of it and
+            # skip tiles past the width — those acc columns stay zero.
+            for root in base_roots:
                 lc = 0 if con_trans[root.lhs] else 1
                 rc = 1 if con_trans[root.rhs] else 0
-                acc_refs[root.name][...] += jax.lax.dot_general(
-                    con_refs[con_pos[root.lhs]][...],
-                    con_refs[con_pos[root.rhs]][...],
-                    dimension_numbers=(((lc,), (rc,)), ((), ())),
-                    preferred_element_type=jnp.float32,
-                )
+                a_ref = con_refs[con_pos[root.lhs]]
+                b_ref = con_refs[con_pos[root.rhs]]
+                if root_w[root.name] == n:
+                    acc_refs[root.name][...] += jax.lax.dot_general(
+                        a_ref[...], b_ref[...],
+                        dimension_numbers=(((lc,), (rc,)), ((), ())),
+                        preferred_element_type=jnp.float32,
+                    )
+                else:
+                    def _narrow_acc(root=root, a_ref=a_ref, b_ref=b_ref,
+                                    lc=lc, rc=rc):
+                        tile = (b_ref[pl.ds(jc * bn, acc_n), :]
+                                if con_trans[root.rhs]
+                                else b_ref[:, pl.ds(jc * bn, acc_n)])
+                        acc_refs[root.name][...] += jax.lax.dot_general(
+                            a_ref[...], tile,
+                            dimension_numbers=(((lc,), (rc,)), ((), ())),
+                            preferred_element_type=jnp.float32,
+                        )
+                    pl.when(jc * bn + acc_n <= root_w[root.name])(_narrow_acc)
 
             # last K visit: run the epilogue DAG on the VMEM-resident tiles
             @pl.when(ik == kb - k_step)
             def _():
-                env = {r.name: acc_refs[r.name][...] for r in roots}
+                env = {r.name: acc_refs[r.name][...] for r in base_roots}
                 if len(roots) == 1:
                     env["acc"] = env[roots[0].name]
 
@@ -445,6 +553,46 @@ def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
                             [env[o] for o in outputs]).astype(o_ref.dtype)
                     else:
                         o_ref[...] = env[outputs[0]].astype(o_ref.dtype)
+                    return
+
+                if chain is not None:
+                    # streaming online-softmax recurrence (the statistics
+                    # strip generalized from (sum, sum-sq) to (running max,
+                    # running sum)): when a new N tile raises a row's max,
+                    # both the running sum and the chain accumulator are
+                    # rescaled by exp(m_prev - m_new) — so at the final N
+                    # visit chain/l IS softmax(z) @ V without the (M, N)
+                    # panel ever existing.  Scores at/below _MASK_FLOOR are
+                    # masked-out fills: their exp contribution is pinned to
+                    # zero (a fully-masked tile must not contribute exp(0)
+                    # while the running max is still _NEG_INF).
+                    zt = env[chain_in]
+                    m_prev = cstats_ref[:, 0:1]
+                    l_prev = cstats_ref[:, 1:2]
+                    m_new = jnp.maximum(m_prev,
+                                        jnp.max(zt, axis=1, keepdims=True))
+                    alpha = jnp.exp(m_prev - m_new)
+                    p = jnp.where(zt > _MASK_FLOOR,
+                                  jnp.exp(zt - m_new), 0.0)
+                    cstats_ref[:, 0] = m_new[:, 0]
+                    cstats_ref[:, 1] = (l_prev * alpha
+                                        + jnp.sum(p, axis=1,
+                                                  keepdims=True))[:, 0]
+                    v_tile = con_refs[con_pos[chain.rhs]][...].astype(
+                        jnp.float32)
+                    chain_ref[...] = chain_ref[...] * alpha + \
+                        jax.lax.dot_general(
+                            p, v_tile,
+                            dimension_numbers=(((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+                    @pl.when(jc == nb - c_step)
+                    def _():
+                        # close: normalize by the running sum.  A fully
+                        # masked row has l == 0 → output 0 (the reference
+                        # kernels' convention), never a division by zero.
+                        l = jnp.maximum(cstats_ref[:, 1:2], 1e-30)
+                        o_ref[...] = (chain_ref[...] / l).astype(o_ref.dtype)
                     return
 
                 # row-panel statistics trick (kernels.fused_output,
@@ -494,8 +642,13 @@ def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
                         o_ref[...] = fullenv[outputs[0]].astype(o_ref.dtype)
 
         scratch_shapes = [pltpu.VMEM((acc_m, acc_n), jnp.float32)
-                          for _ in roots]
-        if reducing is not None:
+                          for _ in base_roots]
+        if chain is not None:
+            scratch_shapes += [
+                pltpu.VMEM((acc_m, chain_n2), jnp.float32),   # chain acc
+                pltpu.VMEM((acc_m, 2), jnp.float32),  # (run max, run sum)
+            ]
+        elif reducing is not None:
             scratch_shapes += [pltpu.VMEM((acc_m, n), jnp.float32)
                                for _ in staged]       # staged row panels
             if use_stats:
@@ -507,8 +660,15 @@ def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
             (m * n if s.kind in ("tile", "mask")
              else (1 if s.kind == "scalar" else n)) for s in ep_specs)
         con_elems = sum(
-            (m * k if s.kind == "lhs" else k * n) for s in con_specs)
-        out_shape = (n_out, m, n) if n_out > 1 else (m, n)
+            (m * k if s.kind == "lhs"
+             else n * chain_n2 if s.kind == "crhs"
+             else k * rhs_widths.get(s.name, n)) for s in con_specs)
+        if chain is not None:
+            out_shape = (m, chain_n2)
+            out_elems = m * chain_n2
+        else:
+            out_shape = (n_out, m, n) if n_out > 1 else (m, n)
+            out_elems = n_out * m * n
         return make_pallas_fn(
             plan,
             body,
@@ -518,10 +678,11 @@ def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
             mesh=mesh,
             vmem_limit_bytes=vmem_limit_bytes,
             cost_estimate=pl.CostEstimate(
-                flops=2 * m * n * k * len(roots) + int(
-                    graph.epilogue_flops_per_elem() * m * n),
+                flops=2 * m * n * k * len(base_roots)
+                + (2 * m * n * chain_n2 if chain is not None else 0)
+                + int(graph.epilogue_flops_per_elem() * m * n),
                 bytes_accessed=(con_elems + ep_elems) * db
-                + n_out * m * n * jnp.dtype(odt).itemsize,
+                + out_elems * jnp.dtype(odt).itemsize,
                 transcendentals=0,
             ),
         )
@@ -541,21 +702,46 @@ def _compile_pallas(graph: TppGraph, *, spec_string=DEFAULT_SPEC, tiles=None,
                         f"graph {graph.name!r}: lhs operand {spec.name!r} "
                         f"has shape {v.shape}, expected {want} — multi-root "
                         "graphs share one (M, K, N) problem shape")
-        n = next(v.shape[0] if spec.trans else v.shape[1]
-                 for spec, v in zip(con_specs, packed) if spec.kind == "rhs")
+        # per-root N widths: every rhs must share K; the nest's N is the
+        # WIDEST rhs, narrower ones (GQA K/V) become sliced-resident maps
+        widths = {}
         for spec, v in zip(con_specs, packed):
-            if spec.kind == "rhs":
-                want = (n, k) if spec.trans else (k, n)
-                if v.shape != want:
-                    raise FusionLegalityError(
-                        f"graph {graph.name!r}: rhs operand {spec.name!r} "
-                        f"has shape {v.shape}, expected {want} — multi-root "
-                        "graphs share one (M, K, N) problem shape")
+            if spec.kind != "rhs":
+                continue
+            kk, w = ((v.shape[1], v.shape[0]) if spec.trans else v.shape)
+            if kk != k:
+                raise FusionLegalityError(
+                    f"graph {graph.name!r}: rhs operand {spec.name!r} has "
+                    f"shape {v.shape}, expected K = {k} on its contraction "
+                    "dim — all roots share the (M, K) problem")
+            widths[spec.name] = w
+        n = max(widths.values())
+        rhs_widths = {nm: w for nm, w in widths.items() if w < n}
+        if rhs_widths:
+            bad = sorted(r.name for r in base_roots
+                         if r.rhs in rhs_widths and r.name in consumed_roots)
+            if bad:
+                raise FusionLegalityError(
+                    f"graph {graph.name!r}: rhs widths differ ({widths}) but "
+                    f"root(s) {bad} feed epilogue nodes — per-root N widths "
+                    "apply only to output-only roots (stacked, zero-padded); "
+                    "epilogue-combined roots share one (M, K, N) problem "
+                    "shape")
+        chain_n2 = None
+        if chain is not None:
+            cv = packed[con_pos[chain.rhs]]
+            if cv.ndim != 2 or cv.shape[0] != n:
+                raise FusionLegalityError(
+                    f"graph {graph.name!r}: crhs operand {chain.rhs!r} has "
+                    f"shape {getattr(cv, 'shape', None)}, expected (N, N2) "
+                    f"= ({n}, *) — the chain contracts over the base "
+                    "roots' N axis", code="TPP213")
+            chain_n2 = cv.shape[1]
         odt = out_dtype or x.dtype
         key = tuple((v.shape, jnp.dtype(v.dtype).name) for v in packed)
         call = plan_cache.get(key)
         if call is None:
-            call = build_call(m, k, n, x.dtype, odt)
+            call = build_call(m, k, n, x.dtype, odt, rhs_widths, chain_n2)
             plan_cache[key] = call
         return call(*packed)
 

@@ -1,19 +1,19 @@
-"""Flash attention Pallas kernels (prefill/train + single-token decode).
+"""Flash attention (prefill/train alias + single-token decode kernel).
 
-The paper fuses its Bert-Self-Attention tensor contractions with
-scale/add/softmax TPP blocks on small 2D tiles (§IV-A); the TPU-native form of
-that fusion is an online-softmax flash kernel: the S=QKᵀ tile never leaves
-VMEM, the softmax TPPs run on the tile, and the PV contraction accumulates in
-fp32 scratch.
+The prefill/train kernel is no longer bespoke: ``flash_attention_pallas`` is
+a thin alias over the *derived* chained-root attention TppGraph
+(``fusion.library.fused_attention_graph``) — online softmax lives in the
+fusion IR as the ``softmax_online`` reducer + chained contraction, so the
+attention kernel is autotuned, differentiated, linted, and profiled like
+every other graph.  The original hand-written kernel is kept as
+``_legacy_flash_attention_pallas`` purely as a benchmark / parity oracle
+(``benchmarks/bench_fusion.py`` races the derived graph against it).
 
-Features: GQA (kv-head sharing via index-map arithmetic), causal masking,
-sliding-window masking (gemma3's 5:1 local:global pattern), cross-attention
-(no mask).  Fully-masked KV blocks are skipped with ``pl.when`` — the same
-block-skip the paper gets from its Unpad optimization.
-
-Decode kernel: one query token against a KV cache, online softmax over KV
-blocks, per-batch valid-length masking.  (On real TPU one would pack ≥8 query
-rows per tile; the logic is identical and interpret-mode validated here.)
+Decode kernel (still bespoke — single-token decode is a gather-shaped
+problem, not a GEMM-shaped graph): one query token against a KV cache,
+online softmax over KV blocks, per-batch valid-length masking.  (On real TPU
+one would pack ≥8 query rows per tile; the logic is identical and
+interpret-mode validated here.)
 """
 from __future__ import annotations
 
@@ -45,7 +45,35 @@ def flash_attention_pallas(
     out_dtype=None,
     interpret: bool = False,
 ):
-    """q (B,H,Sq,D); k/v (B,Hk,Skv,D); H % Hk == 0; Sq == Skv for causal."""
+    """q (B,H,Sq,D); k/v (B,Hk,Skv,D); H % Hk == 0; Sq == Skv for causal.
+
+    Thin alias over the derived chained-root attention graph (see the module
+    docstring).  ``block_q``/``block_kv`` are accepted for signature
+    compatibility and ignored — the fusion autotuner owns the tiling now."""
+    del block_q, block_kv
+    from repro.fusion.library import fused_attention_apply
+    return fused_attention_apply(
+        q, k, v, causal=causal, window=window, scale=scale,
+        out_dtype=out_dtype, vjp=False,
+        backend="pallas_interpret" if interpret else "pallas")
+
+
+def _legacy_flash_attention_pallas(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    out_dtype=None,
+    interpret: bool = False,
+):
+    """The retired hand-written flash kernel — benchmark/parity oracle only.
+
+    q (B,H,Sq,D); k/v (B,Hk,Skv,D); H % Hk == 0; Sq == Skv for causal."""
     b, h, sq, d = q.shape
     _, hk, skv, _ = k.shape
     g = h // hk

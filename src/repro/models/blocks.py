@@ -252,7 +252,15 @@ def attention_apply(cfg: ModelConfig, p, x, *, kind: str = "attn",
         k, v = cache["k"], cache["v"]
         o = ops.attention(q, k, v, causal=False)
     else:
-        o = ops.attention(q, k, v, causal=causal, window=window)
+        if cfg.use_fusion:
+            # train/prefill attention through the chained-root TppGraph —
+            # flash attention *derived* (online softmax as the IR-level
+            # softmax_online reducer), with the six-graph recompute backward
+            # of fusion.autodiff under jax.grad
+            from repro.fusion import fused_attention_apply
+            o = fused_attention_apply(q, k, v, causal=causal, window=window)
+        else:
+            o = ops.attention(q, k, v, causal=causal, window=window)
         if kind == "cross":
             new_cache = {"k": k, "v": v}
 

@@ -1,0 +1,305 @@
+"""Chained-root attention: parity of the derived ``fused_attention`` graph
+against ``ops.attention`` (fp32 + bf16, causal / sliding-window / plain, xla
++ pallas_interpret), ``jax.grad`` of the fused path against the XLA
+reference, GQA per-root-width ``fused_qkv_apply`` parity, the TPP212/213/214
+diagnostic pins, and the tuner→verifier round-trip of the chained graph —
+forward AND derived backward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import fusion
+from repro.fusion.graph import ContractionRoot, Node, OperandSpec, TppGraph
+from repro.kernels import ops as kops
+
+RNG = np.random.default_rng(11)
+
+BACKENDS = ("xla", "pallas_interpret")
+VARIANTS = {             # (causal, window)
+    "causal": (True, None),
+    "window": (True, 32),
+    "plain": (False, None),
+}
+
+
+def _qkv(b=1, h=2, hk=1, s=96, d=32, dtype=jnp.float32):
+    mk = lambda hh: jnp.asarray(
+        RNG.normal(size=(b, hh, s, d)).astype(np.float32), dtype)
+    return mk(h), mk(hk), mk(hk)
+
+
+def _tol(dtype):
+    return 2e-5 if dtype == jnp.float32 else 3e-2
+
+
+# ---------------------------------------------------------------------------
+# Forward parity vs ops.attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["fp32", "bf16"])
+@pytest.mark.parametrize("variant", sorted(VARIANTS))
+def test_attention_parity(variant, dtype, backend):
+    causal, window = VARIANTS[variant]
+    q, k, v = _qkv(dtype=dtype)
+    got = fusion.fused_attention_apply(
+        q, k, v, causal=causal, window=window, backend=backend, vjp=False)
+    want = kops.attention(q, k, v, causal=causal, window=window,
+                          backend="xla")
+    assert got.shape == q.shape and got.dtype == q.dtype
+    err = float(np.max(np.abs(np.asarray(got, np.float32)
+                              - np.asarray(want, np.float32))))
+    assert err < _tol(dtype), (variant, dtype, backend, err)
+
+
+def test_attention_gqa_broadcast():
+    # H=4 query heads sharing Hk=2 kv heads, both backends
+    q, k, v = _qkv(b=2, h=4, hk=2, s=64, d=16)
+    want = kops.attention(q, k, v, causal=True, backend="xla")
+    for backend in BACKENDS:
+        got = fusion.fused_attention_apply(q, k, v, causal=True,
+                                           backend=backend, vjp=False)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=2e-5)
+
+
+def test_flash_attention_alias_routes_through_graph():
+    from repro.kernels.flash_attention import flash_attention_pallas
+    q, k, v = _qkv()
+    got = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+    want = kops.attention(q, k, v, causal=True, backend="xla")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Backward: jax.grad of the fused path vs the XLA reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("variant", ["causal", "window"])
+def test_attention_grad_parity(variant, backend):
+    causal, window = VARIANTS[variant]
+    q, k, v = _qkv(s=64, d=16)
+    probe = jnp.asarray(RNG.normal(size=q.shape).astype(np.float32))
+
+    def fused_loss(q_, k_, v_):
+        o = fusion.fused_attention_apply(q_, k_, v_, causal=causal,
+                                         window=window, backend=backend)
+        return jnp.sum(o.astype(jnp.float32) * probe)
+
+    def ref_loss(q_, k_, v_):
+        o = kops.attention(q_, k_, v_, causal=causal, window=window,
+                           backend="xla")
+        return jnp.sum(o.astype(jnp.float32) * probe)
+
+    got = jax.grad(fused_loss, argnums=(0, 1, 2))(q, k, v)
+    want = jax.grad(ref_loss, argnums=(0, 1, 2))(q, k, v)
+    for g, w, nm in zip(got, want, "qkv"):
+        assert g.shape == w.shape, nm
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-4, atol=1e-4, err_msg=nm)
+
+
+# ---------------------------------------------------------------------------
+# GQA fused QKV projection at per-root widths (satellite: no MHA padding)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["fp32", "bf16"])
+def test_fused_qkv_gqa_parity(dtype, backend):
+    m, kdim, nq, nkv = 32, 64, 128, 32   # 4 query heads per kv head
+    x = jnp.asarray(RNG.normal(size=(m, kdim)).astype(np.float32), dtype)
+    wq = jnp.asarray(RNG.normal(size=(kdim, nq)).astype(np.float32), dtype)
+    wk = jnp.asarray(RNG.normal(size=(kdim, nkv)).astype(np.float32), dtype)
+    wv = jnp.asarray(RNG.normal(size=(kdim, nkv)).astype(np.float32), dtype)
+    qo, ko, vo = fusion.fused_qkv_apply(x, wq, wk, wv, backend=backend,
+                                        vjp=False)
+    assert qo.shape == (m, nq) and ko.shape == (m, nkv) \
+        and vo.shape == (m, nkv)
+    xf = x.astype(jnp.float32)
+    tol = _tol(dtype)
+    for got, w in ((qo, wq), (ko, wk), (vo, wv)):
+        want = xf @ w.astype(jnp.float32)
+        err = float(np.max(np.abs(np.asarray(got, np.float32)
+                                  - np.asarray(want))))
+        assert err < tol * max(1.0, float(np.max(np.abs(np.asarray(want))))), \
+            (dtype, backend, err)
+
+
+def test_fused_qkv_width_validation_tpp214():
+    x = jnp.zeros((8, 16))
+    w = lambda n: jnp.zeros((16, n))
+    # k/v widths disagree
+    with pytest.raises(fusion.FusionLegalityError) as ei:
+        fusion.fused_qkv_apply(x, w(32), w(16), w(8))
+    assert ei.value.code == "TPP214"
+    # q width not a multiple of the kv width
+    with pytest.raises(fusion.FusionLegalityError) as ei:
+        fusion.fused_qkv_apply(x, w(24), w(16), w(16))
+    assert ei.value.code == "TPP214"
+    # mismatched input (K) width
+    with pytest.raises(fusion.FusionLegalityError) as ei:
+        fusion.fused_qkv_apply(x, w(32), jnp.zeros((8, 32)), w(32))
+    assert ei.value.code == "TPP214"
+    # non-2D weight
+    with pytest.raises(fusion.FusionLegalityError) as ei:
+        fusion.fused_qkv_apply(x, jnp.zeros((16,)), w(16), w(16))
+    assert ei.value.code == "TPP214"
+
+
+# ---------------------------------------------------------------------------
+# Chained-graph structural diagnostics (TPP212 / TPP213 mutation pins)
+# ---------------------------------------------------------------------------
+
+def _chain_parts():
+    operands = (OperandSpec("q", "lhs"), OperandSpec("k", "rhs", trans=True),
+                OperandSpec("v", "crhs"))
+    nodes = (Node("n0", "scale", ("s",), (("s", 0.5),)),
+             Node("n1", "softmax_online", ("n0",)))
+    return operands, nodes
+
+
+def _graph(operands, roots, nodes, outputs):
+    return TppGraph(name="bad_chain", operands=operands, roots=roots,
+                    nodes=nodes, outputs=outputs)
+
+
+def test_chain_requires_base_root_tpp212():
+    operands, nodes = _chain_parts()
+    with pytest.raises(fusion.FusionLegalityError) as ei:
+        _graph((operands[0], operands[2]),
+               (ContractionRoot("o", "n1", "v", chained=True),),
+               nodes, ("o",))
+    assert ei.value.code == "TPP212"
+
+
+def test_chain_must_be_declared_last_tpp212():
+    operands, nodes = _chain_parts()
+    with pytest.raises(fusion.FusionLegalityError) as ei:
+        _graph(operands,
+               (ContractionRoot("o", "n1", "v", chained=True),
+                ContractionRoot("s", "q", "k")),
+               nodes, ("o",))
+    assert ei.value.code == "TPP212"
+
+
+def test_chain_lhs_must_be_online_reducer_tpp212():
+    operands, _ = _chain_parts()
+    nodes = (Node("n0", "scale", ("s",), (("s", 0.5),)),)
+    with pytest.raises(fusion.FusionLegalityError) as ei:
+        _graph(operands,
+               (ContractionRoot("s", "q", "k"),
+                ContractionRoot("o", "n0", "v", chained=True)),
+               nodes, ("o",))
+    assert ei.value.code == "TPP212"
+
+
+def test_chain_forbids_post_reduce_nodes_tpp212():
+    operands, nodes = _chain_parts()
+    nodes = nodes + (Node("n2", "scale", ("n1",), (("s", 2.0),)),)
+    with pytest.raises(fusion.FusionLegalityError) as ei:
+        _graph(operands,
+               (ContractionRoot("s", "q", "k"),
+                ContractionRoot("o", "n1", "v", chained=True)),
+               nodes, ("o",))
+    assert ei.value.code == "TPP212"
+
+
+def test_chain_output_must_be_chain_root_tpp212():
+    operands, nodes = _chain_parts()
+    with pytest.raises(fusion.FusionLegalityError) as ei:
+        _graph(operands,
+               (ContractionRoot("s", "q", "k"),
+                ContractionRoot("o", "n1", "v", chained=True)),
+               nodes, ("s", "o"))
+    assert ei.value.code == "TPP212"
+
+
+def test_chain_rhs_must_be_crhs_tpp213():
+    # the chained rhs declared as a plain rhs operand → TPP213
+    operands = (OperandSpec("q", "lhs"), OperandSpec("k", "rhs", trans=True),
+                OperandSpec("v", "rhs"))
+    _, nodes = _chain_parts()
+    with pytest.raises(fusion.FusionLegalityError) as ei:
+        _graph(operands,
+               (ContractionRoot("s", "q", "k"),
+                ContractionRoot("o", "n1", "v", chained=True)),
+               nodes, ("o",))
+    assert ei.value.code == "TPP213"
+
+
+def test_unconsumed_crhs_tpp213():
+    operands, _ = _chain_parts()
+    with pytest.raises(fusion.FusionLegalityError) as ei:
+        _graph(operands, (ContractionRoot("s", "q", "k"),),
+               (Node("n0", "scale", ("s",), (("s", 0.5),)),), ("n0",))
+    assert ei.value.code == "TPP213"
+
+
+# ---------------------------------------------------------------------------
+# Tuner → static verifier round-trip (forward and backward)
+# ---------------------------------------------------------------------------
+
+def _verify_all_schedules(graph, m, k, n):
+    from repro.analysis import footprint
+    from repro.core.loops import ThreadedLoop
+    from repro.fusion import cost, lowering
+    results = cost.autotune_graph(graph, m, k, n, tiles=(16, 16, 32),
+                                  max_candidates=64, top_k=16,
+                                  use_cache=False)
+    assert results, f"{graph.name}: tuner found no legal schedule"
+    sg = lowering.simplify_graph(graph)
+    for r in results:
+        kw = cost.schedule_kwargs(r.candidate)
+        loops, _im, _om = lowering.build_nest_inputs(
+            sg, m, k, n, (16, 16, 32), kw["block_steps"])
+        tl = ThreadedLoop(loops, kw["spec_string"], reduction_letters=("a",))
+        diags = footprint.verify_schedule(tl.nest, sg)
+        assert diags == [], (graph.name, kw["spec_string"],
+                             [d.render() for d in diags])
+    return len(results)
+
+
+@pytest.mark.parametrize("variant", ["causal", "window"])
+def test_every_tuned_attention_schedule_verifies(variant):
+    causal, window = VARIANTS[variant]
+    g = fusion.fused_attention_graph(causal=causal, window=window or 0,
+                                     scale=0.125)
+    s, d = 64, 32
+    assert _verify_all_schedules(g, s, d, s) > 0
+
+
+def test_every_tuned_attention_backward_schedule_verifies():
+    from repro.analysis import graphlint
+    g = fusion.fused_attention_graph(causal=True, scale=0.125)
+    plan = fusion.derive_vjp(g)
+    assert isinstance(plan, fusion.ChainedBackwardPlan)
+    s, d = 64, 32
+    bgraphs = plan.fused_graphs()
+    assert set(bgraphs) >= {"p", "dp", "dz", "dq", "dk", "dv"} \
+        or len(bgraphs) >= 6
+    for name, bg in bgraphs.items():
+        assert graphlint.lint_graph(bg) == [], name
+        bm, bk, bn = plan.problem_shape(name, s, d, s)
+        _verify_all_schedules(bg, bm, bk, bn)
+
+
+def test_attention_tune_cache_roundtrip(tmp_path):
+    # same graph+shape hits the cache; the chained "~chain" marker keys the
+    # chained graph apart from a plain two-root graph of the same roots
+    from repro.fusion import cost
+    g = fusion.fused_attention_graph(causal=True, scale=0.125)
+    sig = fusion.graph_signature(g)
+    assert "~chain" in sig
+    r1 = cost.autotune_graph(g, 64, 32, 64, tiles=(16, 16, 32),
+                             max_candidates=16, top_k=2,
+                             cache_dir=str(tmp_path))
+    r2 = cost.autotune_graph(g, 64, 32, 64, tiles=(16, 16, 32),
+                             max_candidates=16, top_k=2,
+                             cache_dir=str(tmp_path))
+    assert [r.candidate.spec_string for r in r1] == \
+        [r.candidate.spec_string for r in r2]
